@@ -1,0 +1,23 @@
+"""Paper Table I: CRONet per-layer params / MACs characterization."""
+from repro.common import param_count
+from repro.configs.cronet import SIZES
+from repro.core import cronet
+
+PAPER_TOTAL_MACS = {"small": 27.6e6, "medium": 53.5e6, "large": 105.8e6}
+PAPER_PARAMS = 419_000
+
+
+def run(fast: bool = True):
+    rows = []
+    for size, cfg in SIZES.items():
+        macs = cronet.count_macs(cfg)
+        n = param_count(cronet.param_specs(cfg))
+        rows.append((f"table1/params/{size}", 0.0,
+                     f"{n} (paper ~{PAPER_PARAMS}, ratio {n/PAPER_PARAMS:.3f})"))
+        rows.append((f"table1/macs/{size}", 0.0,
+                     f"{macs['total']/1e6:.1f}M (paper {PAPER_TOTAL_MACS[size]/1e6:.1f}M, "
+                     f"ratio {macs['total']/PAPER_TOTAL_MACS[size]:.3f})"))
+        for k, v in macs.items():
+            if k != "total":
+                rows.append((f"table1/macs/{size}/{k}", 0.0, f"{v/1e3:.1f}K"))
+    return rows

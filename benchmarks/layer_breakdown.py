@@ -1,0 +1,73 @@
+"""Paper Fig 7: layer-wise execution share of CRONet + the LUT-vs-exact
+SiLU comparison (the paper's AIE LUT trick measured on TPU-idiom kernels).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import materialize
+from repro.configs.cronet import get_cronet_config
+from repro.core import cronet
+from repro.kernels import conv as kconv
+from repro.kernels import gemm as kgemm
+from repro.kernels import pool as kpool
+from repro.kernels import silu as ksilu
+
+PAPER_SHARES = {"branch/conv2d": 55.3, "trunk/aap3d": 18.1}
+
+
+def _time(fn, reps=3):
+    fn()
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(fast: bool = True):
+    cfg = get_cronet_config("small" if fast else "medium")
+    params = materialize(cronet.param_specs(cfg), jax.random.key(0))
+    tr, br = params["trunk"], params["branch"]
+    T = cfg.hist_len
+    lv = jnp.ones((1, 4, cfg.nely + 1, cfg.nelx + 1, 1), jnp.bfloat16)
+    hist = jnp.ones((T, cfg.nely, cfg.nelx, 1), jnp.bfloat16)
+
+    t1 = kconv.conv3d(lv, tr["conv1"], depth_padding="causal_same",
+                      fuse_silu=True)
+    t2 = kconv.conv3d(t1, tr["conv2"], fuse_silu=True)
+    b1 = kconv.conv2d(hist, br["conv1"], fuse_silu=True)
+    b2 = kconv.conv2d(b1, br["conv2"], fuse_silu=True)
+    mp = kpool.maxpool2d(b2)
+    tfeat = kpool.adaptive_avg_pool3d(t2, cfg.t_pool).reshape(1, -1)
+
+    layers = {
+        "trunk/conv3d1": lambda: kconv.conv3d(lv, tr["conv1"],
+                                              depth_padding="causal_same",
+                                              fuse_silu=True),
+        "trunk/conv3d2": lambda: kconv.conv3d(t1, tr["conv2"], fuse_silu=True),
+        "trunk/aap3d": lambda: kpool.adaptive_avg_pool3d(t2, cfg.t_pool),
+        "trunk/linear": lambda: kgemm.gemm(tfeat, tr["fc1"], activation="silu"),
+        "branch/conv2d": lambda: kconv.conv2d(hist, br["conv1"], fuse_silu=True),
+        "branch/conv2d2": lambda: kconv.conv2d(b1, br["conv2"], fuse_silu=True),
+        "branch/maxpool": lambda: kpool.maxpool2d(b2),
+        "branch/aap2d": lambda: kpool.adaptive_avg_pool2d(mp, cfg.b_pool),
+    }
+    times = {k: _time(fn) for k, fn in layers.items()}
+    total = sum(times.values())
+    rows = []
+    for k, us in times.items():
+        share = 100 * us / total
+        paper = PAPER_SHARES.get(k.replace("conv2d2", "conv2d"), None)
+        rows.append((f"fig7/{k}", round(us, 1),
+                     f"share={share:.1f}%"
+                     + (f" (paper {paper}%)" if paper else "")))
+
+    # LUT vs exact SiLU (hardware-adaptation check, DESIGN.md §2)
+    x = jax.random.normal(jax.random.key(3), (1 << 14,), jnp.float32)
+    us_lut = _time(lambda: ksilu.silu_lut(x))
+    us_exact = _time(lambda: ksilu.silu_exact(x))
+    rows.append(("fig7/silu_lut", round(us_lut, 1),
+                 f"exact={us_exact:.1f}us -> LUT pays on AIE, "
+                 f"{'not ' if us_lut >= us_exact else ''}on TPU-idiom CPU run"))
+    return rows

@@ -1,0 +1,51 @@
+"""Paper Table III: inference precision vs hybrid NN-FEA solution accuracy.
+
+Trains CRONet once (cached under experiments/cache/) and runs the
+100-iteration (or reduced) hybrid loop at fp32/bf16/int8.
+"""
+import os
+import pickle
+
+from repro.configs.cronet import get_cronet_config
+from repro.fea import hybrid, train_cronet
+
+CACHE = "experiments/cache"
+
+PAPER = {"fp32": (33, 100.0), "bf16": (33, 100.0), "int8": (30, 90.91)}
+
+
+def _trained(size: str, iters: int, steps: int):
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, f"cronet_{size}_{iters}_{steps}.pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    data = train_cronet.build_dataset(get_cronet_config(size), n_iter=iters)
+    params, u_scale, losses, ref = train_cronet.train(
+        get_cronet_config(size), steps=steps, data=data, verbose=False)
+    blob = {"params": params, "u_scale": u_scale, "ref": ref,
+            "final_mse": losses[-1]}
+    with open(path, "wb") as f:
+        pickle.dump(blob, f)
+    return blob
+
+
+def run(fast: bool = True):
+    size = "small" if fast else "medium"
+    iters = 40 if fast else 100
+    steps = 300 if fast else 800
+    cfg = get_cronet_config(size)
+    blob = _trained(size, iters, steps)
+    rows = [(f"table3/train_mse/{size}", 0.0, f"{blob['final_mse']:.6f}")]
+    for prec in ["fp32", "bf16", "int8"]:
+        res = hybrid.run_hybrid(cfg, blob["params"], blob["u_scale"],
+                                n_iter=iters, reference=blob["ref"],
+                                precision=prec, error_threshold=0.03,
+                                verify_every=2)
+        pinv, pacc = PAPER[prec]
+        rows.append((
+            f"table3/{prec}", 0.0,
+            f"cronet={res.cronet_invocations}/{iters} "
+            f"acc={res.solution_accuracy:.2f}% design={res.design_match:.2f}% "
+            f"(paper@medium: {pinv}/100 acc={pacc}%)"))
+    return rows

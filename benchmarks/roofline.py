@@ -1,0 +1,40 @@
+"""Roofline table: reads experiments/dryrun/*.json produced by
+repro.launch.dryrun_all and reports the three terms per (arch x shape x
+mesh). This is the data source for EXPERIMENTS.md §Roofline."""
+import glob
+import json
+import os
+
+
+def load_cells(outdir="experiments/dryrun"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(outdir, "*", "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        d["_mesh_dir"] = os.path.basename(os.path.dirname(path))
+        d["_file"] = os.path.basename(path)
+        cells.append(d)
+    return cells
+
+
+def run(fast: bool = True):
+    rows = []
+    cells = load_cells()
+    if not cells:
+        return [("roofline/missing", 0.0,
+                 "run: PYTHONPATH=src python -m repro.launch.dryrun_all")]
+    for d in cells:
+        tag = f"{d['_mesh_dir']}/{d.get('arch', d['_file'])}/{d.get('shape','?')}"
+        if d.get("skipped"):
+            rows.append((f"roofline/{tag}", 0.0, f"SKIP: {d['reason']}"))
+            continue
+        r = d["roofline"]
+        mk = r.get("memory_s_kernels", r["memory_s"])
+        rows.append((
+            f"roofline/{tag}",
+            round(r["step_time_lower_bound_s"] * 1e6, 1),
+            f"compute={r['compute_s']:.3f}s memory={r['memory_s']:.3f}s "
+            f"(kernels {mk:.3f}s) collective={r['collective_s']:.3f}s "
+            f"dominant={r['dominant']} "
+            f"useful={d.get('useful_flops_ratio') and round(d['useful_flops_ratio'],3)}"))
+    return rows

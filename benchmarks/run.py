@@ -1,0 +1,47 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only name]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (slow on CPU)")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (characterization, layer_breakdown, placement,
+                            precision, roofline, scaling)
+
+    suites = {
+        "characterization": characterization,   # Table I
+        "precision": precision,                 # Table III
+        "scaling": scaling,                     # Table V / Fig 6
+        "layer_breakdown": layer_breakdown,     # Fig 7
+        "placement": placement,                 # Table VI
+        "roofline": roofline,                   # EXPERIMENTS.md §Roofline
+    }
+    print("name,us_per_call,derived")
+    for name, mod in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            rows = mod.run(fast=not args.full)
+        except Exception as e:  # keep the driver alive per-suite
+            print(f"{name}/ERROR,0,{type(e).__name__}: {str(e)[:160]}")
+            continue
+        for rname, us, derived in rows:
+            print(f'{rname},{us},"{derived}"')
+        print(f"{name}/_wall_s,{(time.time()-t0)*1e6:.0f},suite wall time",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Paper Table V / Fig 6: CRONet inference across material sizes and
+fusion paths.
+
+CPU wall-times are interpret-mode RELATIVE numbers (this container has no
+TPU); the absolute TPU-side latency claim is the roofline estimate derived
+from the same MAC/byte counts the paper reports in Table I.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import materialize
+from repro.configs.cronet import SIZES
+from repro.core import cronet, fusion
+
+PAPER_LATENCY_MS = {"small": 0.45, "medium": 0.52, "large": 0.82}
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _roofline_ms(cfg):
+    macs = cronet.count_macs(cfg)["total"]
+    # bytes: weights once (persistent on-chip: paper's contract) + in/out
+    w_bytes = 419760 * 2
+    io_bytes = (4 * (cfg.nely + 1) * (cfg.nelx + 1)
+                + cfg.hist_len * cfg.nely * cfg.nelx + cfg.p) * 2
+    compute = 2 * macs / PEAK_FLOPS
+    memory = (w_bytes + io_bytes) / HBM_BW
+    return max(compute, memory) * 1e3
+
+
+def run(fast: bool = True):
+    rows = []
+    sizes = ["small", "medium"] if fast else list(SIZES)
+    for size in sizes:
+        cfg = SIZES[size]
+        params = materialize(cronet.param_specs(cfg), jax.random.key(0))
+        lv = (jax.random.normal(jax.random.key(1),
+                                (4, cfg.nely + 1, cfg.nelx + 1, 1)) * 0.3
+              ).astype(jnp.bfloat16)
+        hist = jax.random.uniform(
+            jax.random.key(2), (cfg.hist_len, cfg.nely, cfg.nelx, 1)
+        ).astype(jnp.bfloat16)
+        for fc, label in [
+            (fusion.FusionConfig(False, False, False), "unfused"),
+            (fusion.FusionConfig(True, False, False), "l1"),
+            (fusion.FusionConfig(True, True, True), "fused_onchip"),
+        ]:
+            fusion.infer(cfg, params, lv, hist, fc)       # warm
+            t0 = time.time()
+            reps = 3
+            for _ in range(reps):
+                jax.block_until_ready(fusion.infer(cfg, params, lv, hist, fc))
+            us = (time.time() - t0) / reps * 1e6
+            rows.append((f"table5/cpu_interpret/{size}/{label}", round(us, 1),
+                         "relative-only (interpret mode)"))
+        rows.append((
+            f"table5/tpu_roofline_est/{size}", _roofline_ms(cfg) * 1e3,
+            f"roofline-lower-bound; paper measured {PAPER_LATENCY_MS[size]}ms "
+            f"on VEK280"))
+    return rows

@@ -1,0 +1,64 @@
+"""Quickstart: CRONet inference through the three fusion paths.
+
+    PYTHONPATH=src python examples/quickstart.py [--size small|medium|large]
+
+Shows the paper's execution modes side by side: unfused baseline, L1-fused
+per-op kernels, and the fully on-chip megakernel (L1+L2+L3), verifying
+they agree and timing them on CPU (interpret mode — relative numbers only;
+the TPU claim lives in the dry-run roofline).
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import materialize
+from repro.configs.cronet import get_cronet_config
+from repro.core import cronet, fusion
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", default="small",
+                    choices=["small", "medium", "large"])
+    args = ap.parse_args()
+
+    cfg = get_cronet_config(args.size)
+    print(f"CRONet {args.size}: {cfg.nelx}x{cfg.nely} material distribution, "
+          f"{cfg.param_count():,} params (paper: 419K)")
+    params = materialize(cronet.param_specs(cfg), jax.random.key(0))
+    lv = jax.random.normal(jax.random.key(1),
+                           (4, cfg.nely + 1, cfg.nelx + 1, 1)) * 0.3
+    hist = jax.random.uniform(jax.random.key(2),
+                              (cfg.hist_len, cfg.nely, cfg.nelx, 1))
+    lv, hist = lv.astype(jnp.bfloat16), hist.astype(jnp.bfloat16)
+
+    ref = cronet.forward(cfg, params, lv[None], hist[None])[0]
+    print(f"reference output: shape={ref.shape} "
+          f"|u|max={float(jnp.max(jnp.abs(ref.astype(jnp.float32)))):.4f}")
+
+    for fc, label in [
+        (fusion.FusionConfig(False, False, False), "unfused (DRAM-per-layer baseline)"),
+        (fusion.FusionConfig(True, False, False), "L1 fusion (act fused into kernels)"),
+        (fusion.FusionConfig(True, True, True), "L1+L2+L3 (fully on-chip megakernel)"),
+    ]:
+        t0 = time.time()
+        out = fusion.infer(cfg, params, lv, hist, fc)
+        t1 = time.time()
+        out2 = fusion.infer(cfg, params, lv, hist, fc)   # warm call
+        t2 = time.time()
+        err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                    - ref.astype(jnp.float32))))
+        print(f"{label:44s} warm={1e3*(t2-t1):8.1f}ms  "
+              f"max|err vs ref|={err:.4f}")
+
+    u = cronet.decode_displacement(cfg, ref[None].astype(jnp.float32))
+    print(f"decoded displacement field: {u.shape} (nodal grid x [ux, uy])")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Generate the EXPERIMENTS.md roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src python experiments/make_report.py
+prints markdown tables for baseline + optimized sweeps.
+"""
+import glob
+import json
+import os
+import sys
+
+
+def load(dirname):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(dirname, "*", "*.json"))):
+        d = json.load(open(path))
+        mesh = os.path.basename(os.path.dirname(path))
+        key = (mesh, os.path.basename(path).replace(".json", ""))
+        cells[key] = d
+    return cells
+
+
+def fmt(v, nd=2):
+    if v is None:
+        return "-"
+    if v >= 1000:
+        return f"{v:.0f}"
+    return f"{v:.{nd}f}"
+
+
+def table(cells, mesh, title):
+    rows = [f"\n### {title}\n",
+            "| arch | shape | compute s | memory s | memory s (kernels) | "
+            "collective s | dominant | useful | MFU@floor |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for (m, name), d in sorted(cells.items()):
+        if m != mesh:
+            continue
+        arch, shape = name.split("__")
+        if d.get("skipped"):
+            rows.append(f"| {arch} | {shape} | — | — | — | — | SKIP | — | — |")
+            continue
+        r = d["roofline"]
+        mk = r.get("memory_s_kernels")
+        floor = r.get("step_time_lower_bound_kernels_s",
+                      r["step_time_lower_bound_s"])
+        mfu = ""
+        if floor and d.get("model_flops_per_device"):
+            mfu = f"{100 * d['model_flops_per_device'] / (floor * 197e12):.1f}%"
+        rows.append(
+            f"| {arch} | {shape} | {fmt(r['compute_s'])} | {fmt(r['memory_s'])} "
+            f"| {fmt(mk)} | {fmt(r['collective_s'])} | {r['dominant']} | "
+            f"{fmt(d.get('useful_flops_ratio'), 3)} | {mfu} |")
+    return "\n".join(rows)
+
+
+def main():
+    base = load("experiments/dryrun_baseline")
+    opt = load("experiments/dryrun")
+    out = []
+    if base:
+        out.append(table(base, "single", "Baseline (paper-faithful defaults), 16x16 single pod"))
+    if opt:
+        out.append(table(opt, "single", "Optimized (placement pass + P/X/M iterations), 16x16 single pod"))
+        out.append(table(opt, "multi", "Optimized, 2x16x16 multi-pod (512 chips)"))
+    compile_rows = ["\n### Compile evidence (optimized sweep)\n",
+                    "| mesh | arch | shape | lower s | compile s | arg GB/dev | temp GB/dev |",
+                    "|---|---|---|---|---|---|---|"]
+    for (m, name), d in sorted(opt.items()):
+        if d.get("skipped"):
+            continue
+        arch, shape = name.split("__")
+        ma = d["memory_analysis"]
+        compile_rows.append(
+            f"| {m} | {arch} | {shape} | {d['lower_s']} | {d['compile_s']} | "
+            f"{(ma['argument_bytes'] or 0)/1e9:.2f} | "
+            f"{(ma['temp_bytes'] or 0)/1e9:.2f} |")
+    out.append("\n".join(compile_rows))
+    print("\n\n".join(out))
+
+
+if __name__ == "__main__":
+    main()

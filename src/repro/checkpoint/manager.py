@@ -1,0 +1,147 @@
+"""Fault-tolerant checkpointing: atomic writes, manifest + content hashes,
+elastic resharding on restore (a checkpoint saved on one mesh loads on any
+other mesh shape), data-pipeline state included.
+
+Layout:
+  <dir>/step_<N>.tmp/...      (write)
+  <dir>/step_<N>/manifest.json, arrays.npz, extras.json   (after rename)
+  <dir>/LATEST                (atomic pointer file)
+
+Arrays are saved as host numpy (gathered); restore re-shards via
+jax.device_put with the *current* mesh's shardings — this is what makes
+elastic scaling work: nothing about the saving mesh is baked in.
+For 1000+node scale the same layout extends to per-host shard files; this
+implementation gathers because the container is single-host (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro import common
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extras: Optional[Dict] = None):
+    """Atomic checkpoint save. tree: pytree of arrays; extras: json-able."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    named = _flatten_with_paths(tree)
+
+    def to_np(v):
+        a = np.asarray(jax.device_get(v))
+        if a.dtype.kind not in "biufc":      # ml_dtypes (bf16 etc): upcast
+            a = np.asarray(jax.device_get(jax.numpy.asarray(v).astype("float32")))
+        return a
+
+    arrays = {k: to_np(v) for k, v in named.items()}
+    npz_path = os.path.join(tmp, "arrays.npz")
+    np.savez(npz_path, **arrays)
+
+    digest = {}
+    for k, v in arrays.items():
+        digest[k] = hashlib.sha256(v.tobytes()).hexdigest()[:16]
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        "hashes": digest,
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "extras.json"), "w") as f:
+        json.dump(extras or {}, f)
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                     # atomic on same filesystem
+    latest_tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(ckpt_dir, name)):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
+            shardings: Any = None):
+    """Restore into the structure of `like` (pytree of arrays or
+    ShapeDtypeStructs). If `shardings` (same-structure tree of
+    NamedSharding) is given, leaves are device_put with them — the elastic
+    resharding path. Returns (tree, extras). Verifies content hashes."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(final, "arrays.npz"))
+
+    for k in manifest["keys"]:
+        h = hashlib.sha256(data[k].tobytes()).hexdigest()[:16]
+        if h != manifest["hashes"][k]:
+            raise IOError(f"checkpoint corruption detected in {k}")
+
+    named_like = _flatten_with_paths(like)
+    named_shard = _flatten_with_paths(shardings) if shardings is not None else {}
+    missing = set(named_like) - set(manifest["keys"])
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    flat = jax.tree_util.tree_flatten_with_path(like)[0]
+    out_leaves = []
+    for (path, leaf) in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = data[key]
+        want_dtype = leaf.dtype
+        val = jax.numpy.asarray(arr)
+        if val.dtype != want_dtype:
+            val = val.astype(want_dtype)     # jnp handles bf16 casts
+        if key in named_shard and named_shard[key] is not None:
+            val = jax.device_put(val, named_shard[key])
+        out_leaves.append(val)
+    with open(os.path.join(final, "extras.json")) as f:
+        extras = json.load(f)
+    return jax.tree_util.tree_unflatten(treedef, out_leaves), extras
+
+
+def prune_old(ckpt_dir: str, keep: int = 3):
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)

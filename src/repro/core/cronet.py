@@ -1,0 +1,198 @@
+"""CRONet reference model in pure JAX (the oracle; kernels/ provide the
+fused on-chip execution path).
+
+Architecture (reconstructed exactly from paper Table I — see
+configs/cronet.py for the factorization proof):
+
+  TrunkNet(F):  Conv3D(2,3,3) 1->16 +SiLU -> Conv3D(1,3,3) 16->64 +SiLU
+                -> AAP3D(3,5,5) -> FC 4800->40 +SiLU -> FC 40->2560
+  BranchNet(X_hist): per-timestep [Conv2D 1->16 +SiLU -> Conv2D 16->32
+                +SiLU -> MaxPool2 -> AAP2D(1,1)] -> RNN(32->64, tanh, 10
+                steps unrolled) -> FC 64->40 +SiLU -> FC 40->2560
+  U = branch ⊙ trunk   (element-wise Mul, p=2560)
+
+All linears/convs are bias-free (paper Table I counts match exactly).
+Inputs:
+  load volume (B, 4, ny+1, nx+1, 1)  — depth stack [Fx, Fy, supp_x, supp_y]
+  density history (B, 10, ny, nx, 1)
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common import ParamSpec
+from repro.configs.cronet import CRONetConfig
+
+
+def param_specs(cfg: CRONetConfig) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    c = cfg
+    return {
+        "trunk": {
+            "conv1": ParamSpec((2, 3, 3, 1, c.t_c1), (None,) * 5, "normal", dt),
+            "conv2": ParamSpec((1, 3, 3, c.t_c1, c.t_c2), (None,) * 5, "normal", dt),
+            "fc1": ParamSpec((c.trunk_features, c.mid), ("fsdp", "tp"), "normal", dt),
+            "fc2": ParamSpec((c.mid, c.p), ("fsdp", "tp"), "normal", dt),
+        },
+        "branch": {
+            "conv1": ParamSpec((3, 3, 1, c.b_c1), (None,) * 4, "normal", dt),
+            "conv2": ParamSpec((3, 3, c.b_c1, c.b_c2), (None,) * 4, "normal", dt),
+            "rnn_wx": ParamSpec((c.branch_features, c.rnn_hidden), (None, None), "normal", dt),
+            "rnn_wh": ParamSpec((c.rnn_hidden, c.rnn_hidden), (None, None), "normal", dt),
+            "fc1": ParamSpec((c.rnn_hidden, c.mid), (None, None), "normal", dt),
+            "fc2": ParamSpec((c.mid, c.p), ("fsdp", "tp"), "normal", dt),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Reference ops (jnp; the Pallas kernels assert against these)
+# ---------------------------------------------------------------------------
+
+
+def conv2d_same(x, w):
+    """x: (B, H, W, Cin); w: (kh, kw, Cin, Cout); SAME padding, no bias."""
+    return lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv3d(x, w, depth_padding):
+    """x: (B, D, H, W, Cin); w: (kd, kh, kw, Cin, Cout).
+
+    depth_padding: 'causal_same' pads depth with (0, kd-1) so the output
+    depth equals input depth (matches Table I MAC counting: the padded
+    tail positions do zero-MACs on real data), spatial SAME.
+    """
+    kd = w.shape[0]
+    pad_d = (0, kd - 1) if depth_padding == "causal_same" else (0, 0)
+    kh, kw = w.shape[1], w.shape[2]
+    return lax.conv_general_dilated(
+        x, w, window_strides=(1, 1, 1),
+        padding=(pad_d, (kh // 2, kh // 2), (kw // 2, kw // 2)),
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
+    )
+
+
+def maxpool2d(x, k=2):
+    """x: (B, H, W, C) -> (B, H//k, W//k, C); floor division (drop edge)."""
+    b, h, w, c = x.shape
+    hh, ww = (h // k) * k, (w // k) * k
+    x = x[:, :hh, :ww, :].reshape(b, h // k, k, w // k, k, c)
+    return jnp.max(x, axis=(2, 4))
+
+
+def _adaptive_bounds(n_in: int, n_out: int):
+    """PyTorch-style adaptive pooling window boundaries (static)."""
+    starts = [(i * n_in) // n_out for i in range(n_out)]
+    ends = [-(-((i + 1) * n_in) // n_out) for i in range(n_out)]
+    return starts, ends
+
+
+def adaptive_avg_pool2d(x, out_hw: Tuple[int, int]):
+    """x: (B, H, W, C) -> (B, oh, ow, C). Irregular windows (paper §IV-D4)."""
+    b, h, w, c = x.shape
+    oh, ow = out_hw
+    hs, he = _adaptive_bounds(h, oh)
+    ws, we = _adaptive_bounds(w, ow)
+    rows = []
+    for i in range(oh):
+        cols = []
+        for j in range(ow):
+            cols.append(jnp.mean(x[:, hs[i]:he[i], ws[j]:we[j], :], axis=(1, 2)))
+        rows.append(jnp.stack(cols, axis=1))
+    return jnp.stack(rows, axis=1)  # (B, oh, ow, C)
+
+
+def adaptive_avg_pool3d(x, out_dhw: Tuple[int, int, int]):
+    """x: (B, D, H, W, C) -> (B, od, oh, ow, C)."""
+    b, d, h, w, c = x.shape
+    od, oh, ow = out_dhw
+    ds, de = _adaptive_bounds(d, od)
+    out = []
+    for i in range(od):
+        sl = jnp.mean(x[:, ds[i]:de[i]], axis=1)            # (B, H, W, C)
+        out.append(adaptive_avg_pool2d(sl, (oh, ow)))
+    return jnp.stack(out, axis=1)
+
+
+def silu(x):
+    return jax.nn.silu(x)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def trunk_forward(cfg: CRONetConfig, p, load_vol):
+    """load_vol: (B, 4, ny+1, nx+1, 1) -> (B, p)."""
+    x = conv3d(load_vol, p["conv1"], "causal_same")   # (B,4,H,W,16) depth-same
+    x = silu(x)
+    x = conv3d(x, p["conv2"], "same")                  # kd=1 -> depth preserved
+    x = silu(x)
+    x = adaptive_avg_pool3d(x, cfg.t_pool)             # (B,3,5,5,64)
+    x = x.reshape(x.shape[0], -1)                      # (B, 4800)
+    x = silu(x @ p["fc1"])
+    return x @ p["fc2"]
+
+
+def branch_forward(cfg: CRONetConfig, p, hist):
+    """hist: (B, T, ny, nx, 1) -> (B, p). Time-distributed CNN -> RNN."""
+    b, t = hist.shape[:2]
+    x = hist.reshape(b * t, *hist.shape[2:])
+    x = silu(conv2d_same(x, p["conv1"]))
+    x = silu(conv2d_same(x, p["conv2"]))
+    x = maxpool2d(x, 2)
+    x = adaptive_avg_pool2d(x, cfg.b_pool)             # (B*T,1,1,32)
+    feats = x.reshape(b, t, -1)                        # (B, T, 32)
+
+    # fully-unrolled vanilla RNN (paper: RNN reuses GEMM kernels, Tanh L1-fused)
+    h = jnp.zeros((b, cfg.rnn_hidden), feats.dtype)
+    for i in range(t):
+        h = jnp.tanh(feats[:, i] @ p["rnn_wx"] + h @ p["rnn_wh"])
+    x = silu(h @ p["fc1"])
+    return x @ p["fc2"]
+
+
+def forward(cfg: CRONetConfig, params, load_vol, hist):
+    """Returns the p-dim Mul output (B, p) — the paper's GMIO-out tensor."""
+    tr = trunk_forward(cfg, params["trunk"], load_vol)
+    br = branch_forward(cfg, params["branch"], hist)
+    return br * tr
+
+
+def decode_displacement(cfg: CRONetConfig, u_vec):
+    """(B, p=2560) -> (B, ny+1, nx+1, 2) nodal displacement field.
+
+    Decoder assumption (DESIGN.md §9): reshape to (32, 40, 2) and bilinear
+    resize to the nodal grid.
+    """
+    b = u_vec.shape[0]
+    grid = u_vec.reshape(b, 32, 40, 2).astype(jnp.float32)
+    ny, nx = cfg.nodes
+    return jax.image.resize(grid, (b, ny, nx, 2), method="bilinear")
+
+
+def count_macs(cfg: CRONetConfig) -> Dict[str, int]:
+    """Analytic MAC counts reproducing paper Table I."""
+    c = cfg
+    H, W = c.nely + 1, c.nelx + 1
+    macs = {
+        "trunk/conv3d1": 3 * H * W * (2 * 3 * 3 * 1 * c.t_c1),
+        "trunk/conv3d2": 4 * H * W * (1 * 3 * 3 * c.t_c1 * c.t_c2),
+        "trunk/fc1": c.trunk_features * c.mid,
+        "trunk/fc2": c.mid * c.p,
+        "branch/conv2d1": c.hist_len * c.nely * c.nelx * (3 * 3 * 1 * c.b_c1),
+        "branch/conv2d2": c.hist_len * c.nely * c.nelx * (3 * 3 * c.b_c1 * c.b_c2),
+        "branch/rnn": c.hist_len * (c.rnn_hidden * (c.branch_features + c.rnn_hidden)),
+        "branch/fc1": c.rnn_hidden * c.mid,
+        "branch/fc2": c.mid * c.p,
+    }
+    macs["total"] = sum(macs.values())
+    return macs

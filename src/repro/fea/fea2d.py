@@ -1,0 +1,158 @@
+"""2D plane-stress FEA for SIMP topology optimization, pure JAX.
+
+Classic 88-line-topopt formulation (Andreassen et al. 2011): bilinear quad
+elements, unit thickness, E0=1, nu=0.3. The global stiffness solve is
+matrix-free preconditioned CG (gather element dofs -> dense 8x8 KE apply
+-> scatter-add), jit/vmap friendly and differentiable.
+
+This is the paper's baseline: CRONet approximates exactly this solver
+inside the optimization loop (paper §II-A).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def element_stiffness(nu: float = 0.3) -> np.ndarray:
+    """Standard 8x8 bilinear quad KE (E=1, unit thickness)."""
+    k = np.array([
+        1 / 2 - nu / 6, 1 / 8 + nu / 8, -1 / 4 - nu / 12, -1 / 8 + 3 * nu / 8,
+        -1 / 4 + nu / 12, -1 / 8 - nu / 8, nu / 6, 1 / 8 - 3 * nu / 8,
+    ])
+    KE = 1 / (1 - nu ** 2) * np.array([
+        [k[0], k[1], k[2], k[3], k[4], k[5], k[6], k[7]],
+        [k[1], k[0], k[7], k[6], k[5], k[4], k[3], k[2]],
+        [k[2], k[7], k[0], k[5], k[6], k[3], k[4], k[1]],
+        [k[3], k[6], k[5], k[0], k[7], k[2], k[1], k[4]],
+        [k[4], k[5], k[6], k[7], k[0], k[1], k[2], k[3]],
+        [k[5], k[4], k[3], k[2], k[1], k[0], k[7], k[6]],
+        [k[6], k[3], k[4], k[1], k[2], k[7], k[0], k[5]],
+        [k[7], k[2], k[1], k[4], k[3], k[6], k[5], k[0]],
+    ])
+    return KE
+
+
+class Problem(NamedTuple):
+    nelx: int
+    nely: int
+    edof: jnp.ndarray          # (ne, 8) global dof indices per element
+    free_mask: jnp.ndarray     # (ndof,) 1.0 on free dofs, 0.0 on fixed
+    f: jnp.ndarray             # (ndof,) load vector
+    KE: jnp.ndarray            # (8, 8)
+    volfrac: float
+    fixed_x_mask: jnp.ndarray  # (ndof,) bookkeeping for the load volume
+    penal: float = 3.0
+    e_min: float = 1e-9
+
+
+def _edof_matrix(nelx: int, nely: int) -> np.ndarray:
+    """Node numbering column-major (x-fast in elements), 2 dof per node —
+    standard 88-line layout: node id n = x*(nely+1) + y."""
+    edof = np.zeros((nelx * nely, 8), dtype=np.int32)
+    for ex in range(nelx):
+        for ey in range(nely):
+            el = ex * nely + ey
+            n1 = (nely + 1) * ex + ey
+            n2 = (nely + 1) * (ex + 1) + ey
+            edof[el] = [2 * n1, 2 * n1 + 1, 2 * n2, 2 * n2 + 1,
+                        2 * n2 + 2, 2 * n2 + 3, 2 * n1 + 2, 2 * n1 + 3]
+    return edof
+
+
+def mbb_problem(nelx: int, nely: int, volfrac: float = 0.5) -> Problem:
+    """MBB half-beam: unit downward load at top-left node; x symmetry on the
+    left edge; y support at bottom-right node (paper's benchmark)."""
+    ndof = 2 * (nelx + 1) * (nely + 1)
+    f = np.zeros(ndof)
+    f[1] = -1.0                                   # Fy at node (0, 0)
+    fixed = list(range(0, 2 * (nely + 1), 2))     # left edge x-dofs
+    fixed.append(2 * (nelx + 1) * (nely + 1) - 1)  # bottom-right y
+    free_mask = np.ones(ndof)
+    free_mask[fixed] = 0.0
+    fixed_x = np.zeros(ndof)
+    fixed_x[fixed] = 1.0
+    return Problem(
+        nelx=nelx, nely=nely,
+        edof=jnp.asarray(_edof_matrix(nelx, nely)),
+        free_mask=jnp.asarray(free_mask),
+        f=jnp.asarray(f),
+        KE=jnp.asarray(element_stiffness()),
+        volfrac=volfrac,
+        fixed_x_mask=jnp.asarray(fixed_x),
+    )
+
+
+def stiffness_apply(prob: Problem, x_phys: jnp.ndarray, u: jnp.ndarray):
+    """Matrix-free K(x) @ u with SIMP interpolation E = Emin + x^p (1-Emin)."""
+    e = prob.e_min + (x_phys.reshape(-1) ** prob.penal) * (1 - prob.e_min)
+    ue = u[prob.edof]                              # (ne, 8)
+    fe = jnp.einsum("e,ij,ej->ei", e, prob.KE, ue)  # (ne, 8)
+    out = jnp.zeros_like(u).at[prob.edof.reshape(-1)].add(fe.reshape(-1))
+    return out * prob.free_mask
+
+
+def solve(prob: Problem, x_phys: jnp.ndarray, tol: float = 1e-6,
+          max_iter: int = 2000, u0=None):
+    """Jacobi-preconditioned CG on the free dofs. Returns (u, n_iters)."""
+    f = prob.f * prob.free_mask
+    # diagonal of K for Jacobi preconditioner
+    e = prob.e_min + (x_phys.reshape(-1) ** prob.penal) * (1 - prob.e_min)
+    diag_e = jnp.einsum("e,i->ei", e, jnp.diag(prob.KE))
+    diag = jnp.zeros_like(f).at[prob.edof.reshape(-1)].add(diag_e.reshape(-1))
+    diag = jnp.where(diag > 0, diag, 1.0)
+
+    def precond(r):
+        return r / diag * prob.free_mask
+
+    u = jnp.zeros_like(f) if u0 is None else u0 * prob.free_mask
+    r = f - stiffness_apply(prob, x_phys, u)
+    z = precond(r)
+    p = z
+    rz = jnp.vdot(r, z)
+    fnorm = jnp.linalg.norm(f)
+
+    def cond(state):
+        u, r, p, rz, it = state
+        return (jnp.linalg.norm(r) > tol * fnorm) & (it < max_iter)
+
+    def body(state):
+        u, r, p, rz, it = state
+        kp = stiffness_apply(prob, x_phys, p)
+        alpha = rz / jnp.maximum(jnp.vdot(p, kp), 1e-30)
+        u = u + alpha * p
+        r = r - alpha * kp
+        z = precond(r)
+        rz_new = jnp.vdot(r, z)
+        p = z + (rz_new / jnp.maximum(rz, 1e-30)) * p
+        return u, r, p, rz_new, it + 1
+
+    u, r, p, rz, it = jax.lax.while_loop(cond, body, (u, r, p, rz, jnp.zeros((), jnp.int32)))
+    return u, it
+
+
+def compliance_and_sens(prob: Problem, x_phys: jnp.ndarray, u: jnp.ndarray):
+    """Compliance c = u^T K u and sensitivity dc/dx (SIMP adjoint)."""
+    ue = u[prob.edof]
+    ce = jnp.einsum("ei,ij,ej->e", ue, prob.KE, ue)       # (ne,)
+    xf = x_phys.reshape(-1)
+    e = prob.e_min + xf ** prob.penal * (1 - prob.e_min)
+    c = jnp.sum(e * ce)
+    dc = -prob.penal * xf ** (prob.penal - 1) * (1 - prob.e_min) * ce
+    return c, dc.reshape(x_phys.shape)
+
+
+def load_volume(prob: Problem) -> jnp.ndarray:
+    """(4, nely+1, nelx+1, 1) TrunkNet input: [Fx, Fy, supp_x, supp_y]
+    stacked on the depth axis (configs/cronet.py reconstruction)."""
+    ny, nx = prob.nely + 1, prob.nelx + 1
+    fx = prob.f[0::2].reshape(nx, ny).T
+    fy = prob.f[1::2].reshape(nx, ny).T
+    sx = prob.fixed_x_mask[0::2].reshape(nx, ny).T
+    sy = prob.fixed_x_mask[1::2].reshape(nx, ny).T
+    vol = jnp.stack([fx, fy, sx, sy], axis=0)             # (4, ny, nx)
+    return vol[..., None]

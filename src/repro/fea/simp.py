@@ -1,0 +1,98 @@
+"""SIMP topology-optimization loop (sensitivity filter + OC update).
+
+The driver the paper accelerates: each iteration needs one FEA solve whose
+displacement field CRONet learns to predict (fea/hybrid.py swaps the
+solver for the surrogate after warm-up).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fea import fea2d
+
+
+def make_filter(nelx: int, nely: int, rmin: float = 1.5):
+    """Sensitivity filter weights as a small static convolution kernel."""
+    r = int(np.ceil(rmin)) - 1
+    ks = 2 * r + 1
+    wy, wx = np.meshgrid(np.arange(-r, r + 1), np.arange(-r, r + 1), indexing="ij")
+    w = np.maximum(0.0, rmin - np.sqrt(wx ** 2 + wy ** 2))
+    kernel = jnp.asarray(w[..., None, None])  # (ks, ks, 1, 1)
+
+    def apply(x, dc):
+        """Classic sensitivity filter: dc~ = conv(w * x * dc) / (x * conv(w))."""
+        num = jax.lax.conv_general_dilated(
+            (x * dc)[None, ..., None], kernel, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))[0, ..., 0]
+        den = jax.lax.conv_general_dilated(
+            jnp.ones_like(x)[None, ..., None], kernel, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))[0, ..., 0]
+        return num / jnp.maximum(den * jnp.maximum(x, 1e-3), 1e-9)
+
+    return apply
+
+
+def oc_update(x, dc, dv, volfrac, move: float = 0.2):
+    """Optimality-criteria update with bisection on the Lagrange multiplier."""
+
+    def xnew(lmid):
+        be = jnp.sqrt(jnp.maximum(-dc / (dv * lmid), 1e-30))
+        xn = x * be
+        xn = jnp.clip(xn, x - move, x + move)
+        return jnp.clip(xn, 0.001, 1.0)
+
+    def body(state, _):
+        l1, l2 = state
+        lmid = 0.5 * (l1 + l2)
+        vol = jnp.mean(xnew(lmid))
+        too_much = vol > volfrac
+        l1 = jnp.where(too_much, lmid, l1)
+        l2 = jnp.where(too_much, l2, lmid)
+        return (l1, l2), None
+
+    (l1, l2), _ = jax.lax.scan(body, (jnp.asarray(1e-9), jnp.asarray(1e9)),
+                               None, length=60)
+    return xnew(0.5 * (l1 + l2))
+
+
+class SimpState(NamedTuple):
+    x: jnp.ndarray            # (nely, nelx) densities
+    u: jnp.ndarray            # (ndof,) last displacement
+    compliance: jnp.ndarray
+    iteration: int
+
+
+def run_simp(prob: fea2d.Problem, n_iter: int = 60, rmin: float = 1.5,
+             solver: Optional[Callable] = None, record_every: int = 1,
+             x0=None):
+    """Reference SIMP loop. solver(x_phys, u_prev) -> (u, c, dc); defaults
+    to FEA. Returns (final_state, history dict of arrays)."""
+    filt = make_filter(prob.nelx, prob.nely, rmin)
+
+    def fea_solver(x_phys, u_prev):
+        u, _ = fea2d.solve(prob, x_phys, u0=u_prev)
+        c, dc = fea2d.compliance_and_sens(prob, x_phys, u)
+        return u, c, dc
+
+    solver = solver or fea_solver
+    x = (jnp.full((prob.nely, prob.nelx), prob.volfrac)
+         if x0 is None else x0)
+    u = jnp.zeros_like(prob.f)
+    dv = jnp.ones_like(x) / x.size
+
+    xs, us, cs = [], [], []
+    for it in range(n_iter):
+        u, c, dc = solver(x, u)
+        dc_f = filt(x, dc)
+        x = oc_update(x, dc_f, dv, prob.volfrac)
+        if it % record_every == 0:
+            xs.append(np.asarray(x))
+            us.append(np.asarray(u))
+            cs.append(float(c))
+    state = SimpState(x=x, u=u, compliance=jnp.asarray(cs[-1]), iteration=n_iter)
+    return state, {"x": np.stack(xs), "u": np.stack(us), "c": np.asarray(cs)}

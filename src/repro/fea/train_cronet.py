@@ -1,0 +1,87 @@
+"""CRONet training on FEA-generated trajectories.
+
+Dataset: sliding (hist_len)-windows over a SIMP trajectory; target is the
+FEA displacement field of the *next* iteration (that is what the surrogate
+replaces). Trained with AdamW in fp32, deployed in bf16 (paper §V).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import materialize
+from repro.configs.cronet import CRONetConfig
+from repro.core import cronet
+from repro.fea import fea2d, simp
+from repro.optim import adamw
+
+
+def build_dataset(cfg: CRONetConfig, n_iter: int = 100, rmin: float = 1.5):
+    """Run pure-FEA SIMP; return (load_vol, hists (N,T,ny,nx,1),
+    targets (N, ndof), u_scale, reference history)."""
+    prob = fea2d.mbb_problem(cfg.nelx, cfg.nely)
+    _, hist = simp.run_simp(prob, n_iter=n_iter, rmin=rmin)
+    xs, us = hist["x"], hist["u"]
+    T = cfg.hist_len
+    windows, targets = [], []
+    for i in range(T, len(xs)):
+        windows.append(xs[i - T:i])
+        targets.append(us[i])
+    windows = np.stack(windows)[..., None].astype(np.float32)
+    targets = np.stack(targets).astype(np.float32)
+    u_scale = float(np.abs(targets).max())
+    load_vol = np.asarray(fea2d.load_volume(prob), np.float32)[None]
+    return load_vol, windows, targets / u_scale, u_scale, hist
+
+
+def train(cfg: CRONetConfig, steps: int = 400, batch: int = 16,
+          seed: int = 0, lr: float = 2e-3, data=None, log_every: int = 100,
+          verbose: bool = True, noise: float = 0.01):
+    """Returns (params fp32, u_scale, losses, reference_history)."""
+    if data is None:
+        data = build_dataset(cfg)
+    load_vol, windows, targets, u_scale, ref = data
+    n = windows.shape[0]
+    ny, nx = cfg.nodes
+
+    specs = cronet.param_specs(dataclasses.replace(cfg, dtype="float32"))
+    params = materialize(specs, jax.random.key(seed))
+    ocfg = adamw.AdamWConfig(lr=lr, warmup_steps=20, total_steps=steps,
+                             weight_decay=0.0, master_fp32=False)
+    opt = adamw.init_state(ocfg, params)
+
+    lv = jnp.asarray(load_vol)
+
+    def loss_fn(p, hist_b, target_b):
+        pred = cronet.forward(cfg, p, jnp.broadcast_to(lv, (hist_b.shape[0],) + lv.shape[1:]), hist_b)
+        grid = cronet.decode_displacement(cfg, pred)          # (B,ny,nx,2)
+        u = jnp.transpose(grid, (0, 2, 1, 3)).reshape(hist_b.shape[0], -1)
+        return jnp.mean(jnp.square(u - target_b))
+
+    @jax.jit
+    def step(p, opt, hist_b, target_b):
+        l, g = jax.value_and_grad(loss_fn)(p, hist_b, target_b)
+        p, opt, _ = adamw.apply_updates(ocfg, p, g, opt)
+        return p, opt, l
+
+    rng = np.random.default_rng(seed)
+    losses = []
+    for i in range(steps):
+        idx = rng.integers(0, n, size=min(batch, n))
+        wb = windows[idx]
+        if noise:
+            # jitter the density histories: robustness off the training
+            # trajectory (the hybrid loop's designs drift from pure-FEA's)
+            wb = np.clip(wb + rng.normal(0, noise, wb.shape).astype(np.float32),
+                         0.001, 1.0)
+        p_, o_, l = step(params, opt, jnp.asarray(wb),
+                         jnp.asarray(targets[idx]))
+        params, opt = p_, o_
+        losses.append(float(l))
+        if verbose and i % log_every == 0:
+            print(f"  cronet train step {i}: mse={losses[-1]:.5f}")
+    return params, u_scale, losses, ref

@@ -1,0 +1,161 @@
+"""The fully on-chip CRONet inference megakernel — the paper's headline
+contribution ("first end-to-end network fully realized on the AIE array")
+in TPU form: ONE pallas_call executes the entire network with every weight
+and every intermediate activation resident in VMEM. HBM is touched exactly
+twice: the input DMA at kernel entry and the output store at exit — the
+TPU equivalent of the paper's GMIO-only DRAM contract.
+
+Fusion mapping (paper §IV-C -> this kernel):
+  L1: SiLU/Tanh applied in-register immediately after each conv/GEMM tap
+      accumulation (no separate activation pass).
+  L2: adjacent layers consume each other's values directly — inside one
+      kernel there is literally no inter-layer buffer traffic to schedule.
+  L3: the two largest intermediates (trunk conv2 output, branch
+      time-distributed conv2 stack) are staged in explicit VMEM scratch
+      buffers — the Memory-Tile analogue — because they are reshaped
+      (AAP3D windows / time-major RNN layout) before the next stage.
+
+Whole-network VMEM budget (medium size): 840 KB weights + <2 MB
+activations + scratch, far under a v5e core's ~128 MB VMEM; the paper's
+premise (419K-param net fits on-chip) holds with room to spare on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.configs.cronet import CRONetConfig
+from repro.core.cronet import _adaptive_bounds
+
+
+def _conv2d_taps(x, w, fuse_silu=True):
+    """x: (H+2, W+2, Cin) pre-padded; w: (3, 3, Cin, Cout)."""
+    hout, wout = x.shape[0] - 2, x.shape[1] - 2
+    acc = jnp.zeros((hout, wout, w.shape[-1]), jnp.float32)
+    for i in range(3):
+        for j in range(3):
+            acc += jax.lax.dot_general(
+                x[i:i + hout, j:j + wout, :].astype(jnp.float32),
+                w[i, j].astype(jnp.float32), (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+    return jax.nn.silu(acc) if fuse_silu else acc
+
+
+def _aap2d(x, oh, ow):
+    hs, he = _adaptive_bounds(x.shape[0], oh)
+    ws, we = _adaptive_bounds(x.shape[1], ow)
+    return jnp.stack([
+        jnp.stack([jnp.mean(x[hs[i]:he[i], ws[j]:we[j], :], axis=(0, 1))
+                   for j in range(ow)])
+        for i in range(oh)])
+
+
+def _make_kernel(cfg: CRONetConfig):
+    T = cfg.hist_len
+    ny, nx = cfg.nely, cfg.nelx
+    H, W = cfg.nodes
+
+    def kernel(load_ref, hist_ref, tc1_ref, tc2_ref, tf1_ref, tf2_ref,
+               bc1_ref, bc2_ref, rwx_ref, rwh_ref, bf1_ref, bf2_ref,
+               out_ref, trunk_stage, branch_stage):
+        # ---------------- TrunkNet ----------------
+        lv = load_ref[...]                         # (4, H, W, 1)
+        # conv3d-1 k=(2,3,3) causal-same depth: unrolled over kd taps (L1: silu)
+        w1 = tc1_ref[...]                          # (2, 3, 3, 1, 16)
+        lv_pad = jnp.pad(lv, ((0, 1), (1, 1), (1, 1), (0, 0)))  # depth tail+spatial
+        t1 = []
+        for d in range(4):
+            acc = jnp.zeros((H, W, cfg.t_c1), jnp.float32)
+            for dd in range(2):
+                xs = lv_pad[d + dd, :, :, :]       # (H+2, W+2, 1)
+                for i in range(3):
+                    for j in range(3):
+                        acc += jax.lax.dot_general(
+                            xs[i:i + H, j:j + W, :].astype(jnp.float32),
+                            w1[dd, i, j].astype(jnp.float32),
+                            (((2,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+            t1.append(jax.nn.silu(acc))
+        t1 = jnp.stack(t1)                         # (4, H, W, 16)
+
+        # conv3d-2 k=(1,3,3): per-depth 2D conv; L3: stage to VMEM scratch
+        w2 = tc2_ref[...]                          # (1, 3, 3, 16, 64)
+        for d in range(4):
+            xp = jnp.pad(t1[d], ((1, 1), (1, 1), (0, 0)))
+            trunk_stage[d] = _conv2d_taps(xp, w2[0]).astype(trunk_stage.dtype)
+        t2 = trunk_stage[...].astype(jnp.float32)  # (4, H, W, 64) via scratch
+
+        # AAP3D (3,5,5) — irregular windows, static unroll
+        ds, de = _adaptive_bounds(4, cfg.t_pool[0])
+        pooled = []
+        for k in range(cfg.t_pool[0]):
+            sl = jnp.mean(t2[ds[k]:de[k]], axis=0)
+            pooled.append(_aap2d(sl, cfg.t_pool[1], cfg.t_pool[2]))
+        tfeat = jnp.stack(pooled).reshape(-1)      # (4800,)
+
+        # FC1 + SiLU (L1), FC2 — persistent VMEM weights
+        tmid = jax.nn.silu(tfeat @ tf1_ref[...].astype(jnp.float32))
+        trunk_out = tmid @ tf2_ref[...].astype(jnp.float32)   # (p,)
+
+        # ---------------- BranchNet ----------------
+        wb1 = bc1_ref[...]                         # (3, 3, 1, 16)
+        wb2 = bc2_ref[...]                         # (3, 3, 16, 32)
+        for t in range(T):                          # time-distributed CNN
+            img = hist_ref[t]                      # (ny, nx, 1)
+            c1 = _conv2d_taps(jnp.pad(img, ((1, 1), (1, 1), (0, 0))), wb1)
+            c2 = _conv2d_taps(jnp.pad(c1, ((1, 1), (1, 1), (0, 0))), wb2)
+            branch_stage[t] = c2.astype(branch_stage.dtype)   # L3 staging
+
+        # MaxPool2 + AAP2D(1,1) per step, then RNN fully unrolled (L2: each
+        # step's GEMM feeds the next in-register; paper maps RNN onto GEMM)
+        h = jnp.zeros((cfg.rnn_hidden,), jnp.float32)
+        rwx = rwx_ref[...].astype(jnp.float32)
+        rwh = rwh_ref[...].astype(jnp.float32)
+        for t in range(T):
+            c2 = branch_stage[t].astype(jnp.float32)          # (ny, nx, 32)
+            hh, ww = (ny // 2) * 2, (nx // 2) * 2
+            mp = jnp.max(c2[:hh, :ww, :].reshape(hh // 2, 2, ww // 2, 2, -1),
+                         axis=(1, 3))
+            feat = jnp.mean(mp, axis=(0, 1))                  # AAP (1,1)
+            h = jnp.tanh(feat @ rwx + h @ rwh)                # L1: tanh fused
+
+        bmid = jax.nn.silu(h @ bf1_ref[...].astype(jnp.float32))
+        branch_out = bmid @ bf2_ref[...].astype(jnp.float32)  # (p,)
+
+        # ---------------- combine (Mul node -> GMIO out) ----------------
+        out_ref[...] = (branch_out * trunk_out).astype(out_ref.dtype)
+
+    return kernel
+
+
+def cronet_fused(cfg: CRONetConfig, params: Dict, load_vol: jax.Array,
+                 hist: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Batch-1 fully-fused CRONet inference.
+
+    load_vol: (4, ny+1, nx+1, 1); hist: (T, ny, nx, 1) -> (p,).
+    """
+    H, W = cfg.nodes
+    dt = jnp.dtype(cfg.dtype)
+    tr, br = params["trunk"], params["branch"]
+    args = [load_vol.astype(dt), hist.astype(dt),
+            tr["conv1"], tr["conv2"], tr["fc1"], tr["fc2"],
+            br["conv1"], br["conv2"], br["rnn_wx"], br["rnn_wh"],
+            br["fc1"], br["fc2"]]
+    return pl.pallas_call(
+        _make_kernel(cfg),
+        in_specs=[pl.BlockSpec(a.shape, lambda *_, nd=a.ndim: (0,) * nd)
+                  for a in args],
+        out_specs=pl.BlockSpec((cfg.p,), lambda *_: (0,)),
+        out_shape=jax.ShapeDtypeStruct((cfg.p,), dt),
+        scratch_shapes=[
+            pltpu.VMEM((4, H, W, cfg.t_c2), jnp.float32),      # trunk L3 stage
+            pltpu.VMEM((cfg.hist_len, cfg.nely, cfg.nelx, cfg.b_c2),
+                       jnp.float32),                           # branch L3 stage
+        ],
+        interpret=interpret,
+    )(*args)

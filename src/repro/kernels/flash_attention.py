@@ -1,0 +1,133 @@
+"""Flash attention (Pallas TPU): online-softmax tiling so the (Sq, Sk)
+score matrix never leaves VMEM.
+
+Beyond-paper optimization (§Perf P4): the dry-run HLO shows the pure-JAX
+chunked attention materializes ~4 TB/device of fp32 score traffic for
+prefill_32k on qwen2.5-32b — the dominant roofline term. This kernel is
+the TPU-native fix: one grid step per (batch, kv-head, q-block); the inner
+loop streams K/V blocks through VMEM with fp32 running max/denominator
+scratch. GQA is handled by folding the q-head group into the q rows.
+
+The dry-run compiles for the CPU backend where Mosaic kernels cannot
+lower, so roofline accounting applies an ANALYTIC adjustment
+(`memory_s_flash` in the cell JSONs) — the kernel itself is validated in
+interpret mode against kernels/ref.py like every other kernel.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  kv_steps: int, block_q: int, block_k: int, causal: bool,
+                  scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                      # (block_q, d)
+    k = k_ref[0]                      # (block_k, d)
+    v = v_ref[0]                      # (block_k, dv)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D/Dv); returns (B, Sq, Hq, Dv).
+
+    GQA: q-head groups fold into q rows per kv head, so the MXU sees
+    (block_q * group) x D tiles (hardware-aligned for group in {1,4,5,8}).
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, dv = v.shape
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    # (B*Hkv, Sq*g, d): fold the group into rows
+    qf = (q.reshape(b, sq, hkv, g, d).transpose(0, 2, 1, 3, 4)
+          .reshape(b * hkv, sq * g, d))
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, dv)
+
+    bq = min(block_q, sq) * g
+    bk = min(block_k, sk)
+    assert (sq * g) % bq == 0 and sk % bk == 0
+    grid = (b * hkv, sq * g // bq, sk // bk)
+
+    # causal masking indexes q rows directly, so group folding is only
+    # valid for g == 1; flash_attention_causal_gqa handles g > 1.
+    assert not (causal and g > 1), "use flash_attention_causal_gqa for GQA"
+    kernel = functools.partial(
+        _flash_kernel, kv_steps=grid[2], block_q=bq, block_k=bk,
+        causal=causal, scale=scale)
+    of = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, dv), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, sq * g, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    o = (of.reshape(b, hkv, sq, g, dv).transpose(0, 2, 1, 3, 4)
+         .reshape(b, sq, hq, dv))
+    return o
+
+
+def flash_attention_causal_gqa(q, k, v, *, block_q=256, block_k=256,
+                               interpret=True):
+    """Causal GQA flash attention: loops the group dim with vmap-of-heads
+    sharing KV (keeps causal masking exact for g > 1)."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, dv = v.shape
+    g = hq // hkv
+    outs = []
+    for j in range(g):   # static unroll over the (small) group
+        qj = q.reshape(b, sq, hkv, g, d)[..., j, :]
+        oj = flash_attention(qj, k, v, causal=True, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+        outs.append(oj)
+    o = jnp.stack(outs, axis=3).reshape(b, sq, hq, dv)
+    return o

@@ -1,0 +1,78 @@
+"""Pallas GEMM with persistent weights and L1-fused activation.
+
+TPU adaptation of the paper's GAMA-derived GEMM (§IV-D2):
+  * AIE persistent weights  -> the weight operand is pinned in VMEM across
+    grid steps (BlockSpec revisits the same block; for CRONet-sized layers
+    the whole weight is ONE block, so it is loaded from HBM exactly once).
+  * cascade-chain K-slicing -> K-dimension grid blocking with a fp32 VMEM
+    accumulator (the MXU-native equivalent of the adder-tree reduction;
+    no 38-column cascade limit exists on TPU).
+  * L1 fusion               -> SiLU/Tanh applied in-register before the
+    single store of the output block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int,
+                 activation: Optional[str]):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        out = acc_ref[...]
+        if activation == "silu":
+            out = jax.nn.silu(out)
+        elif activation == "tanh":
+            out = jnp.tanh(out)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def gemm(x: jax.Array, w: jax.Array, *, activation: Optional[str] = None,
+         bm: int = 128, bk: int = 128, bn: int = 128,
+         interpret: bool = True) -> jax.Array:
+    """x: (M, K) @ w: (K, N) -> (M, N), optional fused activation.
+
+    Fully parameterized M/K/N (the paper's extension of GAMA): arbitrary
+    sizes are padded up to the block grid and sliced back.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm_, bk_, bn_ = min(bm, _rup(m, 8)), min(bk, _rup(k, 128)), min(bn, _rup(n, 128))
+    mp, kp, np_ = _rup(m, bm_), _rup(k, bk_), _rup(n, bn_)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, k_steps=grid[2], activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _rup(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,100 @@
+"""Pallas MaxPool2D and AdaptiveAvgPool2D/3D kernels (paper §IV-D4).
+
+TPU adaptation notes:
+  * MaxPool: the AIE version extracts strided lanes with filter_even/odd +
+    shuffle; the TPU-native idiom is a reshape into (H/2, 2, W/2, 2) and a
+    two-axis max — same dataflow, native layout ops.
+  * AdaptiveAvgPool: variable window boundaries are STATIC given in/out
+    shapes, so the irregular windows unroll at trace time into dense mean
+    reductions (the paper handles the same irregularity with a sliding
+    row-extraction loop).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.cronet import _adaptive_bounds
+
+
+def _maxpool2d_kernel(x_ref, o_ref, *, k: int):
+    x = x_ref[0]                                     # (H, W, C)
+    hh = (x.shape[0] // k) * k
+    ww = (x.shape[1] // k) * k
+    xr = x[:hh, :ww, :].reshape(hh // k, k, ww // k, k, x.shape[2])
+    o_ref[0] = jnp.max(xr, axis=(1, 3))
+
+
+def maxpool2d(x: jax.Array, k: int = 2, *, interpret: bool = True) -> jax.Array:
+    b, h, w, c = x.shape
+    return pl.pallas_call(
+        functools.partial(_maxpool2d_kernel, k=k),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, h // k, w // k, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h // k, w // k, c), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _aap2d_kernel(x_ref, o_ref, *, bounds):
+    x = x_ref[0].astype(jnp.float32)                 # (H, W, C)
+    (hs, he), (ws, we) = bounds
+    rows = []
+    for i in range(len(hs)):
+        cols = []
+        for j in range(len(ws)):
+            cols.append(jnp.mean(x[hs[i]:he[i], ws[j]:we[j], :], axis=(0, 1)))
+        rows.append(jnp.stack(cols))
+    o_ref[0] = jnp.stack(rows).astype(o_ref.dtype)
+
+
+def adaptive_avg_pool2d(x: jax.Array, out_hw: Tuple[int, int], *,
+                        interpret: bool = True) -> jax.Array:
+    b, h, w, c = x.shape
+    oh, ow = out_hw
+    bounds = (_adaptive_bounds(h, oh), _adaptive_bounds(w, ow))
+    return pl.pallas_call(
+        functools.partial(_aap2d_kernel, bounds=bounds),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, oh, ow, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, oh, ow, c), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _aap3d_kernel(x_ref, o_ref, *, bounds):
+    x = x_ref[0].astype(jnp.float32)                 # (D, H, W, C)
+    (ds, de), (hs, he), (ws, we) = bounds
+    out = []
+    for k in range(len(ds)):
+        sl = jnp.mean(x[ds[k]:de[k]], axis=0)
+        rows = []
+        for i in range(len(hs)):
+            cols = []
+            for j in range(len(ws)):
+                cols.append(jnp.mean(sl[hs[i]:he[i], ws[j]:we[j], :], axis=(0, 1)))
+            rows.append(jnp.stack(cols))
+        out.append(jnp.stack(rows))
+    o_ref[0] = jnp.stack(out).astype(o_ref.dtype)
+
+
+def adaptive_avg_pool3d(x: jax.Array, out_dhw: Tuple[int, int, int], *,
+                        interpret: bool = True) -> jax.Array:
+    b, d, h, w, c = x.shape
+    od, oh, ow = out_dhw
+    bounds = (_adaptive_bounds(d, od), _adaptive_bounds(h, oh),
+              _adaptive_bounds(w, ow))
+    return pl.pallas_call(
+        functools.partial(_aap3d_kernel, bounds=bounds),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, d, h, w, c), lambda i: (i, 0, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, od, oh, ow, c), lambda i: (i, 0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, od, oh, ow, c), x.dtype),
+        interpret=interpret,
+    )(x)

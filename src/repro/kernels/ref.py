@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert allclose).
+
+These re-export / wrap the reference math in core/cronet.py so the oracle
+and the model reference are literally the same code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cronet import (  # noqa: F401  (re-exported oracles)
+    adaptive_avg_pool2d,
+    adaptive_avg_pool3d,
+    conv2d_same,
+    conv3d,
+    maxpool2d,
+)
+
+
+def gemm(x, w, activation=None):
+    """x: (M, K) @ w: (K, N), optional fused activation (L1 fusion)."""
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if activation == "silu":
+        out = jax.nn.silu(out)
+    elif activation == "tanh":
+        out = jnp.tanh(out)
+    return out.astype(x.dtype)
+
+
+def silu_exact(x):
+    return jax.nn.silu(x)
+
+
+def silu_lut(x, n_entries: int = 256, lo: float = -8.0, hi: float = 8.0):
+    """Oracle for the LUT kernel: nearest-entry lookup of silu values,
+    identity tails (silu(x) ~ x for x >> 0, ~0 for x << 0)."""
+    xs = jnp.linspace(lo, hi, n_entries)
+    table = jax.nn.silu(xs)
+    xf = x.astype(jnp.float32)
+    idx = jnp.clip(jnp.round((xf - lo) / (hi - lo) * (n_entries - 1)), 0,
+                   n_entries - 1).astype(jnp.int32)
+    val = table[idx]
+    val = jnp.where(xf > hi, xf, val)
+    val = jnp.where(xf < lo, 0.0, val)
+    return val.astype(x.dtype)
+
+
+def rnn_unrolled(feats, wx, wh):
+    """feats: (B, T, F); fully-unrolled vanilla RNN with tanh (paper §IV-D3)."""
+    b, t, f = feats.shape
+    h = jnp.zeros((b, wh.shape[0]), feats.dtype)
+    for i in range(t):
+        h = jnp.tanh(feats[:, i] @ wx + h @ wh)
+    return h

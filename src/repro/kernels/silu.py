@@ -1,0 +1,65 @@
+"""LUT-based SiLU kernel (paper §IV-D4, adapted from the IRON toolkit).
+
+Honest hardware-adaptation note (DESIGN.md §2): on AIE-ML, sigmoid is
+expensive for the VPU, so the paper uses a lookup table. TPUs have fast
+transcendental units, so exact SiLU is typically CHEAPER than a gather —
+the LUT variant is kept for fidelity and benchmarked against the exact
+kernel in benchmarks/layer_breakdown.py; exact is the default everywhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_ENTRIES = 256
+LO, HI = -8.0, 8.0
+
+
+def make_table() -> jax.Array:
+    return jax.nn.silu(jnp.linspace(LO, HI, N_ENTRIES))
+
+
+def _silu_lut_kernel(x_ref, table_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    idx = jnp.clip(jnp.round((x - LO) / (HI - LO) * (N_ENTRIES - 1)),
+                   0, N_ENTRIES - 1).astype(jnp.int32)
+    val = jnp.take(table_ref[...], idx)
+    val = jnp.where(x > HI, x, val)       # identity tail
+    val = jnp.where(x < LO, 0.0, val)     # zero tail
+    o_ref[...] = val.astype(o_ref.dtype)
+
+
+def silu_lut(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % 128
+    fp = jnp.pad(flat, (0, pad))
+    out = pl.pallas_call(
+        _silu_lut_kernel,
+        in_specs=[pl.BlockSpec(fp.shape, lambda: (0,)),
+                  pl.BlockSpec((N_ENTRIES,), lambda: (0,))],
+        out_specs=pl.BlockSpec(fp.shape, lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct(fp.shape, x.dtype),
+        interpret=interpret,
+    )(fp, make_table())
+    return out[: flat.shape[0]].reshape(x.shape)
+
+
+def _silu_exact_kernel(x_ref, o_ref):
+    o_ref[...] = jax.nn.silu(x_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def silu_exact(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % 128
+    fp = jnp.pad(flat, (0, pad))
+    out = pl.pallas_call(
+        _silu_exact_kernel,
+        in_specs=[pl.BlockSpec(fp.shape, lambda: (0,))],
+        out_specs=pl.BlockSpec(fp.shape, lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct(fp.shape, x.dtype),
+        interpret=interpret,
+    )(fp)
+    return out[: flat.shape[0]].reshape(x.shape)

@@ -1,0 +1,103 @@
+"""Fused sLSTM Pallas kernel — the paper's on-chip-RNN insight at LM scale.
+
+CRONet's RNN runs fully on the AIE array with weights persistent in local
+memory (paper §IV-D3). The sLSTM blocks of xlstm-1.3b are the same
+pattern: a sequential recurrence whose per-step state and recurrent
+weights are small, but which XLA executes as a 4096-iteration while loop
+with every intermediate round-tripping HBM (the dominant roofline term of
+the xlstm train_4k cell — EXPERIMENTS.md §Perf X2).
+
+This kernel keeps R (block-diagonal per-head recurrent weights, ~8 MB) and
+the (h, c, n, m) state in VMEM scratch across the whole sequence; the
+precomputed input projections stream in time-blocks and only the hidden
+output streams back out. Per-device HBM traffic drops from
+O(S * state_passes) to O(S * (4d + d)) — input + output, exactly once.
+
+Grid: (batch_tiles, time_blocks); TPU iterates the minor grid dim
+sequentially per batch tile, so scratch state persists across time blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _slstm_kernel(wx_ref, r_ref, o_ref, h_ref, c_ref, n_ref, m_ref, *,
+                  ts: int, nh: int, dh: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    r = r_ref[...].astype(jnp.float32)           # (nh, dh, 4dh) resident
+    bt = h_ref.shape[0]
+    d = nh * dh
+
+    def step(t, _):
+        h = h_ref[...]
+        # per-head recurrent contribution, rearranged to [z|i|f|o] layout
+        rh = jax.lax.dot_general(
+            h.reshape(bt, nh, dh), r, (((2,), (1,)), ((1,), (0,))),
+            preferred_element_type=jnp.float32)   # (nh, bt, 4dh)
+        rh = jnp.moveaxis(rh, 0, 1)               # (bt, nh, 4dh)
+        rh = rh.reshape(bt, nh, 4, dh).transpose(0, 2, 1, 3).reshape(bt, 4 * d)
+        pre = wx_ref[:, t, :].astype(jnp.float32) + rh
+        z = jnp.tanh(pre[:, :d])
+        i_pre = pre[:, d:2 * d]
+        log_f = jax.nn.log_sigmoid(pre[:, 2 * d:3 * d])
+        o = jax.nn.sigmoid(pre[:, 3 * d:])
+        m = m_ref[...]
+        m_new = jnp.maximum(log_f + m, i_pre)
+        i_g = jnp.exp(i_pre - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        c = f_g * c_ref[...] + i_g * z
+        n = f_g * n_ref[...] + i_g
+        h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        h_ref[...] = h
+        c_ref[...] = c
+        n_ref[...] = n
+        m_ref[...] = m_new
+        o_ref[:, t, :] = h.astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, ts, step, 0)
+
+
+def slstm_fused(wx: jax.Array, r_zifo: jax.Array, *, time_block: int = 256,
+                batch_tile: int = 8, interpret: bool = True) -> jax.Array:
+    """wx: (B, S, 4d) precomputed input projections ([z|i|f|o] layout);
+    r_zifo: (nh, dh, 4*dh) block-diagonal recurrent weights.
+    Returns hidden states (B, S, d). Zero initial state (training path)."""
+    b, s, d4 = wx.shape
+    nh, dh, _ = r_zifo.shape
+    d = nh * dh
+    assert d4 == 4 * d
+    bt = min(batch_tile, b)
+    ts = min(time_block, s)
+    assert b % bt == 0 and s % ts == 0
+    grid = (b // bt, s // ts)
+    return pl.pallas_call(
+        functools.partial(_slstm_kernel, ts=ts, nh=nh, dh=dh),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, ts, 4 * d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((nh, dh, 4 * dh), lambda i, j: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, ts, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, d), wx.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bt, d), jnp.float32),   # h
+            pltpu.VMEM((bt, d), jnp.float32),   # c
+            pltpu.VMEM((bt, d), jnp.float32),   # n
+            pltpu.VMEM((bt, d), jnp.float32),   # m
+        ],
+        interpret=interpret,
+    )(wx, r_zifo)

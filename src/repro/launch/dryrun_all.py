@@ -1,0 +1,91 @@
+"""Drive the full dry-run sweep: every (arch x shape x mesh) cell in its
+own subprocess (fresh XLA device state per cell), resumable, failures
+recorded. Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_all [--mesh single|multi|both]
+      [--archs a,b,...] [--placed] [--timeout 1500] [--outdir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "qwen2.5-32b", "qwen2-72b", "granite-3-8b", "granite-8b",
+    "recurrentgemma-2b", "internvl2-1b", "xlstm-1.3b", "deepseek-v3-671b",
+    "granite-moe-3b-a800m", "hubert-xlarge",
+]
+SHAPE_NAMES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def run_cell(arch, shape, multi_pod, placed, outpath, timeout):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", outpath]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    if placed:
+        cmd.append("--placed")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env, cwd=os.getcwd())
+        if proc.returncode != 0:
+            return {"error": proc.stderr[-2000:], "rc": proc.returncode,
+                    "wall_s": round(time.time() - t0, 1)}
+        return {"ok": True, "wall_s": round(time.time() - t0, 1)}
+    except subprocess.TimeoutExpired:
+        return {"error": f"timeout after {timeout}s",
+                "wall_s": round(time.time() - t0, 1)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--archs", default=",".join(ARCHS))
+    ap.add_argument("--shapes", default=",".join(SHAPE_NAMES))
+    ap.add_argument("--placed", action="store_true")
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    archs = args.archs.split(",")
+    shapes = args.shapes.split(",")
+    total = done = failed = 0
+    for multi_pod in meshes:
+        mdir = os.path.join(args.outdir,
+                            ("multi" if multi_pod else "single")
+                            + ("_placed" if args.placed else ""))
+        os.makedirs(mdir, exist_ok=True)
+        for arch in archs:
+            for shape in shapes:
+                total += 1
+                outpath = os.path.join(mdir, f"{arch}__{shape}.json")
+                if os.path.exists(outpath):
+                    print(f"[skip exists] {mdir}/{arch}/{shape}", flush=True)
+                    done += 1
+                    continue
+                print(f"[run] mesh={'multi' if multi_pod else 'single'} "
+                      f"{arch} {shape} ...", flush=True)
+                res = run_cell(arch, shape, multi_pod, args.placed, outpath,
+                               args.timeout)
+                if res.get("ok"):
+                    done += 1
+                    print(f"  ok in {res['wall_s']}s", flush=True)
+                else:
+                    failed += 1
+                    with open(outpath + ".err", "w") as f:
+                        json.dump(res, f, indent=2)
+                    print(f"  FAILED ({res['wall_s']}s): "
+                          f"{str(res.get('error'))[:300]}", flush=True)
+    print(f"done: {done}/{total}, failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

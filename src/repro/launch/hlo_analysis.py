@@ -1,0 +1,329 @@
+"""Post-SPMD HLO analyzer: loop-aware FLOP / HBM-byte / collective-byte
+accounting.
+
+XLA's compiled.cost_analysis() counts while-loop bodies ONCE, which makes
+scan-over-layers models look ~L-times cheaper than they are. This module
+parses the optimized HLO text, builds the computation call tree (ENTRY ->
+while bodies/conditions, conditionals), reads scan trip counts from
+backend_config known_trip_count, and accumulates:
+
+  * dot/convolution FLOPs   2 * prod(result dims) * prod(contracting dims)
+  * per-op HBM traffic      operand + result bytes of top-level ops
+                            (fusion internals excluded: fusion boundaries
+                            ARE the HBM boundaries in optimized HLO;
+                            dynamic-slice/update-slice count only the
+                            moved slice — XLA updates in place)
+  * collective wire bytes   ring model per kind, x loop multiplier
+
+This is the basis of EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+               "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+               "f32": 4, "s32": 4, "u32": 4,
+               "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*\{\s*$")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(([^)]*)\)")
+_WHILE_ATTR_RE = re.compile(r"condition=%([\w\.\-]+),\s*body=%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_RE = re.compile(r"true_computation=%([\w\.\-]+).*?false_computation=%([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+            "after-all", "partition-id", "replica-id", "iota", "while",
+            "conditional", "call"}
+
+# HBM-traffic accounting approximates TPU fusion behaviour: standalone
+# elementwise/broadcast ops fuse into their producers on TPU (near-zero
+# extra HBM traffic), so only "major" data movers are charged. The CPU
+# backend keeps elementwise ops top-level, which would otherwise inflate
+# the memory term ~10x relative to a real TPU compile.
+MAJOR_HBM_OPS = {"dot", "convolution", "fusion", "reduce", "sort", "scatter",
+                 "gather", "dynamic-slice", "dynamic-update-slice", "copy",
+                 "transpose", "concatenate", "pad", "reduce-window",
+                 "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                 "collective-permute", "collective-broadcast",
+                 "all-gather-start", "all-reduce-start",
+                 "collective-permute-start", "select-and-scatter"}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute", "collective-broadcast")
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    result_text: str
+    opcode: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    is_entry: bool
+    ops: List[_Op]
+    shapes: Dict[str, str]     # symbol -> result type text
+
+
+def _parse(hlo: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry = None
+    cur: Optional[_Comp] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = _Comp(m.group(2), bool(m.group(1)), [], {})
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            name, result_text, opcode, operand_text = om.groups()
+            operands = _OPERAND_RE.findall(operand_text)
+            cur.ops.append(_Op(name, result_text, opcode, operands, line))
+            cur.shapes[name] = result_text
+    return comps, entry
+
+
+def _trip_count(line: str, comps, cond_name: str) -> int:
+    m = _TRIP_RE.search(line)
+    if m:
+        return int(m.group(1))
+    best = 1
+    cond = comps.get(cond_name)
+    if cond:
+        for op in cond.ops:
+            for c in _CONST_RE.findall(op.line):
+                best = max(best, int(c))
+    return best
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_result_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    loop_multipliers: Dict[str, float] = dataclasses.field(default_factory=dict)
+    dot_flops_detail: Dict[str, float] = dataclasses.field(default_factory=dict)
+    top_collective_sites: List[Tuple[float, str, str]] = dataclasses.field(
+        default_factory=list)  # (wire_bytes, kind, op_name metadata)
+    #: result bytes of attention score dots (x loop multipliers). A Pallas
+    #: flash kernel keeps the score chain in VMEM; roofline reports both
+    #: memory_s (as compiled) and memory_s_flash (= memory - ~6x this).
+    attention_score_bytes: float = 0.0
+    #: HBM bytes inside sequential time loops (multiplier >= 512): the
+    #: traffic a time-fused Pallas RNN kernel (kernels/slstm.py) eliminates
+    #: except for one in/out pass.
+    hbm_bytes_seq_loops: float = 0.0
+    #: bytes of bf16<->f32 convert fusions: the CPU backend legalizes bf16
+    #: dots by materializing f32 copies; TPU MXUs consume bf16 natively so
+    #: this traffic does not exist on the target hardware.
+    cpu_convert_bytes: float = 0.0
+
+
+def _dot_flops(op: _Op, comp: _Comp) -> float:
+    res_elems, _ = _shape_elems_bytes(op.result_text)
+    lhs_shape_text = comp.shapes.get(op.operands[0], "") if op.operands else ""
+    sm = _SHAPE_RE.search(lhs_shape_text)
+    lhs_dims = []
+    if sm and sm.group(2):
+        lhs_dims = [int(d) for d in sm.group(2).split(",")]
+    cm = _CONTRACT_RE.search(op.line)
+    contract = 1
+    if cm and cm.group(1):
+        for ci in cm.group(1).split(","):
+            ci = int(ci)
+            if ci < len(lhs_dims):
+                contract *= lhs_dims[ci]
+    elif lhs_dims:
+        contract = lhs_dims[-1]
+    return 2.0 * res_elems * contract
+
+
+def _conv_flops(op: _Op, comp: _Comp) -> float:
+    res_elems, _ = _shape_elems_bytes(op.result_text)
+    if len(op.operands) < 2:
+        return 0.0
+    kshape_text = comp.shapes.get(op.operands[1], "")
+    sm = _SHAPE_RE.search(kshape_text)
+    if not (sm and sm.group(2)):
+        return 0.0
+    kdims = [int(d) for d in sm.group(2).split(",")]
+    kelems = 1
+    for d in kdims:
+        kelems *= d
+    rm = _SHAPE_RE.search(op.result_text)
+    out_feat = 1
+    if rm and rm.group(2):
+        # feature dim unknown from text alone; assume last kernel dim is Cout
+        out_feat = kdims[-1]
+    return 2.0 * res_elems * kelems / max(out_feat, 1)
+
+
+def _op_hbm_bytes(op: _Op, comp: _Comp) -> float:
+    _, res_b = _shape_elems_bytes(op.result_text)
+    if op.opcode == "fusion" and ("dynamic-update-slice" in op.line
+                                  or "dynamic_update_slice" in op.line):
+        # in-place cache update fused with converts: the buffer is aliased,
+        # only the updated slice moves. Charge 2x the smallest real operand
+        # (the update), not the whole cache.
+        ob = [b for o in op.operands
+              for _, b in [_shape_elems_bytes(comp.shapes.get(o, ""))] if b > 0]
+        return 2.0 * min(ob) if ob else res_b
+    if op.opcode in ("dynamic-slice", "gather"):
+        return 2.0 * res_b
+    if op.opcode == "dynamic-update-slice":
+        upd = comp.shapes.get(op.operands[1], "") if len(op.operands) > 1 else ""
+        _, ub = _shape_elems_bytes(upd)
+        return 2.0 * (ub or res_b)
+    if op.opcode == "scatter":
+        upd = comp.shapes.get(op.operands[-1], "") if op.operands else ""
+        _, ub = _shape_elems_bytes(upd)
+        return res_b + 2.0 * (ub or 0)
+    if op.opcode == "copy":
+        return 2.0 * res_b
+    opb = 0
+    for o in op.operands:
+        t = comp.shapes.get(o)
+        if t:
+            _, b = _shape_elems_bytes(t)
+            opb += b
+    return res_b + opb
+
+
+def analyze(hlo: str) -> HloCosts:
+    comps, entry = _parse(hlo)
+    costs = HloCosts()
+    if entry is None:
+        return costs
+
+    # multipliers: walk ENTRY -> while bodies / conditionals
+    mult: Dict[str, float] = {}
+    stack: List[Tuple[str, float]] = [(entry, 1.0)]
+    seen = set()
+    while stack:
+        name, m = stack.pop()
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        mult[name] = mult.get(name, 0.0) + m if name in mult else m
+        if (name, round(m, 6)) in seen:
+            continue
+        seen.add((name, round(m, 6)))
+        for op in comp.ops:
+            if op.opcode == "while":
+                wm = _WHILE_ATTR_RE.search(op.line)
+                if wm:
+                    cond, body = wm.groups()
+                    trips = _trip_count(op.line, comps, cond)
+                    stack.append((body, m * trips))
+                    stack.append((cond, m * (trips + 1)))
+            elif op.opcode == "conditional":
+                bm = _BRANCH_RE.search(op.line)
+                branches = []
+                if bm:
+                    branches = [b.strip().lstrip("%") for b in bm.group(1).split(",") if b.strip()]
+                else:
+                    tm = _TF_RE.search(op.line)
+                    if tm:
+                        branches = list(tm.groups())
+                for b in branches:
+                    stack.append((b, m))  # upper bound: all branches counted
+            elif op.opcode == "call":
+                cm = re.search(r"to_apply=%([\w\.\-]+)", op.line)
+                if cm:
+                    stack.append((cm.group(1), m))
+
+    costs.loop_multipliers = dict(mult)
+
+    for name, m in mult.items():
+        comp = comps[name]
+        for op in comp.ops:
+            kind = op.opcode.replace("-start", "")
+            if op.opcode == "dot":
+                fl = m * _dot_flops(op, comp)
+                costs.flops += fl
+                key = op.name.split(".")[0]
+                costs.dot_flops_detail[key] = costs.dot_flops_detail.get(key, 0) + fl
+                if "bqhgd,bkhd" in op.line or "bhgd,bwhd" in op.line:
+                    _, rb = _shape_elems_bytes(op.result_text)
+                    costs.attention_score_bytes += m * rb
+            elif op.opcode == "convolution":
+                costs.flops += m * _conv_flops(op, comp)
+            if kind in COLLECTIVE_KINDS and not op.opcode.endswith("-done"):
+                _, nbytes = _shape_elems_bytes(op.result_text)
+                if op.opcode.endswith("-start"):
+                    nbytes /= 2  # start result tuples carry (operand, result)
+                gm = _GROUPS_RE.search(op.line)
+                if gm:
+                    gsize = len(gm.group(1).split(","))
+                else:
+                    gm2 = _GROUPS_IOTA_RE.search(op.line)
+                    gsize = int(gm2.group(2)) if gm2 else 2
+                if kind == "all-reduce":
+                    wire = 2 * nbytes * (gsize - 1) / max(gsize, 1)
+                elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+                    wire = nbytes * (gsize - 1) / max(gsize, 1)
+                else:
+                    wire = nbytes
+                costs.collective_wire_bytes += m * wire
+                costs.collective_result_bytes[kind] = (
+                    costs.collective_result_bytes.get(kind, 0.0) + m * nbytes)
+                costs.collective_counts[kind] = (
+                    costs.collective_counts.get(kind, 0.0) + m)
+                nm = re.search(r'op_name="([^"]*)"', op.line)
+                site = (nm.group(1) if nm else op.name)
+                sm = _SHAPE_RE.search(op.result_text)
+                if sm:
+                    site += f" :: {sm.group(1)}[{sm.group(2)}] x{m:.0f} g{gsize}"
+                costs.top_collective_sites.append((m * wire, kind, site))
+            if op.opcode not in MAJOR_HBM_OPS:
+                continue
+            hb = m * _op_hbm_bytes(op, comp)
+            costs.hbm_bytes += hb
+            if m >= 512:
+                costs.hbm_bytes_seq_loops += hb
+            elif op.opcode == "fusion" and (
+                    op.name.startswith("convert")
+                    or op.name.startswith("wrapped_convert")
+                    or "convert_element_type\"" in op.line):
+                costs.cpu_convert_bytes += hb
+    costs.top_collective_sites = sorted(
+        costs.top_collective_sites, reverse=True)[:20]
+    return costs

@@ -1,0 +1,87 @@
+"""ShapeDtypeStruct input stand-ins per (arch x shape) — the dry-run's
+allocation-free batch descriptions, and the matching shardings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.parallel.sharding import active_rules, logical_to_pspec
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract batch for train/prefill, or (tokens, cache) for decode."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def sds(shp, dt=i32):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind == "decode":
+        return {
+            "tokens": sds((b, 1)),
+            "cache": M.init_cache_shapes(cfg, b, s),
+        }
+
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        ft = cfg.frontend_tokens
+        batch["tokens"] = sds((b, s - ft))
+        batch["patch_embeds"] = sds((b, ft, cfg.frontend_dim), jnp.float32)
+    elif cfg.family == "audio":
+        batch["frames"] = sds((b, s, cfg.frontend_dim), jnp.float32)
+    else:
+        batch["tokens"] = sds((b, s))
+    if shape.kind == "train":
+        batch["labels"] = sds((b, s))
+    return batch
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """NamedSharding tree matching input_specs. Dimensions not divisible by
+    their assigned mesh axes are replicated instead (e.g. long_500k's
+    global_batch=1)."""
+    rules = active_rules()
+
+    def shard_for(axes, shp=None):
+        pspec = logical_to_pspec(axes, rules, mesh)
+        if shp is not None:
+            parts = list(pspec)
+            parts += [None] * (len(shp) - len(parts))
+            for i, p in enumerate(parts):
+                if p is None:
+                    continue
+                names = p if isinstance(p, tuple) else (p,)
+                import numpy as _np
+                degree = int(_np.prod([mesh.shape[n] for n in names]))
+                if shp[i] % degree != 0:
+                    parts[i] = None
+            while parts and parts[-1] is None:
+                parts.pop()
+            pspec = P(*parts)
+        return NamedSharding(mesh, pspec)
+
+    if shape.kind == "decode":
+        from repro.models.model import cache_logical_axes
+        cache_ax = cache_logical_axes(cfg)
+        specs = input_specs(cfg, shape)
+        cache_sh = {}
+        for k, v in specs["cache"].items():
+            ax = cache_ax.get(k, ())
+            if k == "index":
+                cache_sh[k] = shard_for(())
+            else:
+                cache_sh[k] = shard_for(ax[: len(v.shape)], v.shape)
+        return {"tokens": shard_for(("batch", None), specs["tokens"].shape),
+                "cache": cache_sh}
+
+    out: Dict[str, Any] = {}
+    specs = input_specs(cfg, shape)
+    for k, v in specs.items():
+        out[k] = shard_for(("batch",) + (None,) * (len(v.shape) - 1), v.shape)
+    return out

@@ -1,0 +1,65 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b \
+        [--smoke] [--steps 100] [--batch 8] [--seq 256] \
+        [--microbatches 1] [--compress-pod-grads] [--ckpt-dir DIR]
+
+On a real TPU pod this binary runs under the cluster's per-host launcher
+(jax.distributed.initialize picks up TPU topology); in this container it
+runs the same code path on CPU. --smoke selects the reduced config.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-pod-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "single", "multi"],
+                    help="'single'/'multi' build the production mesh "
+                         "(requires enough devices)")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.optim import adamw
+    from repro.train.steps import TrainConfig
+    from repro.train.trainer import RunConfig, Trainer
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduce()
+    mesh = None
+    if args.mesh != "none":
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    tc = TrainConfig(
+        microbatches=args.microbatches,
+        compress_pod_grads=args.compress_pod_grads,
+        optimizer=adamw.AdamWConfig(lr=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
+                                    total_steps=args.steps))
+    rc = RunConfig(steps=args.steps, batch=args.batch, seq=args.seq,
+                   ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    trainer = Trainer(cfg, tc, rc, mesh=mesh)
+    _, _, hist = trainer.run(
+        progress=lambda s, row: print(
+            f"step {s:6d} loss={row['loss']:.4f} gnorm={row['grad_norm']:.2f} "
+            f"lr={row['lr']:.2e} skipped={row['skipped_batches']}", flush=True))
+    print(f"finished at step {hist[-1]['step']}, loss {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

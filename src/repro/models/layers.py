@@ -1,0 +1,234 @@
+"""Shared model layers: RMSNorm, RoPE, grouped-query attention (online-
+softmax chunked for long sequences), SwiGLU MLP, embeddings.
+
+All functions are pure; parameters are plain arrays. Sharding is expressed
+through ``parallel.sharding.constrain`` logical annotations so the same code
+serves 1-device smoke tests and the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import constrain, gathered
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Grouped-query attention with online-softmax KV chunking
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _direct_attention(q, k, v, *, causal, window, q_offset, kv_len):
+    """Reference path for short KV / single-token decode.
+    q:(B,Sq,Hk,G,D) k/v:(B,Sk,Hk,D). bf16 operands are contracted with fp32
+    accumulation via preferred_element_type — no materialized fp32 copy of
+    the (potentially cache-sized) K/V (EXPERIMENTS.md §Perf iteration D1).
+    """
+    b, sq, hk, g, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32)
+    s = s * scale
+    qpos = q_offset + jnp.arange(sq)[:, None]  # (Sq, 1)
+    kpos = jnp.arange(sk)[None, :]  # (1, Sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if kv_len is not None:  # (B,) valid prefix lengths (decode w/ cache)
+        vmask = kpos[0][None, :] < kv_len[:, None]  # (B, Sk)
+        s = jnp.where(vmask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, *, causal, window, q_offset, kv_len, chunk):
+    """Online-softmax scan over KV chunks (memory-efficient / flash-style).
+
+    Never materializes the (Sq, Sk) score matrix; peak extra memory is
+    (B, Hk, G, Sq, chunk) fp32.
+    """
+    b, sq, hk, g, d = q.shape
+    sk = k.shape[1]
+    n_chunks = sk // chunk
+    assert sk % chunk == 0, (sk, chunk)
+    scale = 1.0 / math.sqrt(d)
+
+    kc = k.reshape(b, n_chunks, chunk, hk, k.shape[-1])
+    vc = v.reshape(b, n_chunks, chunk, hk, v.shape[-1])
+    kc = jnp.moveaxis(kc, 1, 0)  # (n, B, chunk, Hk, D)
+    vc = jnp.moveaxis(vc, 1, 0)
+
+    qpos = q_offset + jnp.arange(sq)  # (Sq,)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, start = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = start + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        if kv_len is not None:
+            vmask = kpos[None, :] < kv_len[:, None]  # (B, chunk)
+            s = jnp.where(vmask[:, None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l, acc), None
+
+    dv = v.shape[-1]
+    m0 = jnp.full((b, hk, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hk, g, sq, dv), jnp.float32)
+    starts = jnp.arange(n_chunks) * chunk
+    (m, l, acc), _ = lax.scan(body, (m0, l0, acc0), (kc, vc, starts))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    o = jnp.moveaxis(o, (1, 2), (2, 3))  # (B, Sq, Hk, G, D)... from (B,Hk,G,Sq,D)
+    return o.astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,
+    kv_len: Optional[jax.Array] = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Grouped-query attention.
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D); Hq % Hkv == 0.
+    Returns (B, Sq, Hq, D). Uses online-softmax chunking when Sk > 2*chunk.
+    """
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    # single-token decode always takes the direct path: the score tensor is
+    # only (B,H,1,Sk) and chunking would stream fp32 copies of the cache
+    # (§Perf iteration D1).
+    if sq > 1 and k.shape[1] > 2 * chunk and k.shape[1] % chunk == 0:
+        o = _chunked_attention(
+            qg, k, v, causal=causal, window=window, q_offset=q_offset,
+            kv_len=kv_len, chunk=chunk,
+        )
+    else:
+        o = _direct_attention(
+            qg, k, v, causal=causal, window=window, q_offset=q_offset, kv_len=kv_len
+        )
+    return o.reshape(b, sq, hq, o.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# MLP / embeddings
+# ---------------------------------------------------------------------------
+
+
+def swiglu_mlp(x, w_gate, w_up, w_down):
+    """SwiGLU: silu(x W_g) * (x W_u) W_d, with TP sharding on d_ff and
+    explicit FSDP weight gathering (§Perf P1)."""
+    w_gate = gathered(w_gate, ("fsdp", "tp"))
+    w_up = gathered(w_up, ("fsdp", "tp"))
+    w_down = gathered(w_down, ("tp_in", "fsdp"))
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = constrain(h, ("batch", "act_q_seq", "act_tp"))
+    return h @ w_down
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = jax.nn.gelu(x @ w_in + b_in)
+    h = constrain(h, ("batch", None, "act_tp"))
+    return h @ w_out + b_out
+
+
+def embed(tokens, table):
+    """tokens: (B, S) int32 -> (B, S, D)."""
+    return jnp.take(table, tokens, axis=0)
+
+
+def logits(x, unembed_table, real_vocab: Optional[int] = None):
+    """x:(B,S,D) @ (D,Vpad) -> (B,S,Vpad); padded entries masked to -inf."""
+    out = x @ unembed_table
+    out = constrain(out, ("batch", None, "embed_vocab"))
+    if real_vocab is not None and real_vocab < out.shape[-1]:
+        col = jnp.arange(out.shape[-1])
+        out = jnp.where(col[None, None, :] < real_vocab, out, NEG_INF)
+    return out
+
+
+def cross_entropy_loss(lgts, labels, real_vocab: int):
+    """Mean next-token CE over valid labels (label == -1 is padding)."""
+    lgts = lgts.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lgts, axis=-1)
+    valid = labels >= 0
+    safe_labels = jnp.where(valid, labels, 0)
+    picked = jnp.take_along_axis(lgts, safe_labels[..., None], axis=-1)[..., 0]
+    nll = (lse - picked) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)

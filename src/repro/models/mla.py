@@ -1,0 +1,119 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Queries and KV are projected through low-rank latents; the KV cache stores
+only the 512-d compressed latent + 64-d shared rope key. Prefill/train use
+the materialized form; decode uses the absorbed form (W_uk folded into the
+query, W_uv folded into the output) so per-step work is O(S * kv_lora).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common import ParamSpec
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel.sharding import constrain
+
+
+def mla_specs(cfg: ModelConfig, n: int) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = cfg.jnp_dtype
+    return {
+        "wdq": ParamSpec((n, d, qr), ("layers", "fsdp", None), "normal", dt),
+        "q_norm": ParamSpec((n, qr), ("layers", None), "ones", dt),
+        "wuq": ParamSpec((n, qr, h * (dn + dr)), ("layers", "fsdp", "tp"), "normal", dt),
+        "wdkv": ParamSpec((n, d, kvr), ("layers", "fsdp", None), "normal", dt),
+        "kv_norm": ParamSpec((n, kvr), ("layers", None), "ones", dt),
+        "wkr": ParamSpec((n, d, dr), ("layers", "fsdp", None), "normal", dt),
+        "wuk": ParamSpec((n, kvr, h * dn), ("layers", None, "tp"), "normal", dt),
+        "wuv": ParamSpec((n, kvr, h * dv), ("layers", None, "tp"), "normal", dt),
+        "wo": ParamSpec((n, h * dv, d), ("layers", "tp_in", "fsdp"), "normal", dt),
+    }
+
+
+def _project_q(cfg, p, x, positions):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = L.rms_norm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(cfg, p, x, positions):
+    ckv = L.rms_norm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)  # (B,S,kvr)
+    krope = x @ p["wkr"]                                          # (B,S,dr)
+    krope = L.apply_rope(krope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return ckv, krope
+
+
+def apply_mla(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    kv_cache: Optional[dict] = None,
+    cache_index=None,
+):
+    """Returns (out, new_cache). Cache: {'ckv': (B,Smax,kvr), 'krope': (B,Smax,dr)}."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+
+    q_nope, q_rope = _project_q(cfg, p, x, positions)
+    ckv, krope = _latents(cfg, p, x, positions)
+
+    if kv_cache is not None and s == 1:
+        # ---- absorbed decode ----
+        cckv = lax.dynamic_update_slice(kv_cache["ckv"], ckv, (0, cache_index, 0))
+        ckr = lax.dynamic_update_slice(kv_cache["krope"], krope, (0, cache_index, 0))
+        new_cache = {"ckv": cckv, "krope": ckr}
+        wuk = p["wuk"].reshape(kvr, h, dn)
+        # fold W_uk into q: (B,1,H,dn) x (kvr,H,dn) -> (B,1,H,kvr)
+        q_lat = jnp.einsum("bshd,khd->bshk", q_nope, wuk)
+        scores = jnp.einsum("bshk,btk->bhst", q_lat.astype(jnp.float32),
+                            cckv.astype(jnp.float32))
+        scores += jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                             ckr.astype(jnp.float32))
+        scores *= (dn + dr) ** -0.5
+        t_idx = jnp.arange(cckv.shape[1])
+        valid = t_idx[None, :] <= cache_index
+        scores = jnp.where(valid[:, None, None, :], scores, L.NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx_lat = jnp.einsum("bhst,btk->bshk", probs, cckv.astype(jnp.float32))
+        wuv = p["wuv"].reshape(kvr, h, dv)
+        o = jnp.einsum("bshk,khd->bshd", ctx_lat, wuv.astype(jnp.float32))
+        o = o.astype(x.dtype).reshape(b, s, h * dv)
+        o = constrain(o, ("batch", None, "act_tp"))
+        return o @ p["wo"], new_cache
+
+    # ---- materialized train/prefill ----
+    if kv_cache is not None:
+        ckv_full = lax.dynamic_update_slice(kv_cache["ckv"], ckv, (0, cache_index, 0))
+        kr_full = lax.dynamic_update_slice(kv_cache["krope"], krope, (0, cache_index, 0))
+        new_cache = {"ckv": ckv_full, "krope": kr_full}
+        kv_len = jnp.full((b,), cache_index + s, jnp.int32)
+    else:
+        ckv_full, kr_full = ckv, krope
+        new_cache = None
+        kv_len = None
+    sk = ckv_full.shape[1]
+    k_nope = (ckv_full @ p["wuk"]).reshape(b, sk, h, dn)
+    v = (ckv_full @ p["wuv"]).reshape(b, sk, h, dv)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_full[:, :, None, :], (b, sk, h, dr))], axis=-1
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = L.attention(q, k, v, causal=True, q_offset=cache_index or 0, kv_len=kv_len)
+    o = constrain(o.reshape(b, s, h * dv), ("batch", None, "act_tp"))
+    return o @ p["wo"], new_cache

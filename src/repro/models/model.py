@@ -1,0 +1,355 @@
+"""Top-level model assembly for every assigned architecture family.
+
+API (all pure functions of (cfg, params, ...)):
+  param_specs(cfg)                      -> ParamSpec tree
+  forward(cfg, params, batch, mesh)     -> (logits, aux_loss)   [train/prefill]
+  init_cache_shapes(cfg, batch, maxlen) -> ShapeDtypeStruct tree
+  prefill(cfg, params, batch, cache, mesh)     -> (last_logits, cache)
+  decode_step(cfg, params, tokens, cache, mesh) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common import ParamSpec
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import recurrent as REC
+from repro.models import transformer as T
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def _embedding_specs(cfg: ModelConfig) -> dict:
+    dt = cfg.jnp_dtype
+    s = {
+        "embed": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                           ("embed_vocab", "embed_d"), "normal", dt),
+        "final_norm": ParamSpec((cfg.d_model,), (None,), "ones", dt),
+    }
+    if not cfg.tie_embeddings:
+        s["unembed"] = ParamSpec((cfg.d_model, cfg.padded_vocab),
+                                 ("embed_d", "embed_vocab"), "normal", dt)
+    return s
+
+
+def _hybrid_layout(cfg: ModelConfig):
+    """(n_super, remainder_pattern) for pattern-tiled hybrid archs."""
+    pat = cfg.block_pattern
+    n_super = cfg.num_layers // len(pat)
+    rem = cfg.num_layers - n_super * len(pat)
+    return n_super, pat[:rem]
+
+
+def _xlstm_layout(cfg: ModelConfig):
+    """xlstm: superblock = 1 sLSTM + (slstm_every-1) mLSTM."""
+    per = cfg.slstm_every
+    assert cfg.num_layers % per == 0
+    return cfg.num_layers // per, per - 1
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    specs: Dict[str, Any] = _embedding_specs(cfg)
+    n = cfg.num_layers
+    if cfg.family in ("dense", "vlm", "audio"):
+        specs["blocks"] = T.block_specs(cfg, n)
+        if cfg.family == "vlm":
+            dt = cfg.jnp_dtype
+            specs["projector"] = {
+                "w1": ParamSpec((cfg.frontend_dim, cfg.d_model), (None, "fsdp"), "normal", dt),
+                "b1": ParamSpec((cfg.d_model,), (None,), "zeros", dt),
+                "w2": ParamSpec((cfg.d_model, cfg.d_model), ("fsdp", None), "normal", dt),
+                "b2": ParamSpec((cfg.d_model,), (None,), "zeros", dt),
+            }
+        if cfg.family == "audio":
+            specs["frontend_proj"] = ParamSpec(
+                (cfg.frontend_dim, cfg.d_model), (None, "fsdp"), "normal", cfg.jnp_dtype)
+    elif cfg.family == "moe":
+        nd, nm = cfg.num_dense_layers, n - cfg.num_dense_layers
+        ep = cfg.num_experts % 16 == 0  # production model-axis = 16
+        attn_fn = MLA.mla_specs if cfg.use_mla else T.attn_specs
+        if nd:
+            specs["dense_blocks"] = {
+                "ln1": ParamSpec((nd, cfg.d_model), ("layers", None), "ones", cfg.jnp_dtype),
+                "ln2": ParamSpec((nd, cfg.d_model), ("layers", None), "ones", cfg.jnp_dtype),
+                "attn": attn_fn(cfg, nd),
+                "mlp": T.mlp_specs(cfg, nd),
+            }
+        specs["moe_blocks"] = {
+            "ln1": ParamSpec((nm, cfg.d_model), ("layers", None), "ones", cfg.jnp_dtype),
+            "ln2": ParamSpec((nm, cfg.d_model), ("layers", None), "ones", cfg.jnp_dtype),
+            "attn": attn_fn(cfg, nm),
+            "moe": MOE.moe_specs(cfg, nm, ep),
+        }
+        if cfg.mtp_depth:
+            mtp_cfg = cfg
+            specs["mtp"] = {
+                "proj": ParamSpec((2 * cfg.d_model, cfg.d_model), ("fsdp", None),
+                                  "normal", cfg.jnp_dtype),
+                "ln": ParamSpec((cfg.d_model,), (None,), "ones", cfg.jnp_dtype),
+                "block": {
+                    "ln1": ParamSpec((1, cfg.d_model), ("layers", None), "ones", cfg.jnp_dtype),
+                    "ln2": ParamSpec((1, cfg.d_model), ("layers", None), "ones", cfg.jnp_dtype),
+                    "attn": attn_fn(cfg, 1),
+                    "mlp": T.mlp_specs(cfg, 1),
+                },
+            }
+    elif cfg.family == "hybrid":
+        n_super, rem = _hybrid_layout(cfg)
+        super_specs = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            if kind == "rec":
+                super_specs[f"l{j}_rec"] = REC.rglru_specs(cfg, n_super)
+            else:
+                super_specs[f"l{j}_attn"] = T.block_specs(cfg, n_super)
+        specs["superblocks"] = super_specs
+        for j, kind in enumerate(rem):
+            specs[f"rem{j}"] = (REC.rglru_specs(cfg, 1) if kind == "rec"
+                                else T.block_specs(cfg, 1))
+    elif cfg.family == "ssm":
+        n_super, n_m = _xlstm_layout(cfg)
+        specs["superblocks"] = {
+            "slstm": REC.slstm_specs(cfg, n_super),
+            "mlstm": REC.mlstm_specs(cfg, n_super * n_m),  # (n_super*n_m) flat
+        }
+    else:
+        raise ValueError(cfg.family)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Input embedding per family
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(cfg: ModelConfig, params, batch) -> jax.Array:
+    if cfg.family == "vlm":
+        txt = L.embed(batch["tokens"], params["embed"])
+        pj = params["projector"]
+        vis = jax.nn.gelu(batch["patch_embeds"].astype(cfg.jnp_dtype) @ pj["w1"] + pj["b1"])
+        vis = vis @ pj["w2"] + pj["b2"]
+        x = jnp.concatenate([vis, txt], axis=1)
+    elif cfg.family == "audio":
+        x = batch["frames"].astype(cfg.jnp_dtype) @ params["frontend_proj"]
+    else:
+        x = L.embed(batch["tokens"], params["embed"])
+    return constrain(x, ("batch", "act_q_seq", None))
+
+
+def positions_for(cfg, x, offset=0):
+    b, s = x.shape[:2]
+    return offset + jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / full-sequence)
+# ---------------------------------------------------------------------------
+
+
+def _moe_block(cfg, p, x, positions, mesh, *, kv_cache=None, cache_index=None):
+    attn = MLA.apply_mla if cfg.use_mla else T.apply_attn
+    h, new_cache = attn(cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                        positions, kv_cache=kv_cache, cache_index=cache_index)
+    x = x + h
+    xn = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, aux = MOE.apply_moe(cfg, p["moe"], xn, mesh)
+    if cfg.num_shared_experts:
+        sh = p["moe"]["shared"]
+        y = y + L.swiglu_mlp(xn, sh["wg"], sh["wu"], sh["wd"])
+    return constrain(x + y, ("batch", None, None)), aux, new_cache
+
+
+def forward(cfg: ModelConfig, params, batch, mesh=None, return_hidden=False):
+    """Full-sequence forward -> (logits, aux_loss)."""
+    x = embed_inputs(cfg, params, batch)
+    positions = positions_for(cfg, x)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        x, _ = T.scan_dense_blocks(cfg, params["blocks"], x, positions)
+    elif cfg.family == "moe":
+        if cfg.num_dense_layers:
+            if cfg.use_mla:
+                def dbody(xv, p):
+                    h, _ = MLA.apply_mla(
+                        cfg, p["attn"], L.rms_norm(xv, p["ln1"], cfg.norm_eps),
+                        positions)
+                    xv = xv + h
+                    xv = xv + L.swiglu_mlp(
+                        L.rms_norm(xv, p["ln2"], cfg.norm_eps),
+                        p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+                    return constrain(xv, ("batch", None, None)), None
+
+                dbody = T._maybe_remat(dbody, cfg)
+                x, _ = lax.scan(dbody, x, params["dense_blocks"])
+            else:
+                x, _ = T.scan_dense_blocks(cfg, params["dense_blocks"], x, positions)
+
+        def body(carry, p):
+            xv, aux = carry
+            out, a, _ = _moe_block(cfg, p, xv, positions, mesh)
+            return (out, aux + a), None
+
+        body = T._maybe_remat(body, cfg)
+        (x, aux_total), _ = lax.scan(body, (x, aux_total), params["moe_blocks"])
+    elif cfg.family == "hybrid":
+        n_super, rem = _hybrid_layout(cfg)
+
+        def body(xv, p):
+            for j, kind in enumerate(cfg.block_pattern):
+                if kind == "rec":
+                    xv, _ = REC.apply_rglru_block(cfg, p[f"l{j}_rec"], xv)
+                else:
+                    xv, _ = T.apply_block(cfg, p[f"l{j}_attn"], xv, positions,
+                                          window=cfg.attn_window)
+            return xv, None
+
+        body = T._maybe_remat(body, cfg)
+        x, _ = lax.scan(body, x, params["superblocks"])
+        for j, kind in enumerate(rem):
+            p1 = jax.tree.map(lambda a: a[0], params[f"rem{j}"])
+            if kind == "rec":
+                x, _ = REC.apply_rglru_block(cfg, p1, x)
+            else:
+                x, _ = T.apply_block(cfg, p1, x, positions, window=cfg.attn_window)
+    elif cfg.family == "ssm":
+        n_super, n_m = _xlstm_layout(cfg)
+        sb = params["superblocks"]
+        mlstm_grouped = jax.tree.map(
+            lambda a: a.reshape(n_super, n_m, *a.shape[1:]), sb["mlstm"])
+
+        def body(xv, p):
+            p_s, p_m = p
+            xv, _ = REC.apply_slstm_block(cfg, p_s, xv)
+
+            def inner(xc, pm):
+                out, _ = REC.apply_mlstm_block(cfg, pm, xc)
+                return out, None
+
+            xv, _ = lax.scan(inner, xv, p_m)
+            return xv, None
+
+        body = T._maybe_remat(body, cfg)
+        x, _ = lax.scan(body, x, (sb["slstm"], mlstm_grouped))
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux_total
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    lgts = L.logits(x, unembed, cfg.vocab_size)
+    return lgts, aux_total
+
+
+def unembed_logits(cfg: ModelConfig, params, x):
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    return L.logits(x, unembed, cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache_shapes(cfg: ModelConfig, batch_size: int, max_len: int):
+    """ShapeDtypeStruct tree for the decode cache (dry-run friendly)."""
+    dt = cfg.jnp_dtype
+    n = cfg.num_layers
+    f32 = jnp.float32
+
+    def sds(shape, dtype=dt):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    cache: Dict[str, Any] = {"index": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.family in ("dense", "vlm"):
+        cache["k"] = sds((n, batch_size, max_len, cfg.num_kv_heads, cfg.hd))
+        cache["v"] = sds((n, batch_size, max_len, cfg.num_kv_heads, cfg.hd))
+    elif cfg.family == "moe":
+        nd, nm = cfg.num_dense_layers, n - cfg.num_dense_layers
+        if cfg.use_mla:
+            for pre, cnt in (("d", nd), ("m", nm)):
+                if cnt:
+                    cache[f"{pre}_ckv"] = sds((cnt, batch_size, max_len, cfg.kv_lora_rank))
+                    cache[f"{pre}_krope"] = sds((cnt, batch_size, max_len, cfg.qk_rope_head_dim))
+        else:
+            for pre, cnt in (("d", nd), ("m", nm)):
+                if cnt:
+                    cache[f"{pre}_k"] = sds((cnt, batch_size, max_len, cfg.num_kv_heads, cfg.hd))
+                    cache[f"{pre}_v"] = sds((cnt, batch_size, max_len, cfg.num_kv_heads, cfg.hd))
+    elif cfg.family == "hybrid":
+        n_super, rem = _hybrid_layout(cfg)
+        w = min(max_len, cfg.attn_window or max_len)
+        n_attn = sum(1 for k in cfg.block_pattern if k == "attn") * n_super \
+            + sum(1 for k in rem if k == "attn")
+        n_rec = sum(1 for k in cfg.block_pattern if k == "rec") * n_super \
+            + sum(1 for k in rem if k == "rec")
+        cache["k"] = sds((n_attn, batch_size, w, cfg.num_kv_heads, cfg.hd))
+        cache["v"] = sds((n_attn, batch_size, w, cfg.num_kv_heads, cfg.hd))
+        cache["slot_pos"] = jax.ShapeDtypeStruct((w,), jnp.int32)
+        cache["lru_h"] = sds((n_rec, batch_size, cfg.lru_width), f32)
+        cache["conv"] = sds((n_rec, batch_size, cfg.conv1d_width - 1, cfg.lru_width))
+    elif cfg.family == "ssm":
+        inner = 2 * cfg.d_model
+        dh = inner // cfg.num_heads
+        n_super, n_m = _xlstm_layout(cfg)
+        nm_total = n_super * n_m
+        cache["m_C"] = sds((nm_total, batch_size, cfg.num_heads, dh, dh), f32)
+        cache["m_n"] = sds((nm_total, batch_size, cfg.num_heads, dh), f32)
+        cache["m_m"] = sds((nm_total, batch_size, cfg.num_heads), f32)
+        cache["m_conv"] = sds((nm_total, batch_size, cfg.conv1d_width - 1, inner))
+        cache["s_h"] = sds((n_super, batch_size, cfg.d_model), f32)
+        cache["s_c"] = sds((n_super, batch_size, cfg.d_model), f32)
+        cache["s_n"] = sds((n_super, batch_size, cfg.d_model), f32)
+        cache["s_m"] = sds((n_super, batch_size, cfg.d_model), f32)
+    return cache
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    shapes = init_cache_shapes(cfg, batch_size, max_len)
+
+    def zero(s):
+        if s.shape == () and s.dtype == jnp.int32:
+            return jnp.zeros((), jnp.int32)
+        return jnp.zeros(s.shape, s.dtype)
+
+    z = jax.tree.map(zero, shapes)
+    if "slot_pos" in z:
+        z["slot_pos"] = jnp.full_like(z["slot_pos"], -1)
+    return z
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    """Logical sharding axes for each cache entry (serve path)."""
+    ax: Dict[str, tuple] = {"index": ()}
+    if cfg.family in ("dense", "vlm"):
+        ax["k"] = ax["v"] = ("layers", "batch", "kv_seq", None, None)
+    elif cfg.family == "moe":
+        for key in ("d_ckv", "m_ckv", "d_krope", "m_krope"):
+            ax[key] = ("layers", "batch", "kv_seq", None)
+        for key in ("d_k", "d_v", "m_k", "m_v"):
+            ax[key] = ("layers", "batch", "kv_seq", None, None)
+    elif cfg.family == "hybrid":
+        ax["k"] = ax["v"] = ("layers", "batch", None, None, None)
+        ax["slot_pos"] = (None,)
+        ax["lru_h"] = ("layers", "batch", "act_tp")
+        ax["conv"] = ("layers", "batch", None, "act_tp")
+    elif cfg.family == "ssm":
+        ax["m_C"] = ("layers", "batch", "act_tp", None, None)
+        ax["m_n"] = ("layers", "batch", "act_tp", None)
+        ax["m_m"] = ("layers", "batch", "act_tp")
+        ax["m_conv"] = ("layers", "batch", None, None)
+        for key in ("s_h", "s_c", "s_n", "s_m"):
+            ax[key] = ("layers", "batch", None)
+    return ax

@@ -1,0 +1,262 @@
+"""Mixture-of-Experts FFN.
+
+Two distribution modes (DESIGN.md §5):
+  * EP   — experts sharded over the 'model' axis; tokens sequence-sharded,
+           sort-based ragged dispatch into an (E, C, d) capacity buffer,
+           all-to-all over 'model' to deliver tokens to their experts, FFN,
+           inverse all-to-all, unsort + weighted combine. Used when
+           num_experts divides the model-axis size (deepseek-v3: 256 % 16).
+  * TP   — experts replicated over 'model' but their d_ff sharded (partial
+           FFN + psum). Used when experts don't divide the axis
+           (granite-moe: 40 experts).
+
+Both paths run inside shard_map so collectives are explicit — the
+congestion-aware placement pass (core/placement.py) reads these volumes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.common import ParamSpec
+from repro.configs.base import ModelConfig
+
+
+def moe_specs(cfg: ModelConfig, n: int, ep: bool) -> dict:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.d_ff_expert
+    dt = cfg.jnp_dtype
+    exp_axes = ("layers", "expert", "fsdp", None) if ep else ("layers", None, "fsdp", "tp")
+    exp_axes_dn = ("layers", "expert", None, "fsdp") if ep else ("layers", None, "tp_in", "fsdp")
+    s = {
+        "router": ParamSpec((n, d, e), ("layers", None, None), "normal", jnp.float32),
+        "wg": ParamSpec((n, e, d, f), exp_axes, "normal", dt),
+        "wu": ParamSpec((n, e, d, f), exp_axes, "normal", dt),
+        "wd": ParamSpec((n, e, f, d), exp_axes_dn, "normal", dt),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        s["shared"] = {
+            "wg": ParamSpec((n, d, fs), ("layers", "fsdp", "tp"), "normal", dt),
+            "wu": ParamSpec((n, d, fs), ("layers", "fsdp", "tp"), "normal", dt),
+            "wd": ParamSpec((n, fs, d), ("layers", "tp_in", "fsdp"), "normal", dt),
+        }
+    return s
+
+
+def ep_capable(cfg: ModelConfig, model_axis: int) -> bool:
+    return cfg.num_experts % max(model_axis, 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# Routing + dispatch helpers (run per-shard inside shard_map)
+# ---------------------------------------------------------------------------
+
+
+def route(cfg: ModelConfig, x_flat: jax.Array, w_router: jax.Array):
+    """x_flat: (t, d) -> top-k ids (t, k), weights (t, k), aux load loss."""
+    logits = x_flat.astype(jnp.float32) @ w_router.astype(jnp.float32)
+    if cfg.name.startswith("deepseek"):
+        # sigmoid scoring, top-k then normalize (aux-loss-free style)
+        scores = jax.nn.sigmoid(logits)
+        w, ids = lax.top_k(scores, cfg.top_k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+        probs = scores / jnp.maximum(jnp.sum(scores, -1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, -1)
+        w, ids = lax.top_k(probs, cfg.top_k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    # switch-style load balance aux (informational for sigmoid routers)
+    e = logits.shape[-1]
+    me = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(ids[:, 0], e, dtype=jnp.float32)
+    ce = jnp.mean(one_hot, axis=0)
+    aux = e * jnp.sum(me * ce)
+    return ids, w, aux
+
+
+def _dispatch_indices(ids: jax.Array, num_experts: int, capacity: int):
+    """ids: (t, k) -> flat buffer indices (t*k,) into (E*C), OOB => dropped."""
+    tk = ids.size
+    flat = ids.reshape(-1)
+    order = jnp.argsort(flat)                      # stable
+    sorted_e = flat[order]
+    counts = jnp.bincount(flat, length=num_experts)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(tk, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    buf_idx = jnp.where(
+        pos < capacity, sorted_e * capacity + pos, num_experts * capacity
+    )
+    return order, buf_idx
+
+
+def _expert_ffn(xe, wg, wu, wd):
+    """xe: (E, C, d); weights (E, d, f)/(E, f, d)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg)) * jnp.einsum(
+        "ecd,edf->ecf", xe, wu
+    )
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def _moe_local(cfg, x, w_router, wg, wu, wd, capacity_factor, axis=None):
+    """Per-shard MoE body. x: (t, d) local tokens; weights local slices.
+
+    axis: None = experts fully local (TP mode handles psum outside);
+          'model' = EP all-to-all over that axis.
+    """
+    t, d = x.shape
+    e = cfg.num_experts
+    ids, w, aux = route(cfg, x, w_router)
+    cap = max(4, math.ceil(t * cfg.top_k * capacity_factor / e))
+    order, buf_idx = _dispatch_indices(ids, e, cap)
+    xk = jnp.repeat(x, cfg.top_k, axis=0)[order]   # (t*k, d) in sorted order
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[buf_idx].set(xk, mode="drop")
+    buf = buf[:-1].reshape(e, cap, d)
+
+    if axis is not None:
+        m = lax.axis_size(axis)
+        buf = lax.all_to_all(buf, axis, split_axis=0, concat_axis=1, tiled=True)
+        y = _expert_ffn(buf, wg, wu, wd)           # (e/m, cap*m, d)
+        y = lax.all_to_all(y, axis, split_axis=1, concat_axis=0, tiled=True)
+    else:
+        y = _expert_ffn(buf, wg, wu, wd)
+
+    y_flat = y.reshape(e * cap, d)
+    gathered = y_flat.at[buf_idx].get(mode="fill", fill_value=0)  # (t*k, d)
+    unsorted = jnp.zeros_like(gathered).at[order].set(gathered)
+    out = jnp.sum(
+        unsorted.reshape(t, cfg.top_k, d) * w[..., None].astype(x.dtype), axis=1
+    )
+    return out, aux
+
+
+def apply_moe(cfg: ModelConfig, p: dict, x: jax.Array, mesh, *,
+              capacity_factor: float = None):
+    """x: (B, S, d) -> (B, S, d), aux. Dispatches EP or TP per mesh/config."""
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    b, s, d = x.shape
+    if mesh is None or "model" not in mesh.axis_names:
+        out, aux = _moe_local(
+            cfg, x.reshape(-1, d), p["router"][...], p["wg"], p["wu"], p["wd"],
+            capacity_factor,
+        )
+        return out.reshape(b, s, d), aux
+
+    batch_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    ep = ep_capable(cfg, mesh.shape["model"])
+    seq_shardable = s % mesh.shape["model"] == 0 and s > 1
+    if ep and not seq_shardable:
+        # Decode (s==1), §Perf M1: expert weights stay 2D-sharded
+        # (expert -> model, d -> data/fsdp); the TOKENS move instead:
+        # all-gather tokens over 'data' (MBs), compute partial-d expert
+        # FFN locally, psum the hidden over 'data', and psum expert
+        # contributions over 'model'. The baseline gathered the fsdp dim
+        # of every expert weight per step (~150 GB/device/step on
+        # deepseek-v3 — the dominant collective term).
+        dp_axis = "data"
+        in_specs = (
+            P(batch_axes, None, None),
+            P(None, None),
+            P("model", dp_axis, None),   # wg: (E, d, f)
+            P("model", dp_axis, None),   # wu
+            P("model", None, dp_axis),   # wd: (E, f, d)
+        )
+        out_specs = (P(batch_axes, None, None), P())
+
+        def body(xs, wr, wg, wu, wd):
+            bl, sl, _ = xs.shape
+            xf = xs.reshape(-1, d)
+            xall = lax.all_gather(xf, dp_axis, axis=0, tiled=True)  # (T, d)
+            if "pod" in batch_axes and "pod" in mesh.axis_names:
+                xall = lax.all_gather(xall, "pod", axis=0, tiled=True)
+            t = xall.shape[0]
+            ids, w, aux = route(cfg, xall, wr)
+            e = cfg.num_experts
+            cap = max(4, math.ceil(t * cfg.top_k * capacity_factor / e))
+            order, buf_idx = _dispatch_indices(ids, e, cap)
+            xk = jnp.repeat(xall, cfg.top_k, axis=0)[order]
+            buf = jnp.zeros((e * cap + 1, d), xf.dtype).at[buf_idx].set(
+                xk, mode="drop")[:-1].reshape(e, cap, d)
+            el = e // lax.axis_size("model")
+            rank_e = lax.axis_index("model")
+            dsl = d // lax.axis_size(dp_axis)
+            rank_d = lax.axis_index(dp_axis)
+            local = lax.dynamic_slice_in_dim(buf, rank_e * el, el, axis=0)
+            local_d = lax.dynamic_slice_in_dim(local, rank_d * dsl, dsl, axis=2)
+            # partial-d contraction + psum over data completes the hidden
+            hg = jnp.einsum("ecd,edf->ecf", local_d, wg)
+            hu = jnp.einsum("ecd,edf->ecf", local_d, wu)
+            hg = lax.psum(hg, dp_axis)
+            hu = lax.psum(hu, dp_axis)
+            hh = jax.nn.silu(hg) * hu
+            y_ld = jnp.einsum("ecf,efd->ecd", hh, wd)     # (el, cap, d/dp)
+            y_local = lax.all_gather(y_ld, dp_axis, axis=2, tiled=True)
+            y = jnp.zeros((e, cap, d), y_local.dtype)
+            y = lax.dynamic_update_slice_in_dim(y, y_local, rank_e * el, axis=0)
+            y_flat = y.reshape(e * cap, d)
+            gathered = y_flat.at[buf_idx].get(mode="fill", fill_value=0)
+            unsorted = jnp.zeros_like(gathered).at[order].set(gathered)
+            out_all = jnp.sum(
+                unsorted.reshape(t, cfg.top_k, d) * w[..., None].astype(xf.dtype),
+                axis=1,
+            )
+            out_all = lax.psum(out_all, "model")
+            # slice back this data-shard's tokens
+            tl = xf.shape[0]
+            offset = rank_d * tl
+            if "pod" in batch_axes and "pod" in mesh.axis_names:
+                offset = (lax.axis_index("pod") * lax.axis_size(dp_axis)
+                          + rank_d) * tl
+            out = lax.dynamic_slice_in_dim(out_all, offset, tl, axis=0)
+            aux = lax.pmean(aux, ("model",) + batch_axes)
+            return out.reshape(bl, sl, d), aux
+
+        fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)
+        return fn(x, p["router"], p["wg"], p["wu"], p["wd"])
+    if ep:
+        in_specs = (
+            P(batch_axes, "model", None),              # x: tokens seq-sharded
+            P(None, None),                             # router replicated
+            P("model", None, None),                    # experts over model
+            P("model", None, None),
+            P("model", None, None),
+        )
+        out_specs = (P(batch_axes, "model", None), P())
+
+        def body(xs, wr, wg, wu, wd):
+            bl, sl, _ = xs.shape
+            out, aux = _moe_local(
+                cfg, xs.reshape(-1, d), wr, wg, wu, wd, capacity_factor,
+                axis="model",
+            )
+            aux = lax.pmean(aux, ("model",) + batch_axes)
+            return out.reshape(bl, sl, d), aux
+    else:
+        in_specs = (
+            P(batch_axes, None, None),                 # x replicated on model
+            P(None, None),
+            P(None, None, "model"),                    # d_ff sharded
+            P(None, None, "model"),
+            P(None, "model", None),
+        )
+        out_specs = (P(batch_axes, None, None), P())
+
+        def body(xs, wr, wg, wu, wd):
+            bl, sl, _ = xs.shape
+            out, aux = _moe_local(
+                cfg, xs.reshape(-1, d), wr, wg, wu, wd, capacity_factor,
+            )
+            out = lax.psum(out, "model")
+            aux = lax.pmean(aux, ("model",) + batch_axes)
+            return out.reshape(bl, sl, d), aux
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_vma=False)
+    return fn(x, p["router"], p["wg"], p["wu"], p["wd"])

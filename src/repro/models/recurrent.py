@@ -1,0 +1,331 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and xLSTM (sLSTM/mLSTM).
+
+TPU adaptation note (DESIGN.md §2): Griffin's RG-LRU is a *linear*
+recurrence, so training uses jax.lax.associative_scan (log-depth on the
+sequence) instead of a sequential loop — the TPU-native counterpart of the
+paper's fully-unrolled RNN-on-GEMM mapping. Decode is a single fused step
+with O(1) state, which is what makes long_500k feasible for these archs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common import ParamSpec
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+_LRU_C = 8.0
+
+
+def rglru_specs(cfg: ModelConfig, n: int) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    dt = cfg.jnp_dtype
+    return {
+        "ln": ParamSpec((n, d), ("layers", None), "ones", dt),
+        "w_gate_in": ParamSpec((n, d, w), ("layers", "fsdp", "tp"), "normal", dt),
+        "w_rec_in": ParamSpec((n, d, w), ("layers", "fsdp", "tp"), "normal", dt),
+        "conv_w": ParamSpec((n, cfg.conv1d_width, w), ("layers", None, "tp"), "normal", dt),
+        "conv_b": ParamSpec((n, w), ("layers", "tp"), "zeros", dt),
+        "w_a": ParamSpec((n, w, w), ("layers", "fsdp", "tp"), "normal", dt),
+        "w_i": ParamSpec((n, w, w), ("layers", "fsdp", "tp"), "normal", dt),
+        "lam": ParamSpec((n, w), ("layers", "tp"), ("uniform", 1.0), jnp.float32),
+        "w_out": ParamSpec((n, w, d), ("layers", "tp_in", "fsdp"), "normal", dt),
+        "mlp": {
+            "w_gate": ParamSpec((n, d, cfg.d_ff), ("layers", "fsdp", "tp"), "normal", dt),
+            "w_up": ParamSpec((n, d, cfg.d_ff), ("layers", "fsdp", "tp"), "normal", dt),
+            "w_down": ParamSpec((n, cfg.d_ff, d), ("layers", "tp_in", "fsdp"), "normal", dt),
+        },
+        "ln2": ParamSpec((n, d), ("layers", None), "ones", dt),
+    }
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """Per-channel causal conv. x: (B,S,W); w: (K,W); state: (B,K-1,W)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, W)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return out + b, new_state
+
+
+def _rglru_core(x, r, i, lam, h0):
+    """x,r,i: (B,S,W) post-activation inputs; returns (y, h_last).
+
+    h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t * x_t),
+    log a_t = -c * softplus(lam) * r_t.  Linear in h => associative scan.
+    """
+    log_a = -_LRU_C * jax.nn.softplus(lam)[None, None, :] * r  # (B,S,W) fp32
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x)
+    # prepend h0 as a pseudo-step: y_t = a_t y_{t-1} + b_t
+    def combine(l, r_):
+        a1, b1 = l
+        a2, b2 = r_
+        return a1 * a2, a2 * b1 + b2
+
+    a_all = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+    b_all = jnp.concatenate([h0[:, None, :], gated], axis=1)
+    _, ys = lax.associative_scan(combine, (a_all, b_all), axis=1)
+    return ys[:, 1:], ys[:, -1]
+
+
+def apply_rglru_block(cfg, p, x, *, state=None):
+    """Griffin recurrent block. state: {'h': (B,W) fp32, 'conv': (B,K-1,W)}."""
+    b, s, d = x.shape
+    w = cfg.lru_width
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu((xn @ p["w_gate_in"]).astype(jnp.float32))
+    rec = xn @ p["w_rec_in"]
+    conv_state = state["conv"] if state is not None else None
+    rec, new_conv = _causal_conv1d(rec, p["conv_w"], p["conv_b"], conv_state)
+    r = jax.nn.sigmoid((rec @ p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((rec @ p["w_i"]).astype(jnp.float32))
+    h0 = state["h"] if state is not None else jnp.zeros((b, w), jnp.float32)
+    y, h_last = _rglru_core(rec.astype(jnp.float32), r, i, p["lam"], h0)
+    y = constrain((y * gate).astype(x.dtype), ("batch", None, "act_tp"))
+    x = x + y @ p["w_out"]
+    x = x + L.swiglu_mlp(L.rms_norm(x, p["ln2"], cfg.norm_eps),
+                         p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    new_state = None
+    if state is not None:
+        new_state = {"h": h_last, "conv": new_conv}
+    return constrain(x, ("batch", None, None)), new_state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory) blocks
+# ---------------------------------------------------------------------------
+
+
+def mlstm_specs(cfg: ModelConfig, n: int) -> dict:
+    d = cfg.d_model
+    inner = 2 * d
+    dt = cfg.jnp_dtype
+    return {
+        "ln": ParamSpec((n, d), ("layers", None), "ones", dt),
+        "w_up": ParamSpec((n, d, inner), ("layers", "fsdp", "tp"), "normal", dt),
+        "w_gate": ParamSpec((n, d, inner), ("layers", "fsdp", "tp"), "normal", dt),
+        "conv_w": ParamSpec((n, cfg.conv1d_width, inner), ("layers", None, "tp"), "normal", dt),
+        "conv_b": ParamSpec((n, inner), ("layers", "tp"), "zeros", dt),
+        # block-diagonal per-head q/k/v (xLSTM paper's layout; 4x fewer
+        # params than dense inner x inner)
+        "wq": ParamSpec((n, cfg.num_heads, inner // cfg.num_heads,
+                         inner // cfg.num_heads),
+                        ("layers", "tp", None, None), "normal", dt),
+        "wk": ParamSpec((n, cfg.num_heads, inner // cfg.num_heads,
+                         inner // cfg.num_heads),
+                        ("layers", "tp", None, None), "normal", dt),
+        "wv": ParamSpec((n, cfg.num_heads, inner // cfg.num_heads,
+                         inner // cfg.num_heads),
+                        ("layers", "tp", None, None), "normal", dt),
+        "w_if": ParamSpec((n, inner, 2 * cfg.num_heads), ("layers", "fsdp", None), "normal", dt),
+        "w_down": ParamSpec((n, inner, d), ("layers", "tp_in", "fsdp"), "normal", dt),
+    }
+
+
+MLSTM_CHUNK = 64
+
+
+def _mlstm_chunkwise(q, k, v, i_pre, f_pre, C0, n0, m0, L):
+    """Chunkwise-parallel mLSTM (§Perf X1 — the xLSTM hillclimb).
+
+    Replaces the S-step sequential scan (which streams the (B,H,dh,dh)
+    matrix state through HBM S times) with S/L chunk steps: intra-chunk
+    work is an (L x L) decay-masked attention on the MXU, the state only
+    round-trips HBM once per chunk. Exactly matches the sequential oracle
+    (tests/test_models_extra.py::test_mlstm_chunkwise_matches_sequential).
+
+    q,k,v: (B,S,H,dh) (k pre-scaled); i_pre/f_pre: (B,S,H) raw gate logits;
+    C0: (B,H,dh,dh), n0: (B,H,dh), m0: (B,H) fp32. Returns (h (B,S,H,dh),
+    (C,n,m)).
+    """
+    b, s, h, dh = q.shape
+    nc = s // L
+    r4 = lambda t: jnp.moveaxis(t, 2, 1).reshape(b, h, nc, L, dh)
+    r3 = lambda t: jnp.moveaxis(t, 2, 1).reshape(b, h, nc, L)
+    qc, kc, vc = r4(q.astype(jnp.float32)), r4(k.astype(jnp.float32)), r4(v.astype(jnp.float32))
+    ic = r3(i_pre.transpose(0, 1, 2) if i_pre.ndim == 3 else i_pre)
+    fc = r3(f_pre)
+    tril = jnp.tril(jnp.ones((L, L), jnp.float32))
+
+    def chunk_step(carry, idx):
+        C, n, m = carry
+        qt = qc[:, :, idx]               # (b,h,L,dh)
+        kt = kc[:, :, idx]
+        vt = vc[:, :, idx]
+        it = ic[:, :, idx].astype(jnp.float32)
+        logf = jax.nn.log_sigmoid(fc[:, :, idx].astype(jnp.float32))
+        F = jnp.cumsum(logf, axis=-1)                     # inclusive (b,h,L)
+        Ftot = F[..., -1]
+        a = it - F
+        Amax = jax.lax.cummax(a, axis=a.ndim - 1)
+        m_t = F + jnp.maximum(m[..., None], Amax)         # (b,h,L)
+        expo = F[..., :, None] + a[..., None, :] - m_t[..., :, None]
+        expo = jnp.where(tril > 0, expo, -jnp.inf)   # mask BEFORE exp
+        wmat = jnp.exp(expo)
+        qk = jnp.einsum("bhtd,bhsd->bhts", qt, kt)
+        wqk = wmat * qk
+        intra_num = jnp.einsum("bhts,bhsd->bhtd", wqk, vt)
+        intra_den = jnp.sum(wqk, axis=-1)
+        r = jnp.exp(F + m[..., None] - m_t)               # (b,h,L)
+        inter_num = r[..., None] * jnp.einsum("bhtd,bhde->bhte", qt, C)
+        inter_den = r * jnp.einsum("bhtd,bhd->bht", qt, n)
+        num = inter_num + intra_num
+        den = inter_den + intra_den
+        hout = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        m_next = Ftot + jnp.maximum(m, Amax[..., -1])
+        decay = jnp.exp(Ftot + m - m_next)
+        wk = jnp.exp(a + (Ftot - m_next)[..., None])      # (b,h,L)
+        C = decay[..., None, None] * C + jnp.einsum(
+            "bht,bhtd,bhte->bhde", wk, kt, vt)
+        n = decay[..., None] * n + jnp.einsum("bht,bhtd->bhd", wk, kt)
+        return (C, n, m_next), hout
+
+    (C, n, m), hs = lax.scan(chunk_step, (C0, n0, m0), jnp.arange(nc))
+    # hs: (nc, b, h, L, dh) -> (b, s, h, dh)
+    hs = jnp.moveaxis(hs, 0, 2).reshape(b, h, s, dh)
+    hs = jnp.moveaxis(hs, 1, 2)
+    return hs, (C, n, m)
+
+
+def apply_mlstm_block(cfg, p, x, *, state=None):
+    """mLSTM with matrix memory. state: {'C': (B,H,dk,dv), 'n': (B,H,dk),
+    'm': (B,H)} fp32. Chunkwise-parallel for full sequences (§Perf X1);
+    sequential scan for short/decode steps."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    inner = 2 * d
+    dh = inner // h
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    up = xn @ p["w_up"]
+    gate = jax.nn.silu(xn @ p["w_gate"])
+    conv_state = state["conv"] if state is not None else None
+    c_out, new_conv = _causal_conv1d(up, p["conv_w"], p["conv_b"], conv_state)
+    c_act = jax.nn.silu(c_out)
+    ch = c_act.reshape(b, s, h, dh)
+    uh = up.reshape(b, s, h, dh)
+    q = jnp.einsum("bshk,hkj->bshj", ch, p["wq"])
+    k = jnp.einsum("bshk,hkj->bshj", ch, p["wk"]) * dh ** -0.5
+    v = jnp.einsum("bshk,hkj->bshj", uh, p["wv"])
+    if_gates = (c_act @ p["w_if"]).astype(jnp.float32).reshape(b, s, h, 2)
+    i_pre, f_pre = if_gates[..., 0], if_gates[..., 1]
+
+    if state is not None:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+    else:
+        C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.zeros((b, h), jnp.float32)
+
+    if s % MLSTM_CHUNK == 0 and s > MLSTM_CHUNK:
+        hs4, (C, n, m) = _mlstm_chunkwise(
+            q, k, v, i_pre, f_pre, C0, n0, m0, MLSTM_CHUNK)
+        hs = hs4.reshape(b, s, inner).astype(x.dtype)
+        out = (hs * gate) @ p["w_down"]
+        new_state = ({"C": C, "n": n, "m": m, "conv": new_conv}
+                     if state is not None else None)
+        return constrain(x + out, ("batch", "act_q_seq", None)), new_state
+
+    def step(carry, t):
+        C, n, m = carry
+        qt, kt, vt = q[:, t].astype(jnp.float32), k[:, t].astype(jnp.float32), v[:, t].astype(jnp.float32)
+        it, ft = i_pre[:, t], f_pre[:, t]
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        C = f_g[..., None, None] * C + i_g[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :]
+        )
+        n = f_g[..., None] * n + i_g[..., None] * kt
+        num = jnp.einsum("bhkv,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0)
+        ht = num / den[..., None]
+        return (C, n, m_new), ht
+
+    (C, n, m), hs = lax.scan(step, (C0, n0, m0), jnp.arange(s))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, inner).astype(x.dtype)  # (B,S,H,dh)->
+    out = (hs * gate) @ p["w_down"]
+    new_state = None
+    if state is not None:
+        new_state = {"C": C, "n": n, "m": m, "conv": new_conv}
+    return constrain(x + out, ("batch", None, None)), new_state
+
+
+def slstm_specs(cfg: ModelConfig, n: int) -> dict:
+    d = cfg.d_model
+    dt = cfg.jnp_dtype
+    h = cfg.num_heads
+    dh = d // h
+    # up-projection ~4/3 * d, rounded to an MXU/TP-friendly multiple of 128
+    f = max(128, round(d * 4 / 3 / 128) * 128)
+    return {
+        "ln": ParamSpec((n, d), ("layers", None), "ones", dt),
+        "w_zifo": ParamSpec((n, d, 4 * d), ("layers", "fsdp", "tp"), "normal", dt),
+        "r_zifo": ParamSpec((n, h, dh, 4 * dh), ("layers", None, None, None), "normal", dt),
+        "w_out": ParamSpec((n, d, d), ("layers", "fsdp", "tp"), "normal", dt),
+        "ln2": ParamSpec((n, d), ("layers", None), "ones", dt),
+        "mlp_up": ParamSpec((n, d, f), ("layers", "fsdp", "tp"), "normal", dt),
+        "mlp_down": ParamSpec((n, f, d), ("layers", "tp_in", "fsdp"), "normal", dt),
+    }
+
+
+def apply_slstm_block(cfg, p, x, *, state=None):
+    """sLSTM with exponential gating + normalizer. state: {'h','c','n','m'}
+    each (B, d) fp32 (h per-head recurrent via block-diagonal R)."""
+    b, s, d = x.shape
+    nh = cfg.num_heads
+    dh = d // nh
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    wx = (xn @ p["w_zifo"]).astype(jnp.float32)  # (B,S,4d)
+
+    if state is not None:
+        h0, c0, n0, m0 = state["h"], state["c"], state["n"], state["m"]
+    else:
+        h0 = jnp.zeros((b, d), jnp.float32)
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.zeros((b, d), jnp.float32)
+        m0 = jnp.zeros((b, d), jnp.float32)
+
+    r = p["r_zifo"].astype(jnp.float32)  # (H, dh, 4dh)
+
+    def step(carry, t):
+        h, c, n, m = carry
+        rh = jnp.einsum("bhk,hkj->bhj", h.reshape(b, nh, dh), r)  # (b,nh,4dh)
+        # per-head gate groups -> global [z|i|f|o] layout matching wx
+        rh = rh.reshape(b, nh, 4, dh).transpose(0, 2, 1, 3).reshape(b, 4 * d)
+        pre = wx[:, t] + rh
+        z, i_pre, f_pre, o = jnp.split(pre, 4, axis=-1)
+        z = jnp.tanh(z)
+        o = jax.nn.sigmoid(o)
+        log_f = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(log_f + m, i_pre)
+        i_g = jnp.exp(i_pre - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        c = f_g * c + i_g * z
+        n = f_g * n + i_g
+        h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (h, c, n, m_new), h
+
+    (h, c, n, m), hs = lax.scan(step, (h0, c0, n0, m0), jnp.arange(s))
+    hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B,S,d)
+    x = x + hs @ p["w_out"]
+    x = x + (jax.nn.gelu(L.rms_norm(x, p["ln2"], cfg.norm_eps) @ p["mlp_up"])
+             @ p["mlp_down"])
+    new_state = None
+    if state is not None:
+        new_state = {"h": h, "c": c, "n": n, "m": m}
+    return constrain(x, ("batch", None, None)), new_state

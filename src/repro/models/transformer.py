@@ -1,0 +1,181 @@
+"""Dense GQA transformer blocks (qwen2.5 / qwen2 / granite / internvl2
+backbone / hubert encoder). Declarative ParamSpecs + pure apply functions;
+layers are stacked on a leading 'layers' axis and executed with lax.scan.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common import ParamSpec
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ModelConfig, n: int) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = cfg.jnp_dtype
+    s = {
+        "wq": ParamSpec((n, d, hq * hd), ("layers", "fsdp", "tp"), "normal", dt),
+        "wk": ParamSpec((n, d, hkv * hd), ("layers", "fsdp", "tp"), "normal", dt),
+        "wv": ParamSpec((n, d, hkv * hd), ("layers", "fsdp", "tp"), "normal", dt),
+        "wo": ParamSpec((n, hq * hd, d), ("layers", "tp_in", "fsdp"), "normal", dt),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((n, hq * hd), ("layers", "tp"), "zeros", dt)
+        s["bk"] = ParamSpec((n, hkv * hd), ("layers", "tp"), "zeros", dt)
+        s["bv"] = ParamSpec((n, hkv * hd), ("layers", "tp"), "zeros", dt)
+    return s
+
+
+def mlp_specs(cfg: ModelConfig, n: int) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.jnp_dtype
+    return {
+        "w_gate": ParamSpec((n, d, f), ("layers", "fsdp", "tp"), "normal", dt),
+        "w_up": ParamSpec((n, d, f), ("layers", "fsdp", "tp"), "normal", dt),
+        "w_down": ParamSpec((n, f, d), ("layers", "tp_in", "fsdp"), "normal", dt),
+    }
+
+
+def block_specs(cfg: ModelConfig, n: int) -> dict:
+    d = cfg.d_model
+    dt = cfg.jnp_dtype
+    return {
+        "ln1": ParamSpec((n, d), ("layers", None), "ones", dt),
+        "ln2": ParamSpec((n, d), ("layers", None), "ones", dt),
+        "attn": attn_specs(cfg, n),
+        "mlp": mlp_specs(cfg, n),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+
+def apply_attn(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    kv_cache: Optional[dict] = None,
+    cache_index=None,
+    window: Optional[int] = None,
+    return_kv: bool = False,
+):
+    """One attention sub-layer. p holds per-layer (unstacked) weights.
+
+    kv_cache: {'k','v'}: (B, Smax, Hkv, hd) — updated functionally when
+    given (decode). Returns (out, new_kv_cache_or_None).
+    """
+    b, sq, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    from repro.parallel.sharding import gathered
+    q = x @ gathered(p["wq"], ("fsdp", "tp"))
+    k = x @ gathered(p["wk"], ("fsdp", "tp"))
+    v = x @ gathered(p["wv"], ("fsdp", "tp"))
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, sq, hq, hd)
+    k = k.reshape(b, sq, hkv, hd)
+    v = v.reshape(b, sq, hkv, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    # context-parallel attention (placement pass enables for archs whose
+    # head count doesn't divide the model axis, §Perf P2): shard q on seq,
+    # keep K/V whole — GSPMD then all-gathers K/V (small) instead of
+    # all-reducing the score tensor (huge).
+    q = constrain(q, ("batch", "act_q_seq", None, None))
+    k = constrain(k, ("batch", "act_kv_seq", None, None))
+    v = constrain(v, ("batch", "act_kv_seq", None, None))
+
+    if kv_cache is not None:
+        ck = lax.dynamic_update_slice(kv_cache["k"], k, (0, cache_index, 0, 0))
+        cv = lax.dynamic_update_slice(kv_cache["v"], v, (0, cache_index, 0, 0))
+        kv_len = jnp.full((b,), cache_index + sq, jnp.int32)
+        o = L.attention(
+            q, ck, cv, causal=sq > 1, window=window,
+            q_offset=cache_index, kv_len=kv_len,
+        )
+        new_cache = {"k": ck, "v": cv}
+    else:
+        o = L.attention(q, k, v, causal=cfg.decoder, window=window)
+        new_cache = {"k": k, "v": v} if return_kv else None
+    o = constrain(o.reshape(b, sq, hq * hd), ("batch", "act_q_seq", "act_tp"))
+    from repro.parallel.sharding import gathered as _g
+    return o @ _g(p["wo"], ("tp_in", "fsdp")), new_cache
+
+
+def apply_block(cfg, p, x, positions, *, kv_cache=None, cache_index=None,
+                window=None, return_kv=False):
+    h, new_cache = apply_attn(
+        cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), positions,
+        kv_cache=kv_cache, cache_index=cache_index, window=window,
+        return_kv=return_kv,
+    )
+    x = x + h
+    x = x + L.swiglu_mlp(L.rms_norm(x, p["ln2"], cfg.norm_eps),
+                         p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                         p["mlp"]["w_down"])
+    # sequence parallelism (§Perf P3): under context-parallel placement the
+    # residual stream stays seq-sharded through norms/MLP; default rules
+    # leave act_q_seq unsharded so this is the old constraint otherwise.
+    x = constrain(x, ("batch", "act_q_seq", None))
+    return x, new_cache
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn
+
+
+def scan_dense_blocks(cfg, stacked, x, positions, *, kv_cache=None,
+                      cache_index=None, window=None):
+    """Run n stacked dense blocks with lax.scan (+ remat policy).
+
+    kv_cache here is stacked: {'k','v'}: (n, B, Smax, Hkv, hd).
+    Returns (x, new_stacked_cache_or_None).
+    """
+
+    def body(carry, xs):
+        xv = carry
+        if kv_cache is not None:
+            p, ck, cv = xs
+            out, nc = apply_block(cfg, p, xv, positions,
+                                  kv_cache={"k": ck, "v": cv},
+                                  cache_index=cache_index, window=window)
+            return out, (nc["k"], nc["v"])
+        p = xs
+        out, _ = apply_block(cfg, p, xv, positions, window=window)
+        return out, None
+
+    body = _maybe_remat(body, cfg)
+    if kv_cache is not None:
+        x, (nk, nv) = lax.scan(body, x, (stacked, kv_cache["k"], kv_cache["v"]))
+        return x, {"k": nk, "v": nv}
+    if cfg.scan_layers:
+        x, _ = lax.scan(body, x, stacked)
+    else:
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        for i in range(n):
+            p_i = jax.tree.map(lambda a, i=i: a[i], stacked)
+            x, _ = body(x, p_i)
+    return x, None

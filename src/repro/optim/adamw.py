@@ -1,0 +1,95 @@
+"""AdamW with fp32 master weights + moments, cosine schedule, global-norm
+clipping. Built from scratch (no optax in this environment).
+
+State layout mirrors the param tree; every state leaf inherits the param's
+sharding (ZeRO-1 falls out of the fsdp param sharding for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    master_fp32: bool = True
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+    master: Any  # fp32 copy of params (or None-like empty tuple)
+
+
+def init_state(cfg: AdamWConfig, params) -> AdamWState:
+    mu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    nu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if cfg.master_fp32 else ())
+    return AdamWState(jnp.zeros((), jnp.int32), mu, nu, master)
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state: AdamWState):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu, master):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        base = master if cfg.master_fp32 else p.astype(jnp.float32)
+        new = base - lr * (mhat / (jnp.sqrt(nhat) + cfg.eps)
+                           + cfg.weight_decay * base)
+        return new.astype(p.dtype), mu, nu, new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+    flat_master = (jax.tree.leaves(state.master) if cfg.master_fp32
+                   else [None] * len(flat_p))
+    outs = [upd(p, g, m, n, ma) for p, g, m, n, ma in
+            zip(flat_p, flat_g, flat_mu, flat_nu, flat_master)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    new_master = (jax.tree.unflatten(treedef, [o[3] for o in outs])
+                  if cfg.master_fp32 else ())
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_mu, new_nu, new_master), metrics

@@ -1,0 +1,154 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every ParamSpec carries logical axis names; ``logical_to_spec`` turns them
+into PartitionSpecs under a rule table. The congestion-aware placement pass
+(core/placement.py) may *rewrite* the rule table per layer group — that is
+the TPU analogue of the paper's custom placement.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import common
+
+# Default rules. "fsdp" axes shard parameters over the data axis (ZeRO-3
+# style — GSPMD inserts per-layer all-gathers inside the scan); "tp" axes
+# shard over the model axis (Megatron style). Activations: batch over
+# (pod, data); model-parallel activation dims over model.
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    # parameter axes
+    "embed_vocab": ("model",),      # vocab dim of embedding/logits
+    "embed_d": ("data",),           # d_model dim of embedding (fsdp)
+    "fsdp": ("data",),              # generic fsdp param dim
+    "tp": ("model",),               # generic tensor-parallel param dim
+    "tp_in": ("model",),            # row-parallel input dim (2nd matmul)
+    "expert": ("model",),           # expert-parallel expert dim
+    "layers": (),                   # stacked-scan layer dim: never sharded
+    "none": (),
+    # activation axes
+    "batch": ("pod", "data"),
+    "act_seq": (),                  # sequence dim (context parallel opt-in)
+    "act_q_seq": (),                # query seq dim (context-parallel attn)
+    "act_kv_seq": (),               # key/value seq dim
+    "act_tp": ("model",),           # activation model-parallel dim
+    "kv_seq": ("model",),           # sequence-sharded KV cache (flash-decode)
+}
+
+
+def rules_without_pod(rules: Dict[str, Tuple[str, ...]]):
+    return {k: tuple(a for a in v if a != "pod") for k, v in rules.items()}
+
+
+def _mesh_axes_for(logical: Optional[str], rules, mesh_axes) -> Optional[Tuple[str, ...]]:
+    if logical is None:
+        return None
+    axes = rules.get(logical, ())
+    axes = tuple(a for a in axes if a in mesh_axes)
+    return axes if axes else None
+
+
+def logical_to_pspec(logical_axes: Sequence[Optional[str]], rules, mesh) -> P:
+    mesh_axes = set(mesh.axis_names)
+    parts = []
+    used = set()
+    for ax in logical_axes:
+        maxes = _mesh_axes_for(ax, rules, mesh_axes)
+        if maxes is None:
+            parts.append(None)
+            continue
+        maxes = tuple(a for a in maxes if a not in used)
+        used.update(maxes)
+        if not maxes:
+            parts.append(None)
+        elif len(maxes) == 1:
+            parts.append(maxes[0])
+        else:
+            parts.append(maxes)
+    # trim trailing Nones (canonical form)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+_ACTIVE_RULES = [DEFAULT_RULES]
+
+
+def active_rules() -> Dict[str, Tuple[str, ...]]:
+    return _ACTIVE_RULES[-1]
+
+
+class use_rules:
+    """Context manager: placement pass installs rewritten rules under which
+    the model is traced/lowered (core/placement.py)."""
+
+    def __init__(self, rules):
+        self.rules = rules
+
+    def __enter__(self):
+        _ACTIVE_RULES.append(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _ACTIVE_RULES.pop()
+
+
+def _trim_indivisible(pspec: P, shape, mesh) -> P:
+    """Replicate any dim whose size doesn't divide its mesh axes (keeps
+    lowering robust for odd widths; logged nowhere — roofline catches the
+    replication cost if it matters)."""
+    import numpy as np
+
+    parts = list(pspec)
+    parts += [None] * (len(shape) - len(parts))
+    for i, p in enumerate(parts):
+        if p is None:
+            continue
+        names = p if isinstance(p, tuple) else (p,)
+        degree = int(np.prod([mesh.shape[n] for n in names]))
+        if degree and shape[i] % degree != 0:
+            parts[i] = None
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def spec_tree_to_shardings(specs, mesh, rules=None):
+    """ParamSpec tree -> NamedSharding tree (for in_shardings / constraints)."""
+    rules = rules or active_rules()
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh,
+            _trim_indivisible(
+                logical_to_pspec(s.logical_axes, rules, mesh), s.shape, mesh)),
+        specs,
+        is_leaf=lambda x: isinstance(x, common.ParamSpec),
+    )
+
+
+def constrain(x, logical_axes, mesh=None, rules=None):
+    """with_sharding_constraint by logical axis names (no-op off-mesh)."""
+    rules = rules or active_rules()
+    try:
+        cur = jax.sharding.get_abstract_mesh()
+        if cur is None or cur.empty:
+            return x
+        pspec = logical_to_pspec(logical_axes, rules, cur)
+        return jax.lax.with_sharding_constraint(x, pspec)
+    except Exception:
+        return x
+
+
+def named_sharding(mesh, *parts) -> NamedSharding:
+    return NamedSharding(mesh, P(*parts))
+
+
+def gathered(w, logical_axes):
+    """FSDP weight-gather at the use site: constrain the weight to its
+    fsdp-axes-dropped sharding so GSPMD inserts a (small) weight all-gather
+    instead of resolving the sharded contraction with an activation-sized
+    partial-sum all-reduce (§Perf iteration P1)."""
+    axes = tuple(None if a in ("fsdp", "embed_d") else a for a in logical_axes)
+    return constrain(w, axes)

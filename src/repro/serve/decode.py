@@ -1,0 +1,387 @@
+"""Serving: prefill + single-token decode for every family.
+
+decode_* shapes in the assignment lower decode_step (one new token against
+a seq_len-deep cache). Sub-quadratic archs (hybrid/ssm) carry O(1)-ish
+state — hybrid keeps a rolling window-sized KV (RecurrentGemma local
+attention) + RG-LRU hidden; ssm keeps mLSTM/sLSTM recurrent states.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import recurrent as REC
+from repro.models import transformer as T
+from repro.models import model as M
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Rolling-window attention (hybrid decode)
+# ---------------------------------------------------------------------------
+
+
+def _rolling_attn_decode(cfg, p, x, cache_k, cache_v, slot_pos, index):
+    """x: (B,1,d); cache_k/v: (B,W,Hkv,hd) rope'd at write; returns out,(k,v)."""
+    b, _, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    w = cache_k.shape[1]
+    pos = jnp.full((b, 1), index, jnp.int32)
+    q = (x @ p["wq"]).reshape(b, 1, hq, hd)
+    k = (x @ p["wk"]).reshape(b, 1, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, 1, hkv, hd)
+    if cfg.qkv_bias:
+        q += p["bq"].reshape(1, 1, hq, hd)
+        k += p["bk"].reshape(1, 1, hkv, hd)
+        v += p["bv"].reshape(1, 1, hkv, hd)
+    q = L.apply_rope(q, pos, cfg.rope_theta)
+    k = L.apply_rope(k, pos, cfg.rope_theta)
+    slot = index % w
+    ck = lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    cv = lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+    new_slot_pos = lax.dynamic_update_slice(slot_pos, pos[0, :1], (slot,))
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    s = jnp.einsum("bhgd,bwhd->bhgw", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * hd ** -0.5
+    valid = (new_slot_pos >= 0) & (new_slot_pos <= index) \
+        & (new_slot_pos > index - (cfg.attn_window or 10 ** 9))
+    s = jnp.where(valid[None, None, None, :], s, L.NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgw,bwhd->bhgd", pr, cv.astype(jnp.float32))
+    o = o.reshape(b, 1, hq * hd).astype(x.dtype)
+    return o @ p["wo"], ck, cv, new_slot_pos
+
+
+def _fill_rolling_cache(k, v, width):
+    """k,v: (B,S,Hkv,hd) rope'd at their absolute positions. Returns
+    (cache_k, cache_v, slot_pos) of exactly `width` slots holding the last
+    min(S, width) positions at slot p % width."""
+    b, s, hkv, hd = k.shape
+    ps = jnp.arange(max(s - width, 0), s)           # last positions kept
+    slots = ps % width
+    ck = jnp.zeros((b, width, hkv, hd), k.dtype).at[:, slots].set(k[:, ps])
+    cv = jnp.zeros((b, width, hkv, hd), v.dtype).at[:, slots].set(v[:, ps])
+    slot_pos = jnp.full((width,), -1, jnp.int32).at[slots].set(ps.astype(jnp.int32))
+    return ck, cv, slot_pos
+
+
+# ---------------------------------------------------------------------------
+# Decode step (token -> logits, cache')
+# ---------------------------------------------------------------------------
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, mesh=None):
+    """tokens: (B, 1) int32 -> (logits (B,1,V), new_cache)."""
+    idx = cache["index"]
+    x = L.embed(tokens, params["embed"])
+    x = constrain(x, ("batch", None, None))
+    b = x.shape[0]
+    pos = jnp.broadcast_to(idx, (b, 1)).astype(jnp.int32)
+    new_cache: Dict[str, Any] = {"index": idx + 1}
+
+    if cfg.family in ("dense", "vlm"):
+        def body(xv, xs):
+            p, ck, cv = xs
+            out, nc = T.apply_block(cfg, p, xv, pos,
+                                    kv_cache={"k": ck, "v": cv}, cache_index=idx)
+            return out, (nc["k"], nc["v"])
+
+        x, (nk, nv) = lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        new_cache.update(k=nk, v=nv)
+
+    elif cfg.family == "moe":
+        if cfg.num_dense_layers:
+            if cfg.use_mla:
+                def dbody(xv, xs):
+                    p, ckv, ckr = xs
+                    h, nc = MLA.apply_mla(
+                        cfg, p["attn"], L.rms_norm(xv, p["ln1"], cfg.norm_eps),
+                        pos, kv_cache={"ckv": ckv, "krope": ckr}, cache_index=idx)
+                    xv = xv + h
+                    xv = xv + L.swiglu_mlp(
+                        L.rms_norm(xv, p["ln2"], cfg.norm_eps),
+                        p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+                    return xv, (nc["ckv"], nc["krope"])
+
+                x, (nckv, nckr) = lax.scan(
+                    dbody, x, (params["dense_blocks"], cache["d_ckv"], cache["d_krope"]))
+                new_cache.update(d_ckv=nckv, d_krope=nckr)
+            else:
+                def dbody(xv, xs):
+                    p, ck, cv = xs
+                    out, nc = T.apply_block(cfg, p, xv, pos,
+                                            kv_cache={"k": ck, "v": cv},
+                                            cache_index=idx)
+                    return out, (nc["k"], nc["v"])
+
+                x, (nk, nv) = lax.scan(
+                    dbody, x, (params["dense_blocks"], cache["d_k"], cache["d_v"]))
+                new_cache.update(d_k=nk, d_v=nv)
+
+        if cfg.use_mla:
+            def mbody(xv, xs):
+                p, ckv, ckr = xs
+                h, nc = MLA.apply_mla(
+                    cfg, p["attn"], L.rms_norm(xv, p["ln1"], cfg.norm_eps),
+                    pos, kv_cache={"ckv": ckv, "krope": ckr}, cache_index=idx)
+                xv = xv + h
+                xn = L.rms_norm(xv, p["ln2"], cfg.norm_eps)
+                y, _ = MOE.apply_moe(cfg, p["moe"], xn, mesh)
+                if cfg.num_shared_experts:
+                    sh = p["moe"]["shared"]
+                    y = y + L.swiglu_mlp(xn, sh["wg"], sh["wu"], sh["wd"])
+                return xv + y, (nc["ckv"], nc["krope"])
+
+            x, (nckv, nckr) = lax.scan(
+                mbody, x, (params["moe_blocks"], cache["m_ckv"], cache["m_krope"]))
+            new_cache.update(m_ckv=nckv, m_krope=nckr)
+        else:
+            def mbody(xv, xs):
+                p, ck, cv = xs
+                h, nc = T.apply_attn(
+                    cfg, p["attn"], L.rms_norm(xv, p["ln1"], cfg.norm_eps),
+                    pos, kv_cache={"k": ck, "v": cv}, cache_index=idx)
+                xv = xv + h
+                xn = L.rms_norm(xv, p["ln2"], cfg.norm_eps)
+                y, _ = MOE.apply_moe(cfg, p["moe"], xn, mesh)
+                if cfg.num_shared_experts:
+                    sh = p["moe"]["shared"]
+                    y = y + L.swiglu_mlp(xn, sh["wg"], sh["wu"], sh["wd"])
+                return xv + y, (nc["k"], nc["v"])
+
+            x, (nk, nv) = lax.scan(
+                mbody, x, (params["moe_blocks"], cache["m_k"], cache["m_v"]))
+            new_cache.update(m_k=nk, m_v=nv)
+
+    elif cfg.family == "hybrid":
+        pattern, _ = _hybrid_pattern_list(cfg)
+        ck, cv, sp = cache["k"], cache["v"], cache["slot_pos"]
+        lru_h, conv = cache["lru_h"], cache["conv"]
+        nk, nv, nh, ncv = [], [], [], []
+        new_sp = sp
+        ai = ri = 0
+        for li, kind in enumerate(pattern):
+            if kind == "rec":
+                p = _hybrid_layer_params(cfg, params, li)
+                st = {"h": lru_h[ri], "conv": conv[ri]}
+                xn, nst = REC.apply_rglru_block(cfg, p, x, state=st)
+                x = xn
+                nh.append(nst["h"])
+                ncv.append(nst["conv"])
+                ri += 1
+            else:
+                p = _hybrid_layer_params(cfg, params, li)
+                xr = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+                o, k2, v2, new_sp = _rolling_attn_decode(
+                    cfg, p["attn"], xr, ck[ai], cv[ai], sp, idx)
+                x = x + o
+                x = x + L.swiglu_mlp(L.rms_norm(x, p["ln2"], cfg.norm_eps),
+                                     p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                                     p["mlp"]["w_down"])
+                nk.append(k2)
+                nv.append(v2)
+                ai += 1
+        new_cache.update(
+            k=jnp.stack(nk), v=jnp.stack(nv), slot_pos=new_sp,
+            lru_h=jnp.stack(nh), conv=jnp.stack(ncv),
+        )
+
+    elif cfg.family == "ssm":
+        n_super, n_m = M._xlstm_layout(cfg)
+        sb = params["superblocks"]
+        mC, mn, mm, mconv = [], [], [], []
+        sh, sc, sn, sm = [], [], [], []
+        mi = 0
+        for si in range(n_super):
+            p_s = jax.tree.map(lambda a, si=si: a[si], sb["slstm"])
+            st = {"h": cache["s_h"][si], "c": cache["s_c"][si],
+                  "n": cache["s_n"][si], "m": cache["s_m"][si]}
+            x, nst = REC.apply_slstm_block(cfg, p_s, x, state=st)
+            sh.append(nst["h"]); sc.append(nst["c"])
+            sn.append(nst["n"]); sm.append(nst["m"])
+            for j in range(n_m):
+                p_m = jax.tree.map(lambda a, mi=mi: a[mi], sb["mlstm"])
+                st = {"C": cache["m_C"][mi], "n": cache["m_n"][mi],
+                      "m": cache["m_m"][mi], "conv": cache["m_conv"][mi]}
+                x, nst = REC.apply_mlstm_block(cfg, p_m, x, state=st)
+                mC.append(nst["C"]); mn.append(nst["n"])
+                mm.append(nst["m"]); mconv.append(nst["conv"])
+                mi += 1
+        new_cache.update(
+            m_C=jnp.stack(mC), m_n=jnp.stack(mn), m_m=jnp.stack(mm),
+            m_conv=jnp.stack(mconv), s_h=jnp.stack(sh), s_c=jnp.stack(sc),
+            s_n=jnp.stack(sn), s_m=jnp.stack(sm),
+        )
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    lgts = M.unembed_logits(cfg, params, x)
+    return lgts, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full prompt -> last logits + populated cache)
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int, mesh=None):
+    """Run the prompt through the model, returning (last_logits, cache).
+
+    max_len is the cache capacity (>= prompt length); decode_step then
+    appends from cache['index'] onward.
+    """
+    x = M.embed_inputs(cfg, params, batch)
+    b, s = x.shape[:2]
+    positions = M.positions_for(cfg, x)
+    cache = M.init_cache(cfg, b, max_len)
+    new_cache: Dict[str, Any] = {"index": jnp.asarray(s, jnp.int32)}
+
+    if cfg.family in ("dense", "vlm"):
+        x, nc = T.scan_dense_blocks(cfg, params["blocks"], x, positions,
+                                    kv_cache={"k": cache["k"], "v": cache["v"]},
+                                    cache_index=0)
+        new_cache.update(nc)
+
+    elif cfg.family == "moe":
+        if cfg.num_dense_layers:
+            if cfg.use_mla:
+                def dbody(xv, xs):
+                    p, ckv, ckr = xs
+                    h, nc = MLA.apply_mla(
+                        cfg, p["attn"], L.rms_norm(xv, p["ln1"], cfg.norm_eps),
+                        positions, kv_cache={"ckv": ckv, "krope": ckr},
+                        cache_index=0)
+                    xv = xv + h
+                    xv = xv + L.swiglu_mlp(
+                        L.rms_norm(xv, p["ln2"], cfg.norm_eps),
+                        p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+                    return xv, (nc["ckv"], nc["krope"])
+
+                x, (a, bb) = lax.scan(dbody, x, (params["dense_blocks"],
+                                                 cache["d_ckv"], cache["d_krope"]))
+                new_cache.update(d_ckv=a, d_krope=bb)
+            else:
+                def dbody(xv, xs):
+                    p, ck, cv = xs
+                    out, nc = T.apply_block(cfg, p, xv, positions,
+                                            kv_cache={"k": ck, "v": cv},
+                                            cache_index=0)
+                    return out, (nc["k"], nc["v"])
+
+                x, (a, bb) = lax.scan(dbody, x, (params["dense_blocks"],
+                                                 cache["d_k"], cache["d_v"]))
+                new_cache.update(d_k=a, d_v=bb)
+
+        if cfg.use_mla:
+            def mbody(xv, xs):
+                p, ckv, ckr = xs
+                out, _, nc = M._moe_block(cfg, p, xv, positions, mesh,
+                                          kv_cache={"ckv": ckv, "krope": ckr},
+                                          cache_index=0)
+                return out, (nc["ckv"], nc["krope"])
+
+            x, (a, bb) = lax.scan(mbody, x, (params["moe_blocks"],
+                                             cache["m_ckv"], cache["m_krope"]))
+            new_cache.update(m_ckv=a, m_krope=bb)
+        else:
+            def mbody(xv, xs):
+                p, ck, cv = xs
+                out, _, nc = M._moe_block(cfg, p, xv, positions, mesh,
+                                          kv_cache={"k": ck, "v": cv},
+                                          cache_index=0)
+                return out, (nc["k"], nc["v"])
+
+            x, (a, bb) = lax.scan(mbody, x, (params["moe_blocks"],
+                                             cache["m_k"], cache["m_v"]))
+            new_cache.update(m_k=a, m_v=bb)
+
+    elif cfg.family == "hybrid":
+        pattern, _ = _hybrid_pattern_list(cfg)
+        w = cache["k"].shape[2]
+        nk, nv, nh, ncv = [], [], [], []
+        slot_pos = cache["slot_pos"]
+        ai = ri = 0
+        for li, kind in enumerate(pattern):
+            p = _hybrid_layer_params(cfg, params, li)
+            if kind == "rec":
+                st = {"h": cache["lru_h"][ri],
+                      "conv": cache["conv"][ri]}
+                x, nst = REC.apply_rglru_block(cfg, p, x, state=st)
+                nh.append(nst["h"]); ncv.append(nst["conv"])
+                ri += 1
+            else:
+                xr = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+                o, kv = T.apply_attn(cfg, p["attn"], xr, positions,
+                                     window=cfg.attn_window, return_kv=True)
+                x = x + o
+                x = x + L.swiglu_mlp(L.rms_norm(x, p["ln2"], cfg.norm_eps),
+                                     p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                                     p["mlp"]["w_down"])
+                ck, cv2, slot_pos = _fill_rolling_cache(kv["k"], kv["v"],
+                                                        cache["k"].shape[2])
+                nk.append(ck); nv.append(cv2)
+                ai += 1
+        new_cache.update(k=jnp.stack(nk), v=jnp.stack(nv), slot_pos=slot_pos,
+                         lru_h=jnp.stack(nh), conv=jnp.stack(ncv))
+
+    elif cfg.family == "ssm":
+        n_super, n_m = M._xlstm_layout(cfg)
+        sb = params["superblocks"]
+        mC, mn, mm, mconv = [], [], [], []
+        sh, sc, sn, sm = [], [], [], []
+        mi = 0
+        for si in range(n_super):
+            p_s = jax.tree.map(lambda a, si=si: a[si], sb["slstm"])
+            st = {"h": cache["s_h"][si], "c": cache["s_c"][si],
+                  "n": cache["s_n"][si], "m": cache["s_m"][si]}
+            x, nst = REC.apply_slstm_block(cfg, p_s, x, state=st)
+            sh.append(nst["h"]); sc.append(nst["c"])
+            sn.append(nst["n"]); sm.append(nst["m"])
+            for j in range(n_m):
+                p_m = jax.tree.map(lambda a, mi=mi: a[mi], sb["mlstm"])
+                st = {"C": cache["m_C"][mi], "n": cache["m_n"][mi],
+                      "m": cache["m_m"][mi], "conv": cache["m_conv"][mi]}
+                x, nst = REC.apply_mlstm_block(cfg, p_m, x, state=st)
+                mC.append(nst["C"]); mn.append(nst["n"])
+                mm.append(nst["m"]); mconv.append(nst["conv"])
+                mi += 1
+        new_cache.update(
+            m_C=jnp.stack(mC), m_n=jnp.stack(mn), m_m=jnp.stack(mm),
+            m_conv=jnp.stack(mconv), s_h=jnp.stack(sh), s_c=jnp.stack(sc),
+            s_n=jnp.stack(sn), s_m=jnp.stack(sm),
+        )
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    lgts = M.unembed_logits(cfg, params, x)
+    return lgts, new_cache
+
+
+def _hybrid_pattern_list(cfg):
+    n_super, rem = M._hybrid_layout(cfg)
+    full = list(cfg.block_pattern) * n_super + list(rem)
+    return full, rem
+
+
+def _hybrid_layer_params(cfg, params, li):
+    """Per-layer params for hybrid layer index li (handles super/remainder)."""
+    pat = cfg.block_pattern
+    n_super, rem = M._hybrid_layout(cfg)
+    if li < n_super * len(pat):
+        s, j = divmod(li, len(pat))
+        kind = pat[j]
+        key = f"l{j}_rec" if kind == "rec" else f"l{j}_attn"
+        return jax.tree.map(lambda a, s=s: a[s], params["superblocks"][key])
+    j = li - n_super * len(pat)
+    return jax.tree.map(lambda a: a[0], params[f"rem{j}"])

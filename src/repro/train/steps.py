@@ -1,0 +1,127 @@
+"""Training step: loss, grad-accum microbatching (compute/comm overlap),
+optional EF-int8 pod-axis gradient compression, MTP auxiliary loss.
+
+The returned train_step is a pure function
+    (params, opt_state, batch[, error_state]) -> (params, opt_state, metrics)
+suitable for jax.jit with in_shardings from parallel.sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.optim import adamw, compress
+from repro.parallel.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1          # grad accumulation (overlaps reduce w/ compute)
+    aux_loss_weight: float = 0.01  # MoE load-balance
+    mtp_weight: float = 0.3        # deepseek multi-token-prediction
+    compress_pod_grads: bool = False
+    optimizer: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
+
+
+def _mtp_loss(cfg: ModelConfig, params, batch, hidden):
+    """DeepSeek MTP: one extra block sees [h_i ; emb(t_{i+1})] -> predict t_{i+2}."""
+    p = params["mtp"]
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    shifted = jnp.roll(tokens, -1, axis=1)
+    emb = L.embed(shifted, params["embed"])
+    h = jnp.concatenate([L.rms_norm(hidden, p["ln"], cfg.norm_eps), emb],
+                        axis=-1) @ p["proj"]
+    positions = M.positions_for(cfg, h)
+    blk = jax.tree.map(lambda a: a[0], p["block"])
+    if cfg.use_mla:
+        from repro.models import mla as MLA
+        a, _ = MLA.apply_mla(cfg, blk["attn"],
+                             L.rms_norm(h, blk["ln1"], cfg.norm_eps), positions)
+        h = h + a
+        h = h + L.swiglu_mlp(L.rms_norm(h, blk["ln2"], cfg.norm_eps),
+                             blk["mlp"]["w_gate"], blk["mlp"]["w_up"],
+                             blk["mlp"]["w_down"])
+    else:
+        h, _ = T.apply_block(cfg, blk, h, positions)
+    lgts = M.unembed_logits(cfg, params, h)
+    labels2 = jnp.roll(batch["labels"], -1, axis=1).at[:, -2:].set(-1)
+    return L.cross_entropy_loss(lgts, labels2, cfg.vocab_size)
+
+
+def loss_fn(cfg: ModelConfig, tc: TrainConfig, params, batch, mesh=None):
+    want_hidden = bool(cfg.mtp_depth)
+    out, aux = M.forward(cfg, params, batch, mesh, return_hidden=want_hidden)
+    if want_hidden:
+        hidden = out
+        lgts = M.unembed_logits(cfg, params, hidden)
+    else:
+        lgts = out
+    ce = L.cross_entropy_loss(lgts, batch["labels"], cfg.vocab_size)
+    total = ce + tc.aux_loss_weight * aux
+    metrics = {"ce": ce, "aux": aux}
+    if want_hidden:
+        mtp = _mtp_loss(cfg, params, batch, hidden)
+        total = total + tc.mtp_weight * mtp
+        metrics["mtp"] = mtp
+    return total, metrics
+
+
+def _split_microbatches(batch, n):
+    return jax.tree.map(lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch)
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
+    """Build the jittable train_step. Grad accumulation scans microbatches;
+    XLA overlaps each microbatch's reduce-scatter with the next one's
+    compute (latency-hiding scheduler), which is the overlap trick."""
+
+    def train_step(params, opt_state, batch, error_state=None):
+        grad_fn = jax.value_and_grad(
+            lambda p, b: loss_fn(cfg, tc, p, b, mesh), has_aux=True)
+
+        if tc.microbatches > 1:
+            mb = _split_microbatches(batch, tc.microbatches)
+
+            def accum(carry, b_i):
+                g_acc, m_acc = carry
+                (lv, metrics), g = grad_fn(params, b_i)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                m_acc = jax.tree.map(jnp.add, m_acc, {"loss": lv, **metrics})
+                return (g_acc, m_acc), None
+
+            zeros_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zeros_m = {"loss": jnp.zeros((), jnp.float32),
+                       "ce": jnp.zeros((), jnp.float32),
+                       "aux": jnp.zeros((), jnp.float32)}
+            if cfg.mtp_depth:
+                zeros_m["mtp"] = jnp.zeros((), jnp.float32)
+            (grads, msum), _ = lax.scan(accum, (zeros_g, zeros_m), mb)
+            grads = jax.tree.map(lambda g: g / tc.microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / tc.microbatches, msum)
+        else:
+            (lv, metrics), grads = grad_fn(params, batch)
+            metrics = {"loss": lv, **metrics}
+
+        new_error = error_state
+        if tc.compress_pod_grads and error_state is not None:
+            grads, new_error = compress.ef_compress_grads(grads, error_state)
+
+        params2, opt_state2, opt_metrics = adamw.apply_updates(
+            tc.optimizer, params, grads, opt_state)
+        metrics.update(opt_metrics)
+        if tc.compress_pod_grads:
+            return params2, opt_state2, metrics, new_error
+        return params2, opt_state2, metrics
+
+    return train_step

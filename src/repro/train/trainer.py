@@ -1,0 +1,136 @@
+"""Production training loop: sharded step, checkpoint/restart, preemption
+safety (SIGTERM -> final checkpoint), straggler-tolerant input prefetch,
+metrics logging. Designed so the same loop runs 1-device smoke tests and
+the 512-chip production mesh (the mesh/shardings are injected).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+from repro.common import materialize
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import PrefetchingLoader, TokenPipeline
+from repro.models import model as M
+from repro.optim import adamw, compress
+from repro.parallel import sharding as SH
+from repro.train.steps import TrainConfig, make_train_step
+
+
+@dataclasses.dataclass
+class RunConfig:
+    steps: int = 100
+    batch: int = 8
+    seq: int = 128
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    log_every: int = 10
+    seed: int = 0
+    deadline_ms: Optional[float] = None   # straggler mitigation: skip batches
+                                          # arriving later than this budget
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, rc: RunConfig,
+                 mesh=None):
+        self.cfg, self.tc, self.rc, self.mesh = cfg, tc, rc, mesh
+        self.specs = M.param_specs(cfg)
+        self._preempted = False
+        step_fn = make_train_step(cfg, tc, mesh)
+        if mesh is not None:
+            pshard = SH.spec_tree_to_shardings(self.specs, mesh)
+            self.step_fn = jax.jit(step_fn, in_shardings=(pshard, None, None),
+                                   donate_argnums=(0, 1))
+        else:
+            self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    # -- state ------------------------------------------------------------
+    def init_state(self):
+        params = materialize(self.specs, jax.random.key(self.rc.seed))
+        opt = adamw.init_state(self.tc.optimizer, params)
+        err = (compress.init_error_state(params)
+               if self.tc.compress_pod_grads else None)
+        return params, opt, err
+
+    def try_restore(self, params, opt):
+        if not self.rc.ckpt_dir or ckpt.latest_step(self.rc.ckpt_dir) is None:
+            return params, opt, None, 0
+        shardings = None
+        if self.mesh is not None:
+            shardings = {"params": SH.spec_tree_to_shardings(self.specs, self.mesh),
+                         "opt": None}
+        restored, extras = ckpt.restore(
+            self.rc.ckpt_dir, {"params": params, "opt": opt},
+            shardings=shardings)
+        return (restored["params"], restored["opt"], extras.get("data_state"),
+                extras.get("step", ckpt.latest_step(self.rc.ckpt_dir)))
+
+    # -- preemption -------------------------------------------------------
+    def _install_sigterm(self):
+        def handler(signum, frame):
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # not main thread
+
+    # -- loop ---------------------------------------------------------------
+    def run(self, progress: Optional[Callable[[int, Dict], None]] = None):
+        self._install_sigterm()
+        params, opt, err = self.init_state()
+        params, opt, data_state, start = self.try_restore(params, opt)
+        pipe = (TokenPipeline.from_state(self.cfg, self.rc.batch, self.rc.seq,
+                                         data_state)
+                if data_state else
+                TokenPipeline(self.cfg, self.rc.batch, self.rc.seq,
+                              seed=self.rc.seed))
+        loader = PrefetchingLoader(pipe, buffer=2)
+        history = []
+        step = start
+        skipped = 0
+        try:
+            while step < self.rc.steps:
+                t0 = time.time()
+                batch = next(loader)
+                wait_ms = (time.time() - t0) * 1e3
+                if (self.rc.deadline_ms is not None
+                        and wait_ms > self.rc.deadline_ms and step > start):
+                    skipped += 1     # straggler batch: drop, keep cadence
+                    continue
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                if self.tc.compress_pod_grads:
+                    params, opt, metrics, err = self.step_fn(params, opt,
+                                                             batch, err)
+                else:
+                    params, opt, metrics = self.step_fn(params, opt, batch)
+                step += 1
+                if step % self.rc.log_every == 0 or step == self.rc.steps:
+                    row = {k: float(v) for k, v in metrics.items()}
+                    row["step"] = step
+                    row["skipped_batches"] = skipped
+                    history.append(row)
+                    if progress:
+                        progress(step, row)
+                want_ckpt = (self.rc.ckpt_dir
+                             and (step % self.rc.ckpt_every == 0
+                                  or step == self.rc.steps or self._preempted))
+                if want_ckpt:
+                    ckpt.save(self.rc.ckpt_dir, step,
+                              {"params": params, "opt": opt},
+                              extras={"step": step,
+                                      "data_state": pipe.state()})
+                    ckpt.prune_old(self.rc.ckpt_dir, self.rc.keep_ckpts)
+                if self._preempted:
+                    break
+        finally:
+            loader.stop()
+        return params, opt, history

@@ -1,0 +1,101 @@
+"""CRONet reproduction tests: paper Table I exact numbers, fusion-path
+equivalence (megakernel == layerwise == reference), decoder shapes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common import materialize, param_count
+from repro.configs.cronet import SIZES, get_cronet_config
+from repro.core import cronet, fusion
+
+
+def test_param_count_matches_paper():
+    cfg = get_cronet_config("medium")
+    assert cfg.param_count() == 419760          # paper: "419K parameters"
+    assert param_count(cronet.param_specs(cfg)) == 419760
+    # constant across sizes (paper §VI-B)
+    for c in SIZES.values():
+        assert c.param_count() == 419760
+
+
+def test_per_layer_params_match_table1():
+    cfg = get_cronet_config("medium")
+    specs = cronet.param_specs(cfg)
+    t, b = specs["trunk"], specs["branch"]
+    sz = lambda s: int(np.prod(s.shape))
+    assert sz(t["conv1"]) == 288          # Table I: 288
+    assert sz(t["conv2"]) == 9216         # Table I: 9K
+    assert sz(t["fc1"]) == 192000         # Table I: 192K
+    assert sz(t["fc2"]) == 102400         # Table I: 102K
+    assert sz(b["conv1"]) == 144          # Table I: 144
+    assert sz(b["conv2"]) == 4608         # Table I: 4.6K
+    assert sz(b["rnn_wx"]) + sz(b["rnn_wh"]) == 6144   # Table I: 6.1K
+    assert sz(b["fc1"]) == 2560           # Table I: 2.5K
+    assert sz(b["fc2"]) == 102400         # Table I: 102K
+
+
+@pytest.mark.parametrize("size,total_macs", [("small", 27.6e6),
+                                             ("medium", 53.5e6),
+                                             ("large", 105.8e6)])
+def test_macs_match_table1(size, total_macs):
+    macs = cronet.count_macs(get_cronet_config(size))
+    assert abs(macs["total"] - total_macs) / total_macs < 0.01, macs["total"]
+
+
+def test_fusion_paths_equivalent():
+    cfg = dataclasses.replace(get_cronet_config("small"), dtype="float32")
+    params = materialize(cronet.param_specs(cfg), jax.random.key(1))
+    lv = jax.random.normal(jax.random.key(2),
+                           (4, cfg.nely + 1, cfg.nelx + 1, 1), jnp.float32) * 0.3
+    hist = jax.random.uniform(jax.random.key(3),
+                              (cfg.hist_len, cfg.nely, cfg.nelx, 1))
+    ref = cronet.forward(cfg, params, lv[None], hist[None])[0]
+    for fc in [fusion.FusionConfig(True, True, True),
+               fusion.FusionConfig(True, False, False),
+               fusion.FusionConfig(False, False, False)]:
+        out = fusion.infer(cfg, params, lv, hist, fc)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"fusion path {fc.path}")
+
+
+def test_megakernel_bf16():
+    cfg = get_cronet_config("small")   # bf16 default (deployment precision)
+    params = materialize(cronet.param_specs(cfg), jax.random.key(1))
+    lv = (jax.random.normal(jax.random.key(2),
+                            (4, cfg.nely + 1, cfg.nelx + 1, 1)) * 0.3
+          ).astype(jnp.bfloat16)
+    hist = jax.random.uniform(jax.random.key(3),
+                              (cfg.hist_len, cfg.nely, cfg.nelx, 1)
+                              ).astype(jnp.bfloat16)
+    ref = cronet.forward(cfg, params, lv[None], hist[None])[0]
+    out = fusion.infer(cfg, params, lv, hist)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=0.1, atol=0.1)
+
+
+def test_decode_displacement_shapes():
+    for size, c in SIZES.items():
+        u = jnp.zeros((2, c.p))
+        grid = cronet.decode_displacement(c, u)
+        assert grid.shape == (2, c.nely + 1, c.nelx + 1, 2)
+
+
+def test_trunk_branch_independence():
+    """BranchNet/TrunkNet share no inputs until the Mul — the property the
+    paper exploits for concurrent execution (§IV-A)."""
+    cfg = dataclasses.replace(get_cronet_config("small"), dtype="float32")
+    params = materialize(cronet.param_specs(cfg), jax.random.key(1))
+    lv = jnp.ones((1, 4, cfg.nely + 1, cfg.nelx + 1, 1))
+    h1 = jnp.zeros((1, cfg.hist_len, cfg.nely, cfg.nelx, 1))
+    h2 = jnp.ones((1, cfg.hist_len, cfg.nely, cfg.nelx, 1))
+    t1 = cronet.trunk_forward(cfg, params["trunk"], lv)
+    t2 = cronet.trunk_forward(cfg, params["trunk"], lv)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    b1 = cronet.branch_forward(cfg, params["branch"], h1)
+    b2 = cronet.branch_forward(cfg, params["branch"], h2)
+    assert not np.allclose(np.asarray(b1), np.asarray(b2))

@@ -1,0 +1,95 @@
+"""FEA/SIMP baseline properties (unit + hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fea import fea2d, simp
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return fea2d.mbb_problem(12, 6)
+
+
+def test_stiffness_spd(prob):
+    """u^T K u > 0 for nonzero free u (K SPD on free dofs)."""
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        u = jnp.asarray(rng.standard_normal(prob.f.shape[0])) * prob.free_mask
+        x = jnp.full((prob.nely, prob.nelx), 0.5)
+        e = float(jnp.vdot(u, fea2d.stiffness_apply(prob, x, u)))
+        assert e > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.1, 1.0), st.floats(0.1, 1.0))
+def test_stiffness_linearity(a, b):
+    """K(x) (a u1 + b u2) == a K u1 + b K u2."""
+    prob = fea2d.mbb_problem(8, 4)
+    rng = np.random.default_rng(1)
+    u1 = jnp.asarray(rng.standard_normal(prob.f.shape[0]))
+    u2 = jnp.asarray(rng.standard_normal(prob.f.shape[0]))
+    x = jnp.full((prob.nely, prob.nelx), 0.7)
+    lhs = fea2d.stiffness_apply(prob, x, a * u1 + b * u2)
+    rhs = a * fea2d.stiffness_apply(prob, x, u1) + b * fea2d.stiffness_apply(prob, x, u2)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_cg_solves(prob):
+    x = jnp.full((prob.nely, prob.nelx), 0.5)
+    u, it = fea2d.solve(prob, x)
+    r = prob.f * prob.free_mask - fea2d.stiffness_apply(prob, x, u)
+    rel = float(jnp.linalg.norm(r) / jnp.linalg.norm(prob.f))
+    assert rel < 5e-4      # fp32 CG floor on ill-conditioned SIMP stiffness
+    assert int(it) < 2000
+
+
+def test_fixed_dofs_zero(prob):
+    x = jnp.full((prob.nely, prob.nelx), 0.5)
+    u, _ = fea2d.solve(prob, x)
+    fixed = np.where(np.asarray(prob.free_mask) == 0)[0]
+    np.testing.assert_allclose(np.asarray(u)[fixed], 0.0)
+
+
+def test_denser_is_stiffer(prob):
+    """More material => lower compliance (monotonicity)."""
+    u1, _ = fea2d.solve(prob, jnp.full((prob.nely, prob.nelx), 0.3))
+    c1, _ = fea2d.compliance_and_sens(prob, jnp.full((prob.nely, prob.nelx), 0.3), u1)
+    u2, _ = fea2d.solve(prob, jnp.full((prob.nely, prob.nelx), 0.9))
+    c2, _ = fea2d.compliance_and_sens(prob, jnp.full((prob.nely, prob.nelx), 0.9), u2)
+    assert float(c2) < float(c1)
+
+
+def test_sensitivities_negative(prob):
+    """dC/dx <= 0 everywhere: adding material never hurts compliance."""
+    x = jnp.full((prob.nely, prob.nelx), 0.5)
+    u, _ = fea2d.solve(prob, x)
+    _, dc = fea2d.compliance_and_sens(prob, x, u)
+    assert float(jnp.max(dc)) <= 1e-9
+
+
+def test_simp_improves_and_respects_volume(prob):
+    state, hist = simp.run_simp(prob, n_iter=8)
+    assert hist["c"][-1] < hist["c"][0]
+    assert abs(float(jnp.mean(state.x)) - prob.volfrac) < 0.01
+    assert float(state.x.min()) >= 0.001 and float(state.x.max()) <= 1.0
+
+
+def test_oc_update_volume_projection():
+    x = jnp.full((6, 12), 0.5)
+    dc = -jnp.abs(jax.random.normal(jax.random.key(0), (6, 12)))
+    dv = jnp.ones_like(x) / x.size
+    xn = simp.oc_update(x, dc, dv, 0.5)
+    assert abs(float(jnp.mean(xn)) - 0.5) < 0.02
+
+
+def test_load_volume_layout(prob):
+    vol = fea2d.load_volume(prob)
+    assert vol.shape == (4, prob.nely + 1, prob.nelx + 1, 1)
+    # Fy at node (0,0) carries the unit load
+    assert float(vol[1, 0, 0, 0]) == -1.0
+    # left edge x-support flags set
+    assert float(vol[2, :, 0, 0].sum()) == prob.nely + 1

@@ -1,0 +1,124 @@
+"""End-to-end behaviour tests: trainer with checkpoint/resume, serving
+engine, hybrid NN-FEA loop, HLO analyzer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common import materialize
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train.steps import TrainConfig
+from repro.train.trainer import RunConfig, Trainer
+
+
+def _tc(steps=6):
+    return TrainConfig(optimizer=adamw.AdamWConfig(
+        lr=1e-3, warmup_steps=1, total_steps=steps))
+
+
+def test_trainer_end_to_end(tmp_path):
+    cfg = get_config("granite-8b").reduce()
+    rc = RunConfig(steps=6, batch=2, seq=16, ckpt_dir=str(tmp_path),
+                   ckpt_every=3, log_every=2)
+    t = Trainer(cfg, _tc(), rc)
+    _, _, hist = t.run()
+    assert hist[-1]["step"] == 6
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    # checkpoint landed
+    from repro.checkpoint import manager as ckpt
+    assert ckpt.latest_step(str(tmp_path)) == 6
+
+
+def test_trainer_resumes(tmp_path):
+    cfg = get_config("granite-8b").reduce()
+    rc = RunConfig(steps=4, batch=2, seq=16, ckpt_dir=str(tmp_path),
+                   ckpt_every=2, log_every=1)
+    t = Trainer(cfg, _tc(4), rc)
+    t.run()
+    # extend run: trainer must resume from step 4, not restart
+    rc2 = RunConfig(steps=6, batch=2, seq=16, ckpt_dir=str(tmp_path),
+                    ckpt_every=2, log_every=1)
+    t2 = Trainer(cfg, _tc(6), rc2)
+    _, _, hist2 = t2.run()
+    assert hist2[0]["step"] >= 5   # started past the checkpoint
+
+
+def test_trainer_with_compression(tmp_path):
+    cfg = get_config("granite-8b").reduce()
+    tc = TrainConfig(compress_pod_grads=True,
+                     optimizer=adamw.AdamWConfig(lr=1e-3, warmup_steps=1,
+                                                 total_steps=5))
+    rc = RunConfig(steps=5, batch=2, seq=16, log_every=1)
+    _, _, hist = Trainer(cfg, tc, rc).run()
+    assert np.isfinite(hist[-1]["loss"])
+    assert hist[-1]["loss"] < hist[0]["loss"] * 1.5
+
+
+def test_serving_engine():
+    from repro.serve.server import Request, ServingEngine
+    cfg = get_config("qwen2.5-32b").reduce()
+    params = materialize(M.param_specs(cfg), jax.random.key(0))
+    engine = ServingEngine(cfg, params, slots=2, max_len=48)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(0, 200, size=5 + i).astype(np.int32),
+                    max_new=4) for i in range(3)]
+    done = engine.run(reqs)
+    assert all(r.done and r.output is not None and len(r.output) == 4
+               for r in done)
+    stats = engine.throughput_stats(done)
+    assert stats["total_new_tokens"] == 12
+
+
+def test_hybrid_loop_smoke():
+    """12-iteration hybrid NN-FEA loop with an untrained net: must fall
+    back to FEA every time and still match the pure-FEA trajectory."""
+    import dataclasses
+
+    from repro.configs.cronet import get_cronet_config
+    from repro.core import cronet
+    from repro.fea import hybrid
+    cfg = dataclasses.replace(get_cronet_config("small"), nelx=12, nely=4)
+    params = materialize(cronet.param_specs(
+        dataclasses.replace(cfg, dtype="float32")), jax.random.key(0))
+    res = hybrid.run_hybrid(cfg, params, u_scale=100.0, n_iter=12,
+                            precision="fp32")
+    assert res.fea_invocations >= 10      # untrained net is rejected
+    assert res.solution_accuracy > 95.0   # therefore tracks pure FEA
+
+
+def test_hlo_analyzer_scan_exact():
+    from repro.launch.hlo_analysis import analyze
+    L = 5
+
+    def f(ws, x):
+        def body(x, w):
+            return jnp.dot(x, w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    ws = jax.ShapeDtypeStruct((L, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    compiled = jax.jit(f).lower(ws, x).compile()
+    costs = analyze(compiled.as_text())
+    assert costs.flops == 2 * L * 8 * 64 * 64
+
+
+def test_input_specs_cover_all_cells():
+    """Every applicable (arch x shape) produces abstract inputs with no
+    allocation (the dry-run's contract)."""
+    from repro.configs.all import ASSIGNED
+    from repro.configs.base import applicable_shapes
+    from repro.launch.specs import input_specs
+    n = 0
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            specs = input_specs(cfg, shape)
+            assert all(isinstance(l, jax.ShapeDtypeStruct)
+                       for l in jax.tree.leaves(specs))
+            n += 1
+    assert n == 31   # 40 assigned cells minus 9 documented skips
