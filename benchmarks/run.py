@@ -17,7 +17,7 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (characterization, layer_breakdown, placement,
-                            precision, roofline, scaling)
+                            precision, roofline, scaling, topo_serving)
 
     suites = {
         "characterization": characterization,   # Table I
@@ -26,6 +26,7 @@ def main() -> None:
         "layer_breakdown": layer_breakdown,     # Fig 7
         "placement": placement,                 # Table VI
         "roofline": roofline,                   # EXPERIMENTS.md §Roofline
+        "topo_serving": topo_serving,           # batched serving tentpole
     }
     print("name,us_per_call,derived")
     for name, mod in suites.items():

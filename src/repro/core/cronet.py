@@ -125,25 +125,41 @@ def silu(x):
     return jax.nn.silu(x)
 
 
+def matmul(x, w):
+    """Batch-invariant (B, K) @ (K, N): one GEMV per row via lax.map.
+
+    XLA's CPU GEMM picks different micro-kernel blockings for different M,
+    so row b of ``x @ w`` is not bitwise-identical between B=1 and B>1
+    calls. The batched topology-optimization service (serve/topo_service.py)
+    promises densities bitwise-equal to per-problem runs, so the oracle's
+    FC/RNN layers map a fixed-shape (K,) @ (K, N) GEMV over the batch: the
+    loop body (and therefore the per-row reduction order) is identical at
+    every batch width, and the GEMV itself stays a fast BLAS-style kernel.
+    """
+    return jax.lax.map(lambda r: r @ w, x)
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
 
 
-def trunk_forward(cfg: CRONetConfig, p, load_vol):
+def trunk_forward(cfg: CRONetConfig, p, load_vol, invariant: bool = True):
     """load_vol: (B, 4, ny+1, nx+1, 1) -> (B, p)."""
+    mm = matmul if invariant else jnp.matmul
     x = conv3d(load_vol, p["conv1"], "causal_same")   # (B,4,H,W,16) depth-same
     x = silu(x)
     x = conv3d(x, p["conv2"], "same")                  # kd=1 -> depth preserved
     x = silu(x)
     x = adaptive_avg_pool3d(x, cfg.t_pool)             # (B,3,5,5,64)
     x = x.reshape(x.shape[0], -1)                      # (B, 4800)
-    x = silu(x @ p["fc1"])
-    return x @ p["fc2"]
+    x = silu(mm(x, p["fc1"]))
+    return mm(x, p["fc2"])
 
 
-def branch_forward(cfg: CRONetConfig, p, hist):
+def branch_forward(cfg: CRONetConfig, p, hist, invariant: bool = True):
     """hist: (B, T, ny, nx, 1) -> (B, p). Time-distributed CNN -> RNN."""
+    mm = matmul if invariant else jnp.matmul
     b, t = hist.shape[:2]
     x = hist.reshape(b * t, *hist.shape[2:])
     x = silu(conv2d_same(x, p["conv1"]))
@@ -155,15 +171,20 @@ def branch_forward(cfg: CRONetConfig, p, hist):
     # fully-unrolled vanilla RNN (paper: RNN reuses GEMM kernels, Tanh L1-fused)
     h = jnp.zeros((b, cfg.rnn_hidden), feats.dtype)
     for i in range(t):
-        h = jnp.tanh(feats[:, i] @ p["rnn_wx"] + h @ p["rnn_wh"])
-    x = silu(h @ p["fc1"])
-    return x @ p["fc2"]
+        h = jnp.tanh(mm(feats[:, i], p["rnn_wx"]) + mm(h, p["rnn_wh"]))
+    x = silu(mm(h, p["fc1"]))
+    return mm(x, p["fc2"])
 
 
-def forward(cfg: CRONetConfig, params, load_vol, hist):
-    """Returns the p-dim Mul output (B, p) — the paper's GMIO-out tensor."""
-    tr = trunk_forward(cfg, params["trunk"], load_vol)
-    br = branch_forward(cfg, params["branch"], hist)
+def forward(cfg: CRONetConfig, params, load_vol, hist, invariant: bool = True):
+    """Returns the p-dim Mul output (B, p) — the paper's GMIO-out tensor.
+
+    invariant=True routes FC/RNN layers through the batch-invariant GEMV
+    map (required by the serving/hybrid bitwise contract); pass False on
+    paths that don't need it (training) for plain-GEMM speed.
+    """
+    tr = trunk_forward(cfg, params["trunk"], load_vol, invariant)
+    br = branch_forward(cfg, params["branch"], hist, invariant)
     return br * tr
 
 
@@ -177,6 +198,13 @@ def decode_displacement(cfg: CRONetConfig, u_vec):
     grid = u_vec.reshape(b, 32, 40, 2).astype(jnp.float32)
     ny, nx = cfg.nodes
     return jax.image.resize(grid, (b, ny, nx, 2), method="bilinear")
+
+
+def decode_to_dofs(cfg: CRONetConfig, u_vec):
+    """(B, p) -> (B, ndof) in the 88-line dof layout (node n = x*(nely+1)+y,
+    dofs [2n, 2n+1]) — the layout fea2d solves in."""
+    grid = decode_displacement(cfg, u_vec)             # (B, ny+1, nx+1, 2)
+    return jnp.transpose(grid, (0, 2, 1, 3)).reshape(u_vec.shape[0], -1)
 
 
 def count_macs(cfg: CRONetConfig) -> Dict[str, int]:

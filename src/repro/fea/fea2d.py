@@ -67,20 +67,41 @@ def _edof_matrix(nelx: int, nely: int) -> np.ndarray:
 def mbb_problem(nelx: int, nely: int, volfrac: float = 0.5) -> Problem:
     """MBB half-beam: unit downward load at top-left node; x symmetry on the
     left edge; y support at bottom-right node (paper's benchmark)."""
+    return point_load_problem(nelx, nely, volfrac=volfrac)
+
+
+def point_load_problem(nelx: int, nely: int, load_node=(0, 0),
+                       load=(0.0, -1.0), volfrac: float = 0.5) -> Problem:
+    """MBB-style boundary conditions with a parameterizable point load —
+    the per-request degree of freedom the serving queue exercises (one
+    load case per bridge/monitoring event, paper's digital-twin framing).
+
+    load_node: (x, y) grid coordinates of the loaded node; load: (Fx, Fy).
+    ``point_load_problem(nelx, nely)`` reproduces ``mbb_problem(nelx, nely)``.
+    """
+    xn, yn = load_node
+    if not (0 <= xn <= nelx and 0 <= yn <= nely):
+        raise ValueError(f"load node {load_node} outside {nelx}x{nely} grid")
     ndof = 2 * (nelx + 1) * (nely + 1)
+    node = xn * (nely + 1) + yn
     f = np.zeros(ndof)
-    f[1] = -1.0                                   # Fy at node (0, 0)
-    fixed = list(range(0, 2 * (nely + 1), 2))     # left edge x-dofs
+    f[2 * node] = load[0]
+    f[2 * node + 1] = load[1]
+    fixed = list(range(0, 2 * (nely + 1), 2))      # left edge x-dofs
     fixed.append(2 * (nelx + 1) * (nely + 1) - 1)  # bottom-right y
     free_mask = np.ones(ndof)
     free_mask[fixed] = 0.0
     fixed_x = np.zeros(ndof)
     fixed_x[fixed] = 1.0
+    if not np.any(f * free_mask):
+        raise ValueError(
+            f"load {load} at node {load_node} acts only on fixed dofs — "
+            "the problem would be all-zero (use idle_problem for padding)")
     return Problem(
         nelx=nelx, nely=nely,
         edof=jnp.asarray(_edof_matrix(nelx, nely)),
         free_mask=jnp.asarray(free_mask),
-        f=jnp.asarray(f),
+        f=jnp.asarray(f * free_mask),
         KE=jnp.asarray(element_stiffness()),
         volfrac=volfrac,
         fixed_x_mask=jnp.asarray(fixed_x),
@@ -141,7 +162,8 @@ def compliance_and_sens(prob: Problem, x_phys: jnp.ndarray, u: jnp.ndarray):
     ce = jnp.einsum("ei,ij,ej->e", ue, prob.KE, ue)       # (ne,)
     xf = x_phys.reshape(-1)
     e = prob.e_min + xf ** prob.penal * (1 - prob.e_min)
-    c = jnp.sum(e * ce)
+    c = tree_sum(e * ce)    # batch-invariant: serving slots report the
+    # exact compliance a standalone run reports
     dc = -prob.penal * xf ** (prob.penal - 1) * (1 - prob.e_min) * ce
     return c, dc.reshape(x_phys.shape)
 
@@ -149,10 +171,240 @@ def compliance_and_sens(prob: Problem, x_phys: jnp.ndarray, u: jnp.ndarray):
 def load_volume(prob: Problem) -> jnp.ndarray:
     """(4, nely+1, nelx+1, 1) TrunkNet input: [Fx, Fy, supp_x, supp_y]
     stacked on the depth axis (configs/cronet.py reconstruction)."""
-    ny, nx = prob.nely + 1, prob.nelx + 1
-    fx = prob.f[0::2].reshape(nx, ny).T
-    fy = prob.f[1::2].reshape(nx, ny).T
-    sx = prob.fixed_x_mask[0::2].reshape(nx, ny).T
-    sy = prob.fixed_x_mask[1::2].reshape(nx, ny).T
+    return _load_volume(prob.f, prob.fixed_x_mask, prob.nelx, prob.nely)
+
+
+def _load_volume(f, fixed_x_mask, nelx: int, nely: int) -> jnp.ndarray:
+    ny, nx = nely + 1, nelx + 1
+    fx = f[0::2].reshape(nx, ny).T
+    fy = f[1::2].reshape(nx, ny).T
+    sx = fixed_x_mask[0::2].reshape(nx, ny).T
+    sy = fixed_x_mask[1::2].reshape(nx, ny).T
     vol = jnp.stack([fx, fy, sx, sy], axis=0)             # (4, ny, nx)
     return vol[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Batch axis — stacked problems sharing one mesh, for the slot-batched
+# topology-optimization service (serve/topo_service.py). Everything here is
+# bitwise batch-invariant on CPU: slot b of a B-wide call produces exactly
+# the arrays a standalone single-problem call produces (verified by
+# tests/test_topo_service.py).
+# ---------------------------------------------------------------------------
+
+
+def tree_sum(x, axis: int = -1):
+    """Batch-invariant sum: fixed balanced-tree pairwise reduction.
+
+    XLA's native row reductions (einsum "bi,bi->b", jnp.linalg.norm,
+    jnp.sum over a feature axis) pick different partial-sum orders for
+    different batch widths on CPU, so slot b of a B-wide reduction is not
+    bitwise-equal to the same reduction at B=1. This zero-pads the reduced
+    axis to a power of two and folds halves with elementwise adds — every
+    output element sums its inputs in one fixed tree order regardless of
+    the surrounding batch shape. O(log n) elementwise passes; used for the
+    long reductions in the serving-critical loop.
+    """
+    x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    p = 1 << max(n - 1, 0).bit_length()
+    if p != n:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, p - n)]
+        x = jnp.pad(x, pad)
+    while x.shape[-1] > 1:
+        half = x.shape[-1] // 2
+        x = x[..., :half] + x[..., half:]
+    return x[..., 0]
+
+
+def tree_dot(a, b, axis: int = -1):
+    """Batch-invariant dot product along `axis` (see tree_sum)."""
+    return tree_sum(a * b, axis=axis)
+
+
+def tree_norm(a, axis: int = -1):
+    """Batch-invariant L2 norm along `axis` (see tree_sum)."""
+    return jnp.sqrt(tree_sum(a * a, axis=axis))
+
+
+def idle_problem(nelx: int, nely: int, volfrac: float = 0.5) -> Problem:
+    """Zero-load, fully-fixed padding problem for empty serving slots: the
+    masked batched CG treats it as converged in zero iterations, so it
+    costs (almost) nothing to carry in a batch."""
+    ndof = 2 * (nelx + 1) * (nely + 1)
+    zeros = jnp.zeros((ndof,))
+    return Problem(
+        nelx=nelx, nely=nely, edof=jnp.asarray(_edof_matrix(nelx, nely)),
+        free_mask=zeros, f=zeros, KE=jnp.asarray(element_stiffness()),
+        volfrac=volfrac, fixed_x_mask=zeros)
+
+
+class BatchProblem(NamedTuple):
+    """B load cases stacked on a shared (nelx, nely) mesh. edof/KE/penalty
+    are mesh properties and stay unbatched; loads and supports are per-slot."""
+    nelx: int
+    nely: int
+    edof: jnp.ndarray          # (ne, 8) shared
+    KE: jnp.ndarray            # (8, 8) shared
+    f: jnp.ndarray             # (B, ndof)
+    free_mask: jnp.ndarray     # (B, ndof)
+    fixed_x_mask: jnp.ndarray  # (B, ndof)
+    volfrac: jnp.ndarray       # (B,)
+    penal: float = 3.0
+    e_min: float = 1e-9
+
+    @property
+    def batch(self) -> int:
+        return self.f.shape[0]
+
+
+def stack_problems(probs) -> BatchProblem:
+    """Stack same-mesh Problems into a BatchProblem (slot order preserved)."""
+    p0 = probs[0]
+    for p in probs[1:]:
+        if (p.nelx, p.nely) != (p0.nelx, p0.nely):
+            raise ValueError("all problems in a batch must share one mesh; "
+                             f"got {p.nelx}x{p.nely} vs {p0.nelx}x{p0.nely}")
+        if p.penal != p0.penal or p.e_min != p0.e_min:
+            raise ValueError("SIMP penalty/e_min must match across a batch")
+    return BatchProblem(
+        nelx=p0.nelx, nely=p0.nely, edof=p0.edof, KE=p0.KE,
+        f=jnp.stack([p.f for p in probs]),
+        free_mask=jnp.stack([p.free_mask for p in probs]),
+        fixed_x_mask=jnp.stack([p.fixed_x_mask for p in probs]),
+        volfrac=jnp.asarray([p.volfrac for p in probs]),
+        penal=p0.penal, e_min=p0.e_min,
+    )
+
+
+def _ke_apply(KE, ue):
+    """(KE @ ue_e) per element with a fixed, unrolled contraction order —
+    a dot_general here lowers differently per batch width. ue: (..., 8)."""
+    acc = ue[..., 0:1] * KE[:, 0]
+    for j in range(1, 8):
+        acc = acc + ue[..., j:j + 1] * KE[:, j]
+    return acc
+
+
+def _simp_e(bp: BatchProblem, X):
+    return bp.e_min + (X.reshape(X.shape[0], -1) ** bp.penal) * (1 - bp.e_min)
+
+
+def _ue_slices(Ug):
+    """Element-local dofs as pure slices of the (B, nelx+1, nely+1, 2) dof
+    grid, in the 88-line edof local order [n1 n2 n3 n4] x [x y]. The quad
+    mesh is structured, so the per-trip gathers of a U[:, edof] formulation
+    (XLA CPU gathers cost ~10ns/element and dominate the CG body) reduce
+    to free slicing. Returns (B, nelx, nely, 8)."""
+    n1 = Ug[:, :-1, :-1, :]        # node (ex,   ey)
+    n2 = Ug[:, 1:, :-1, :]         # node (ex+1, ey)
+    n3 = Ug[:, 1:, 1:, :]          # node (ex+1, ey+1)
+    n4 = Ug[:, :-1, 1:, :]         # node (ex,   ey+1)
+    return jnp.concatenate([n1, n2, n3, n4], axis=-1)
+
+
+def _assemble(fe):
+    """Scatter-free assembly: per-element dof contributions fe
+    (B, nelx, nely, 8) -> nodal dof grid (B, nelx+1, nely+1, 2) by adding
+    four zero-padded shifted slices in one fixed order. XLA's scatter-add
+    accumulates duplicate indices in a lowering-defined order that changes
+    with batch width; this is deterministic (and much faster)."""
+    z = ((0, 0),)
+    c1 = jnp.pad(fe[..., 0:2], (*z, (0, 1), (0, 1), *z))
+    c2 = jnp.pad(fe[..., 2:4], (*z, (1, 0), (0, 1), *z))
+    c3 = jnp.pad(fe[..., 4:6], (*z, (1, 0), (1, 0), *z))
+    c4 = jnp.pad(fe[..., 6:8], (*z, (0, 1), (1, 0), *z))
+    return (c1 + c2) + (c3 + c4)
+
+
+def _e_grid(bp: BatchProblem, X):
+    """SIMP stiffness per element on the (nelx, nely) element grid, using
+    the same flat element indexing as the single-problem path (reshape,
+    not transpose — matches stiffness_apply's x_phys.reshape(-1))."""
+    B, nely, nelx = X.shape
+    return bp.e_min + (X.reshape(B, nelx, nely) ** bp.penal) * (1 - bp.e_min)
+
+
+def stiffness_apply_b(bp: BatchProblem, X, U):
+    """Batched matrix-free K(x) u. X: (B, nely, nelx); U: (B, ndof)."""
+    B, nely, nelx = X.shape
+    Ug = U.reshape(B, nelx + 1, nely + 1, 2)
+    fe = _e_grid(bp, X)[..., None] * _ke_apply(bp.KE, _ue_slices(Ug))
+    return _assemble(fe).reshape(B, -1) * bp.free_mask
+
+
+def compliance_and_sens_b(bp: BatchProblem, X, U):
+    """Batched compliance + SIMP sensitivity. Returns ((B,), (B, nely, nelx))."""
+    B, nely, nelx = X.shape
+    ue = _ue_slices(U.reshape(B, nelx + 1, nely + 1, 2))
+    ce = tree_sum(ue * _ke_apply(bp.KE, ue), axis=-1)   # (B, nelx, nely)
+    ce = ce.reshape(B, -1)                              # el = ex*nely + ey
+    e = _simp_e(bp, X)
+    c = tree_sum(e * ce, axis=-1)
+    xf = X.reshape(B, -1)
+    dc = -bp.penal * xf ** (bp.penal - 1) * (1 - bp.e_min) * ce
+    return c, dc.reshape(X.shape)
+
+
+def load_volume_b(bp: BatchProblem) -> jnp.ndarray:
+    """(B, 4, nely+1, nelx+1, 1) TrunkNet inputs, one per slot."""
+    return jax.vmap(lambda f, m: _load_volume(f, m, bp.nelx, bp.nely))(
+        bp.f, bp.fixed_x_mask)
+
+
+def solve_b(bp: BatchProblem, X, tol: float = 1e-6, max_iter: int = 2000,
+            U0=None, need=None):
+    """Batched Jacobi-preconditioned CG with per-slot convergence masking.
+
+    Same update recurrence as ``solve``: each slot performs the identical
+    update sequence at any batch width, then freezes (masked out of the
+    while-loop body) once its own residual criterion is met — so results
+    are bitwise slot-invariant, while the loop trip count is the max over
+    the still-active slots. A slot with f == 0 (an empty serving slot)
+    converges in zero iterations. `need` (bool (B,)) marks slots whose
+    solution the caller will actually consume; the others are masked out
+    immediately so they burn zero iterations (their U stays the warm
+    start). Returns (U, per-slot iters).
+    """
+    F = bp.f * bp.free_mask
+    diag_e = _e_grid(bp, X)[..., None] * jnp.diag(bp.KE)[None, None, None, :]
+    diag = _assemble(diag_e).reshape(X.shape[0], -1)
+    diag = jnp.where(diag > 0, diag, 1.0)
+    if need is None:
+        need = jnp.ones((F.shape[0],), bool)
+
+    def precond(R):
+        return R / diag * bp.free_mask
+
+    U = jnp.zeros_like(F) if U0 is None else U0 * bp.free_mask
+    R = F - stiffness_apply_b(bp, X, U)
+    Z = precond(R)
+    P = Z
+    RZ = tree_dot(R, Z)
+    fnorm = tree_norm(F)
+
+    def active_of(R, its):
+        return need & (tree_norm(R) > tol * fnorm) & (its < max_iter)
+
+    def cond(state):
+        U, R, P, RZ, its = state
+        return jnp.any(active_of(R, its))
+
+    def body(state):
+        U, R, P, RZ, its = state
+        act = active_of(R, its)
+        KP = stiffness_apply_b(bp, X, P)
+        alpha = RZ / jnp.maximum(tree_dot(P, KP), 1e-30)
+        U_n = U + alpha[:, None] * P
+        R_n = R - alpha[:, None] * KP
+        Z = precond(R_n)
+        RZ_n = tree_dot(R_n, Z)
+        P_n = Z + (RZ_n / jnp.maximum(RZ, 1e-30))[:, None] * P
+        m = act[:, None]
+        return (jnp.where(m, U_n, U), jnp.where(m, R_n, R),
+                jnp.where(m, P_n, P), jnp.where(act, RZ_n, RZ),
+                its + act.astype(jnp.int32))
+
+    its0 = jnp.zeros((F.shape[0],), jnp.int32)
+    U, R, P, RZ, its = jax.lax.while_loop(cond, body, (U, R, Z, RZ, its0))
+    return U, its

@@ -6,11 +6,20 @@ iff the physics residual ||K u_pred - f|| / ||f|| is below a threshold —
 otherwise FEA is invoked for that iteration (the paper's dynamic
 selection). Reports CRONet invocation count + solution accuracy vs the
 pure-FEA reference, reproducing Table III for fp32/bf16/int8 weights.
+
+The loop is implemented as a pure, batch-first step function over stacked
+problem state (density, history ring-buffer, displacement, per-slot gate
+bookkeeping): ONE compiled ``hybrid_step`` drives both the classic
+single-problem ``run_hybrid`` (B=1) and the slot-batched serving engine
+(serve/topo_service.py, B=slots). All constituent ops are bitwise
+batch-invariant on CPU, so slot b of a batched run reproduces a standalone
+run exactly — the property the serving benchmark asserts.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+import functools
+from typing import Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +29,8 @@ from repro.configs.cronet import CRONetConfig
 from repro.core import cronet
 from repro.fea import fea2d, simp
 from repro.optim.compress import dequantize_int8, quantize_int8
+
+_INPUT_DTYPE = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.float32}
 
 
 def cast_params(params, precision: str):
@@ -36,6 +47,139 @@ def cast_params(params, precision: str):
     raise ValueError(precision)
 
 
+class HybridState(NamedTuple):
+    """Stacked per-slot optimization state (leading axis B)."""
+    x: jnp.ndarray          # (B, nely, nelx) densities
+    u: jnp.ndarray          # (B, ndof) last accepted displacement
+    hist: jnp.ndarray       # (B, T, nely, nelx) density ring buffer, oldest first
+    it: jnp.ndarray         # (B,) int32 per-slot iteration counter
+    err: jnp.ndarray        # (B,) last measured CRONet relative L2 error
+    n_cronet: jnp.ndarray   # (B,) int32 accepted-surrogate iterations
+    n_fea: jnp.ndarray      # (B,) int32 FEA iterations
+    compliance: jnp.ndarray  # (B,) compliance of the last iteration
+
+
+def init_state(cfg: CRONetConfig, bp: fea2d.BatchProblem) -> HybridState:
+    """Fresh state for every slot: uniform volfrac density, cold history."""
+    B = bp.batch
+    # each field gets its own buffer: the jitted step donates the state, and
+    # aliased leaves would be donated twice
+    return HybridState(
+        x=jnp.broadcast_to(bp.volfrac[:, None, None],
+                           (B, bp.nely, bp.nelx)).astype(jnp.float32),
+        u=jnp.zeros_like(bp.f),
+        hist=jnp.zeros((B, cfg.hist_len, bp.nely, bp.nelx), jnp.float32),
+        it=jnp.zeros((B,), jnp.int32),
+        err=jnp.full((B,), jnp.inf, jnp.float32),
+        n_cronet=jnp.zeros((B,), jnp.int32),
+        n_fea=jnp.zeros((B,), jnp.int32),
+        compliance=jnp.zeros((B,), jnp.float32),
+    )
+
+
+def reset_slot(cfg: CRONetConfig, state: HybridState, i: int,
+               volfrac: float) -> HybridState:
+    """Re-initialize slot i in place (serving refill after completion)."""
+    return HybridState(
+        x=state.x.at[i].set(jnp.full(state.x.shape[1:], volfrac)),
+        u=state.u.at[i].set(0.0),
+        hist=state.hist.at[i].set(0.0),
+        it=state.it.at[i].set(0),
+        err=state.err.at[i].set(jnp.inf),
+        n_cronet=state.n_cronet.at[i].set(0),
+        n_fea=state.n_fea.at[i].set(0),
+        compliance=state.compliance.at[i].set(0.0),
+    )
+
+
+def _oracle_forward(cfg: CRONetConfig):
+    def fwd(params, load_vol, hist):
+        return cronet.forward(cfg, params, load_vol, hist)
+    return fwd
+
+
+def _megakernel_forward(cfg: CRONetConfig):
+    from repro.kernels import cronet_pipeline
+
+    def fwd(params, load_vol, hist):
+        return cronet_pipeline.cronet_fused(cfg, params, load_vol, hist,
+                                            interpret=True)
+    return fwd
+
+
+@functools.lru_cache(maxsize=32)
+def make_hybrid_step(cfg: CRONetConfig, u_scale: float,
+                     error_threshold: float = 0.05, verify_every: int = 3,
+                     rmin: float = 1.5, precision: str = "bf16",
+                     backend: str = "oracle") -> Callable:
+    """Build the jitted batched iteration:
+
+        step(params, bp: BatchProblem, load_vol (B,4,H,W,1), state) -> state
+
+    Selection rule (paper §VI-A: "based on the error of the previous
+    iteration's output"): whenever an FEA solve happens, CRONet's prediction
+    for that same state is scored (relative L2 vs FEA); CRONet is used for
+    subsequent iterations while the last measured error is under
+    `error_threshold`, with a forced FEA verification every `verify_every`
+    iterations — applied independently per slot. FEA runs once, batched,
+    for whichever slots need it (skipped entirely when no slot does);
+    accepted-surrogate slots discard the masked solve, so per-slot
+    trajectories are identical to standalone runs.
+
+    Cached per configuration so sequential B=1 callers and the B=slots
+    serving engine share one compiled artifact family (jax.jit re-traces
+    per batch width, not per call).
+    """
+    dtype = _INPUT_DTYPE[precision]
+    forward = {"oracle": _oracle_forward,
+               "megakernel": _megakernel_forward}[backend](cfg)
+    filt_b = simp.make_filter_b(cfg.nelx, cfg.nely, rmin)
+
+    @functools.partial(jax.jit, donate_argnums=(3,))
+    def step(params, bp: fea2d.BatchProblem, load_vol,
+             state: HybridState) -> HybridState:
+        warm = state.it >= cfg.hist_len
+
+        def predict():
+            pred = forward(params, load_vol.astype(dtype),
+                           state.hist[..., None].astype(dtype))  # (B, p)
+            return cronet.decode_to_dofs(cfg, pred) * u_scale * bp.free_mask
+
+        # pre-warm-up no slot can consume or score the prediction, so skip
+        # the forward entirely (it is the whole step cost on the
+        # interpret-mode megakernel backend)
+        u_pred = jax.lax.cond(jnp.any(warm), predict,
+                              lambda: jnp.zeros_like(bp.f))
+        use_cronet = (warm & (state.err < error_threshold)
+                      & (state.it % verify_every != 0))
+        need_fea = ~use_cronet
+
+        u_fea = jax.lax.cond(
+            jnp.any(need_fea),
+            lambda: fea2d.solve_b(bp, state.x, U0=state.u,
+                                  need=need_fea)[0],
+            lambda: state.u)
+
+        # batch-invariant norms: err is COMPARED against the gate threshold,
+        # so it must be bitwise-identical at any batch width
+        un = fea2d.tree_norm(u_fea)
+        err_new = fea2d.tree_norm(u_pred - u_fea) / jnp.maximum(un, 1e-30)
+        err = jnp.where(need_fea & warm, err_new, state.err)
+        u = jnp.where(use_cronet[:, None], u_pred, u_fea)
+
+        c, dc = fea2d.compliance_and_sens_b(bp, state.x, u)
+        dc_f = filt_b(state.x, dc)
+        hist = jnp.roll(state.hist, -1, axis=1).at[:, -1].set(state.x)
+        dv = jnp.ones_like(state.x) / (cfg.nelx * cfg.nely)
+        x = simp.oc_update_b(state.x, dc_f, dv[0], bp.volfrac)
+        return HybridState(
+            x=x, u=u, hist=hist, it=state.it + 1, err=err,
+            n_cronet=state.n_cronet + use_cronet.astype(jnp.int32),
+            n_fea=state.n_fea + need_fea.astype(jnp.int32), compliance=c)
+
+    return step
+
+
 @dataclasses.dataclass
 class HybridResult:
     cronet_invocations: int
@@ -45,80 +189,58 @@ class HybridResult:
     solution_accuracy: float   # 100 * (1 - |c - c_ref| / c_ref)
     design_match: float        # 100 * (1 - mean |x - x_ref|)
     compliances: np.ndarray
+    density: Optional[np.ndarray] = None   # (nely, nelx) final design
 
 
 def run_hybrid(cfg: CRONetConfig, params, u_scale: float,
                n_iter: int = 100, error_threshold: float = 0.05,
                verify_every: int = 3, rmin: float = 1.5,
-               reference: Optional[dict] = None, precision: str = "bf16"):
-    """Run the hybrid loop; returns HybridResult.
+               reference: Optional[dict] = None, precision: str = "bf16",
+               problem: Optional[fea2d.Problem] = None,
+               compute_metrics: bool = True, backend: str = "oracle"):
+    """Run the hybrid loop for one problem; returns HybridResult.
 
-    Selection rule (paper §VI-A: "based on the error of the previous
-    iteration's output"): whenever an FEA solve happens, CRONet's
-    prediction for that same state is scored (relative L2 vs FEA); CRONet
-    is used for subsequent iterations while the last measured error is
-    under `error_threshold`, with a forced FEA verification every
-    `verify_every` iterations (keeps the error estimate fresh).
-    reference: optional precomputed pure-FEA history (from simp.run_simp).
+    A thin B=1 driver over the batched core (make_hybrid_step) — the same
+    compiled step the serving engine runs at B=slots.
+    reference: optional precomputed pure-FEA history (from simp.run_simp);
+    compute_metrics=False skips the pure-FEA reference run and the final
+    FEA evaluation (throughput benchmarking), leaving metric fields NaN.
     """
-    prob = fea2d.mbb_problem(cfg.nelx, cfg.nely)
+    prob = problem if problem is not None else fea2d.mbb_problem(cfg.nelx,
+                                                                 cfg.nely)
     params = cast_params(params, precision)
-    load_vol = fea2d.load_volume(prob)[None]          # (1, 4, ny+1, nx+1, 1)
-    filt = simp.make_filter(prob.nelx, prob.nely, rmin)
-    dtype = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.float32}[precision]
-
-    @jax.jit
-    def predict_u(params, hist):
-        p = cronet.forward(cfg, params, load_vol.astype(dtype),
-                           hist[None].astype(dtype))
-        grid = cronet.decode_displacement(cfg, p)[0]  # (ny+1, nx+1, 2)
-        # back to the 88-line dof layout: node n = x*(nely+1)+y
-        u = jnp.transpose(grid, (1, 0, 2)).reshape(-1) * u_scale
-        return u * prob.free_mask
-
-    fea_solve = jax.jit(lambda x, u0: fea2d.solve(prob, x, u0=u0))
-    comp_sens = jax.jit(lambda x, u: fea2d.compliance_and_sens(prob, x, u))
-
-    x = jnp.full((prob.nely, prob.nelx), prob.volfrac)
-    u = jnp.zeros_like(prob.f)
-    dv = jnp.ones_like(x) / x.size
-    hist_buf = []
-    n_cronet = n_fea = 0
-    err_prev = float("inf")
+    # pad to B=2: XLA lowers a unit batch dim specially (squeeze + different
+    # vectorization/FMA choices), so B=1 results are not bitwise-comparable
+    # to B>1 slots. Widths >= 2 are mutually slot-invariant; the idle slot
+    # converges instantly in the masked CG.
+    bp = fea2d.stack_problems([prob, fea2d.idle_problem(cfg.nelx, cfg.nely)])
+    load_vol = fea2d.load_volume_b(bp)
+    step = make_hybrid_step(cfg, u_scale, error_threshold, verify_every,
+                            rmin, precision, backend)
+    state = init_state(cfg, bp)
     cs = []
+    for _ in range(n_iter):
+        state = step(params, bp, load_vol, state)
+        cs.append(state.compliance[0])   # device scalar: no per-iter sync
+    cs = [float(c) for c in cs]
 
-    for it in range(n_iter):
-        u_pred = None
-        if it >= cfg.hist_len:
-            hist = jnp.stack(hist_buf[-cfg.hist_len:])[..., None]  # (T,ny,nx,1)
-            u_pred = predict_u(params, hist)
-        use_cronet = (
-            u_pred is not None
-            and err_prev < error_threshold
-            and (it % verify_every != 0)
-        )
-        if use_cronet:
-            u = u_pred
-            n_cronet += 1
-        else:
-            u, _ = fea_solve(x, u)
-            n_fea += 1
-            if u_pred is not None:
-                err_prev = float(jnp.linalg.norm(u_pred - u)
-                                 / jnp.maximum(jnp.linalg.norm(u), 1e-30))
-        c, dc = comp_sens(x, u)
-        cs.append(float(c))
-        dc_f = filt(x, dc)
-        hist_buf.append(np.asarray(x))
-        x = simp.oc_update(x, dc_f, dv, prob.volfrac)
+    x = state.x[0]
+    n_cronet = int(state.n_cronet[0])
+    n_fea = int(state.n_fea[0])
+    if not compute_metrics:
+        return HybridResult(
+            cronet_invocations=n_cronet, fea_invocations=n_fea,
+            final_compliance=float("nan"), reference_compliance=float("nan"),
+            solution_accuracy=float("nan"), design_match=float("nan"),
+            compliances=np.asarray(cs), density=np.asarray(x))
 
     if reference is None:
         _, reference = simp.run_simp(prob, n_iter=n_iter, rmin=rmin)
     c_ref = float(reference["c"][-1])
     # solution quality = FEA-evaluated compliance of the FINAL DESIGN (the
     # quantity topology optimization minimizes), not the last surrogate u.
-    u_fin, _ = fea_solve(x, u)
-    c_fin, _ = comp_sens(x, u_fin)
+    u_fin, _ = fea2d.solve(prob, x, u0=state.u[0])
+    c_fin, _ = fea2d.compliance_and_sens(prob, x, u_fin)
     c_fin = float(c_fin)
     acc = 100.0 * max(0.0, 1.0 - abs(c_fin - c_ref) / abs(c_ref))
     dm = 100.0 * float(1.0 - np.mean(np.abs(np.asarray(x) - reference["x"][-1])))
@@ -126,4 +248,4 @@ def run_hybrid(cfg: CRONetConfig, params, u_scale: float,
         cronet_invocations=n_cronet, fea_invocations=n_fea,
         final_compliance=c_fin, reference_compliance=c_ref,
         solution_accuracy=acc, design_match=dm, compliances=np.asarray(cs),
-    )
+        density=np.asarray(x))

@@ -49,7 +49,10 @@ def oc_update(x, dc, dv, volfrac, move: float = 0.2):
     def body(state, _):
         l1, l2 = state
         lmid = 0.5 * (l1 + l2)
-        vol = jnp.mean(xnew(lmid))
+        # batch-invariant volume sum: the bisection COMPARES the mean, so a
+        # last-ulp batch-width difference would fork the whole multiplier
+        # search; tree_sum keeps serving slots bitwise-equal to solo runs
+        vol = fea2d.tree_sum(xnew(lmid).reshape(-1)) / x.size
         too_much = vol > volfrac
         l1 = jnp.where(too_much, lmid, l1)
         l2 = jnp.where(too_much, l2, lmid)
@@ -58,6 +61,19 @@ def oc_update(x, dc, dv, volfrac, move: float = 0.2):
     (l1, l2), _ = jax.lax.scan(body, (jnp.asarray(1e-9), jnp.asarray(1e9)),
                                None, length=60)
     return xnew(0.5 * (l1 + l2))
+
+
+def make_filter_b(nelx: int, nely: int, rmin: float = 1.5):
+    """Batched sensitivity filter: (B, nely, nelx) densities/sensitivities.
+    vmap of the single-problem filter — the conv is bitwise batch-invariant
+    on CPU, which the batched serving path relies on."""
+    return jax.vmap(make_filter(nelx, nely, rmin))
+
+
+def oc_update_b(X, DC, dv, volfrac, move: float = 0.2):
+    """Batched OC update; volfrac is per-slot (B,). X/DC: (B, nely, nelx)."""
+    return jax.vmap(lambda x, dc, vf: oc_update(x, dc, dv, vf, move))(
+        X, DC, volfrac)
 
 
 class SimpState(NamedTuple):

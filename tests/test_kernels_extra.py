@@ -1,5 +1,6 @@
 """Flash attention, fused sLSTM, chunkwise mLSTM — the beyond-paper Pallas
-kernels, validated against oracles (§Perf iterations P4/X1/X2)."""
+kernels, validated against oracles (§Perf iterations P4/X1/X2) — plus the
+CRONet megakernel's batch grid dimension."""
 import dataclasses
 
 import jax
@@ -8,13 +9,39 @@ import numpy as np
 import pytest
 
 from repro.configs.base import get_config
+from repro.configs.cronet import get_cronet_config
 from repro.common import materialize
+from repro.core import cronet
+from repro.kernels.cronet_pipeline import cronet_fused
 from repro.kernels.flash_attention import (flash_attention,
                                            flash_attention_causal_gqa)
 from repro.kernels.slstm import slstm_fused
 from repro.models import layers as L
 from repro.models import model as M
 from repro.models import recurrent as REC
+
+
+def test_cronet_megakernel_batch_grid():
+    """B>1 cronet_pipeline (one grid step per batch slot, weights resident
+    across the batch) == batched core.cronet.forward, interpret mode."""
+    B = 3
+    cfg = dataclasses.replace(get_cronet_config("small"), dtype="float32")
+    params = materialize(cronet.param_specs(cfg), jax.random.key(1))
+    lv = jax.random.normal(jax.random.key(2),
+                           (B, 4, cfg.nely + 1, cfg.nelx + 1, 1),
+                           jnp.float32) * 0.3
+    hist = jax.random.uniform(jax.random.key(3),
+                              (B, cfg.hist_len, cfg.nely, cfg.nelx, 1))
+    ref = cronet.forward(cfg, params, lv, hist)
+    out = cronet_fused(cfg, params, lv, hist, interpret=True)
+    assert out.shape == (B, cfg.p)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    # legacy unbatched call still returns (p,) and equals slot 0
+    one = cronet_fused(cfg, params, lv[0], hist[0], interpret=True)
+    assert one.shape == (cfg.p,)
+    np.testing.assert_allclose(np.asarray(one), np.asarray(out[0]),
+                               rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("sq,sk,hq,hkv,d", [(256, 256, 4, 4, 32),
