@@ -1,15 +1,25 @@
-"""Batched topology-optimization serving demo (the paper's digital-twin
-workload as a service): train CRONet once, then serve a queue of
-heterogeneous load cases through the slot-batched TopoServingEngine with
-per-request latency and CRONet hit-rate reporting.
+"""Topology-optimization serving demo (the paper's digital-twin workload
+as a service): train CRONet once, then serve heterogeneous load cases
+through the TopoServingEngine with per-request latency, deadline, and
+CRONet hit-rate reporting.
+
+Two modes:
+  * drain (default): enqueue everything up front, run to completion —
+    the PR 1 batch workflow, now a shim over the streaming core.
+  * streaming (--arrival-rate > 0): load cases arrive as a Poisson
+    process and are submitted live against the running engine; each
+    carries a freshness deadline (--deadline) and the earliest-deadline-
+    first scheduler (with slack-safe slot preemption) decides admission.
 
     PYTHONPATH=src python examples/serve_topo.py \
         [--size small] [--requests 12] [--slots 4] [--iters 40] \
-        [--train-steps 300] [--backend oracle]
+        [--train-steps 300] [--backend oracle] \
+        [--arrival-rate 2.0] [--deadline 6.0]
 """
 import argparse
 import dataclasses
 import sys
+import time
 
 sys.path.insert(0, "src")
 
@@ -28,6 +38,14 @@ def main():
     ap.add_argument("--backend", default="oracle",
                     choices=["oracle", "megakernel"])
     ap.add_argument("--threshold", type=float, default=0.05)
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrival rate in requests/s; 0 = drain "
+                         "mode (submit everything up front)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request freshness deadline in seconds "
+                         "(streaming mode; 0 = no deadlines)")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="disable slack-safe slot preemption")
     args = ap.parse_args()
 
     import jax
@@ -50,40 +68,82 @@ def main():
             dataclasses.replace(cfg, dtype="float32")), jax.random.key(0))
         u_scale = 50.0
 
-    print(f"== 2. enqueue {args.requests} load cases "
+    print(f"== 2. {args.requests} load cases "
           f"(one per monitored structure) ==")
     rng = np.random.default_rng(0)
-    reqs = []
+    probs = []
     for i in range(args.requests):
         if i == 0:
             # the canonical MBB load case (the training distribution) —
             # the request the trained surrogate should actually accelerate
-            prob = fea2d.point_load_problem(cfg.nelx, cfg.nely)
+            probs.append(fea2d.point_load_problem(cfg.nelx, cfg.nely))
         else:
-            prob = fea2d.point_load_problem(
+            probs.append(fea2d.point_load_problem(
                 cfg.nelx, cfg.nely,
                 load_node=(int(rng.integers(0, cfg.nelx - 1)), 0),
-                load=(0.0, float(-0.5 - rng.random())))
-        reqs.append(TopoRequest(uid=i, problem=prob, n_iter=args.iters))
+                load=(0.0, float(-0.5 - rng.random()))))
 
-    print(f"== 3. serve on {args.slots} slots ({args.backend} backend) ==")
     engine = TopoServingEngine(cfg, params, u_scale, slots=args.slots,
                                precision="fp32",
                                error_threshold=args.threshold,
-                               backend=args.backend)
-    import time
-    t0 = time.time()
-    done = engine.run(reqs)
-    wall = time.time() - t0
+                               backend=args.backend,
+                               preempt=not args.no_preempt)
+    deadline = args.deadline if args.deadline > 0 else None
+
+    if args.arrival_rate > 0:
+        print(f"== 3. stream at {args.arrival_rate:.2f} req/s onto "
+              f"{args.slots} slots ({args.backend} backend, "
+              f"deadline {args.deadline or 'none'}s) ==")
+        # warm-up: compile the batched step outside the timed region so
+        # the first arrival is not charged for XLA compilation
+        engine.run([TopoRequest(uid=-1 - k, problem=probs[k % len(probs)],
+                                n_iter=2) for k in range(args.slots)])
+        arrivals = np.cumsum(
+            rng.exponential(1.0 / args.arrival_rate, args.requests))
+        t0 = time.time()
+        futs = []
+        for i, prob in enumerate(probs):
+            # absolute schedule: time spent inside submit() (it can block
+            # briefly behind an admission) must not drift the arrival rate
+            lag = t0 + arrivals[i] - time.time()
+            if lag > 0:
+                time.sleep(lag)
+            futs.append(engine.submit(
+                TopoRequest(uid=i, problem=prob, n_iter=args.iters),
+                deadline_s=deadline))
+        done = [f.result(timeout=3600) for f in futs]
+        wall = time.time() - t0
+        engine.shutdown()
+    else:
+        print(f"== 3. drain {args.requests} requests on {args.slots} "
+              f"slots ({args.backend} backend) ==")
+        reqs = [TopoRequest(uid=i, problem=p, n_iter=args.iters)
+                for i, p in enumerate(probs)]
+        t0 = time.time()
+        done = engine.run(reqs)
+        wall = time.time() - t0
+
     for r in done:
         total = r.cronet_iters + r.fea_iters
+        dl = ("  hit" if r.deadline_met
+              else " MISS" if r.deadline_met is not None else "     ")
+        pre = f"  parked x{r.preemptions}" if r.preemptions else ""
         print(f"  req {r.uid:2d}: compliance={r.compliance:9.2f}  "
               f"cronet {r.cronet_iters}/{total}  "
-              f"latency {r.latency_s:.2f}s  queued {r.queue_wait_s:.2f}s")
+              f"latency {r.latency_s:.2f}s  queued {r.queue_wait_s:.2f}s"
+              f"{dl}{pre}")
     stats = engine.throughput_stats(done, wall_s=wall)
-    print(f"== {stats['problems_per_s']:.2f} problems/s, "
-          f"CRONet hit rate {100 * stats['cronet_hit_rate']:.1f}%, "
-          f"{stats['batched_steps']:.0f} engine steps, wall {wall:.2f}s ==")
+    line = (f"== {stats['problems_per_s']:.2f} problems/s, "
+            f"CRONet hit rate {100 * stats['cronet_hit_rate']:.1f}%, "
+            f"p50/p99 latency {stats['p50_latency_s']:.2f}/"
+            f"{stats['p99_latency_s']:.2f}s")
+    # drain mode never attaches deadlines, so a hit rate there would be
+    # the vacuous 1.0 default — only report it for streaming runs
+    if args.arrival_rate > 0 and deadline is not None:
+        line += (f", deadline hit rate "
+                 f"{100 * stats['deadline_hit_rate']:.1f}%, "
+                 f"{stats['preemptions']:.0f} preemptions")
+    print(line + f", wall {wall:.2f}s ==")
 
 
 if __name__ == "__main__":

@@ -92,6 +92,26 @@ def reset_slot(cfg: CRONetConfig, state: HybridState, i: int,
     )
 
 
+def park_slot(state: HybridState, i: int) -> HybridState:
+    """Gather lane i to host numpy (preemption parking).
+
+    The parked tuple is a complete per-slot optimization snapshot
+    (density, displacement, history ring, gate bookkeeping); host-side so
+    it can be re-admitted on any shard/device. Restoring it with
+    ``restore_slot`` and stepping resumes the trajectory bitwise — every
+    op in the batched step is slot-invariant, and gather/scatter of a
+    lane is exact.
+    """
+    return HybridState(*[np.asarray(leaf[i]) for leaf in state])
+
+
+def restore_slot(state: HybridState, i: int,
+                 parked: HybridState) -> HybridState:
+    """Scatter a parked lane snapshot back into slot i (re-admission)."""
+    return HybridState(*[leaf.at[i].set(jnp.asarray(v))
+                         for leaf, v in zip(state, parked)])
+
+
 def _oracle_forward(cfg: CRONetConfig):
     def fwd(params, load_vol, hist):
         return cronet.forward(cfg, params, load_vol, hist)
@@ -135,9 +155,12 @@ def make_hybrid_step(cfg: CRONetConfig, u_scale: float,
                "megakernel": _megakernel_forward}[backend](cfg)
     filt_b = simp.make_filter_b(cfg.nelx, cfg.nely, rmin)
 
+    trace_count = [0]  # bumped per retrace; see .trace_count below
+
     @functools.partial(jax.jit, donate_argnums=(3,))
     def step(params, bp: fea2d.BatchProblem, load_vol,
              state: HybridState) -> HybridState:
+        trace_count[0] += 1  # python body runs only when jit (re)traces
         warm = state.it >= cfg.hist_len
 
         def predict():
@@ -177,6 +200,11 @@ def make_hybrid_step(cfg: CRONetConfig, u_scale: float,
             n_cronet=state.n_cronet + use_cronet.astype(jnp.int32),
             n_fea=state.n_fea + need_fea.astype(jnp.int32), compliance=c)
 
+    # tracing telemetry: trace_count[0] is the number of XLA compilations
+    # this step has triggered (one per distinct batch width). The serving
+    # engine's streaming tests assert it stays flat across live
+    # admissions — submit() must be a compiled-cache hit, never a retrace.
+    step.trace_count = trace_count
     return step
 
 

@@ -1,0 +1,153 @@
+"""Deadline-aware admission scheduling for the streaming topo engine.
+
+The paper's digital-twin workload is a continuous arrival process: each
+monitoring event ships a load case with a freshness deadline ("the
+updated design must reflect this load within D seconds"), not a batch to
+drain. This module provides the policy half of that serving story —
+serve/topo_service.py owns the slots, this owns the queue:
+
+  * ``EDFScheduler`` — a thread-safe earliest-deadline-first admission
+    queue. Entries are ordered by (effective deadline, admission
+    sequence number): the sequence number makes tie-breaking
+    deterministic (equal deadlines pop in submit order), which the
+    bitwise-invariance test suite relies on. A deadline-less entry is
+    given an *effective* deadline of ``submit + starvation_horizon``, so
+    an unbounded stream of deadline-carrying arrivals can delay it by at
+    most the horizon — EDF without the horizon starves best-effort work
+    forever.
+
+  * ``preempt_victim`` — the slack-based preemption decision, kept a
+    pure function of (candidate, slot views, clock, step-time estimate)
+    so it can be unit-tested without threads or devices. A slot occupant
+    may be evicted for a queue-head about to miss its deadline, but ONLY
+    when the eviction provably cannot make the victim itself miss: the
+    victim must still meet its own deadline after waiting out the
+    candidate's remaining iterations. Evicted state is parked by the
+    engine (lane gather) and re-admitted through the same queue with its
+    original deadline and sequence number, so a parked request resumes
+    exactly where EDF places it.
+
+Engine integration contract: the scheduler's condition variable
+(``cond``) is the single lock for queue state. ``push``/``pop``/``peek``
+take it internally (it is reentrant), and the engine's tick loop holds
+it across compound peek-decide-pop sequences so admission decisions are
+atomic with respect to concurrent ``submit`` calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import threading
+from typing import Any, List, Optional, Sequence, Tuple
+
+INF = float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotView:
+    """What the preemption decision needs to know about an occupied lane."""
+    deadline: float          # absolute; INF when the occupant has none
+    iters_left: int          # remaining iteration budget
+    preemptible: bool = True  # engine clears this e.g. right after admission
+
+
+def preempt_victim(deadline: float, iters_needed: int,
+                   slots: Sequence[Optional[SlotView]], now: float,
+                   sec_per_iter: float) -> Optional[int]:
+    """Pick the lane to evict for a queue-head candidate, or None.
+
+    Fires only when BOTH hold:
+      * waiting for the next natural slot completion would make the
+        candidate miss its deadline (so preemption is the only way), and
+      * some preemptible occupant still meets its own deadline after
+        parking behind the candidate (eviction cannot miss the victim's
+        deadline).
+    Among safe victims, the one with the most post-eviction slack is
+    chosen; ties break to the lowest lane index (determinism).
+
+    ``slots`` may contain None entries (empty lanes) — an empty lane
+    means admission needs no preemption, so the answer is None.
+    """
+    if deadline == INF or sec_per_iter <= 0.0:
+        return None  # deadline-less work never preempts; no estimate yet
+    occupied = [s for s in slots if s is not None]
+    if len(occupied) < len(slots):
+        return None  # a free lane exists: admit, don't evict
+    wait_iters = min(s.iters_left for s in occupied)
+    if deadline - now >= (iters_needed + wait_iters) * sec_per_iter:
+        return None  # waiting still makes the deadline
+    if deadline - now < iters_needed * sec_per_iter:
+        # even an immediate slot cannot save the candidate; evicting a
+        # victim would trade one miss for a possible second
+        return None
+    best: Optional[Tuple[int, float]] = None
+    for i, s in enumerate(slots):
+        if s is None or not s.preemptible:
+            continue
+        victim_finish = now + (iters_needed + s.iters_left) * sec_per_iter
+        if s.deadline < victim_finish:
+            continue  # eviction could miss the victim's deadline: unsafe
+        slack = s.deadline - victim_finish
+        if best is None or slack > best[1]:
+            best = (i, slack)
+    return best[0] if best else None
+
+
+@dataclasses.dataclass(order=True)
+class _Entry:
+    eff_deadline: float
+    seq: int
+    payload: Any = dataclasses.field(compare=False)
+    deadline: float = dataclasses.field(compare=False, default=INF)
+
+
+class EDFScheduler:
+    """Thread-safe earliest-deadline-first queue with deterministic ties.
+
+    ``starvation_horizon`` bounds how long deadline-less work can be
+    bypassed: its effective deadline is ``now + horizon`` at push time,
+    after which it outranks any arrival whose real deadline lies further
+    out. Re-pushing a parked entry via ``push(..., seq=entry.seq,
+    eff_deadline=entry.eff_deadline)`` preserves its original rank.
+    """
+
+    def __init__(self, starvation_horizon: float = 60.0):
+        self.starvation_horizon = starvation_horizon
+        self.cond = threading.Condition(threading.RLock())
+        self._heap: List[_Entry] = []
+        self._seq = 0
+        self.pushed = 0   # lifetime counters (stress-test bookkeeping)
+        self.popped = 0
+
+    def __len__(self) -> int:
+        with self.cond:
+            return len(self._heap)
+
+    def push(self, payload: Any, deadline: Optional[float], now: float,
+             seq: Optional[int] = None,
+             eff_deadline: Optional[float] = None) -> _Entry:
+        """Enqueue; returns the entry (its seq identifies re-admissions)."""
+        with self.cond:
+            if seq is None:
+                seq = self._seq
+                self._seq += 1
+                self.pushed += 1
+            if eff_deadline is None:
+                eff_deadline = (deadline if deadline is not None
+                                else now + self.starvation_horizon)
+            e = _Entry(eff_deadline=eff_deadline, seq=seq, payload=payload,
+                       deadline=INF if deadline is None else deadline)
+            heapq.heappush(self._heap, e)
+            self.cond.notify_all()
+            return e
+
+    def peek(self) -> Optional[_Entry]:
+        with self.cond:
+            return self._heap[0] if self._heap else None
+
+    def pop(self) -> Optional[_Entry]:
+        with self.cond:
+            if not self._heap:
+                return None
+            self.popped += 1
+            return heapq.heappop(self._heap)

@@ -1,35 +1,48 @@
-"""Slot-batched topology-optimization serving engine.
+"""Streaming slot-batched topology-optimization serving engine.
 
-The digital-twin workload the paper targets arrives as a QUEUE of
-optimization problems (one per bridge/load-case), not single calls. This
-engine batches them the way serve/server.py batches LM decode: requests
-occupy fixed batch slots, every engine tick advances a slot group one
-hybrid NN-FEA iteration with a single compiled step (batched CRONet
-forward + per-slot residual-gated FEA fallback), and a finished slot is
-immediately refilled from the queue — heterogeneous n_iter/loads complete
-out of order without bubbles.
+The digital-twin workload the paper targets is a continuous ARRIVAL
+PROCESS: monitoring events ship load cases one at a time, each with a
+freshness deadline, and the updated design must come back before the
+deadline passes. This engine serves that workload the way
+serve/server.py serves LM decode — requests occupy fixed batch slots and
+every tick advances a slot group one hybrid NN-FEA iteration with a
+single compiled step — but admission is live:
 
-Scaling has two axes:
-  * slots per shard — one compiled step serves the whole group;
-  * shards — slot groups pinned to distinct XLA devices, each driven by
-    its own worker thread pulling from the shared queue (on CPU, force
-    host devices with --xla_force_host_platform_device_count=N to put
-    shards on separate cores; on real hardware, shards map to
-    accelerator devices).
+  * ``submit(req) -> TopoFuture`` is thread-safe and can be called while
+    the tick loops are running; the new request is admitted at the next
+    tick boundary with NO recompilation (the compiled step is shaped by
+    (batch width, mesh), neither of which admission changes).
+  * Admission order is earliest-deadline-first with deterministic
+    tie-breaking and a starvation horizon for deadline-less requests
+    (serve/scheduler.py).
+  * A slot whose occupant has slack can be preempted for a request about
+    to miss its deadline: the occupant's per-lane optimization state is
+    parked (lane gather to host, fea/hybrid.park_slot), the lane is
+    re-seeded, and the parked request re-enters the queue with its
+    original rank, resuming bitwise-exactly on re-admission
+    (fea/hybrid.restore_slot).
+  * ``run(requests)`` remains as a thin submit+drain compatibility shim
+    over the streaming core.
+
+Scaling axes are unchanged from the drain-mode engine: slots per shard
+(one compiled step serves the group) and shards (slot groups pinned to
+distinct XLA devices — ``shard_devices`` is the single source of truth
+for that pinning — each driven by its own tick-loop thread pulling from
+the shared EDF queue; on CPU, force host devices with
+--xla_force_host_platform_device_count=N to put shards on cores).
 
 Because every op in the batched step is bitwise batch-invariant (see
-fea/hybrid.py) and XLA lowers the same program identically on every
-device of a platform, the density an occupied slot produces is exactly
-the density a standalone ``run_hybrid`` call produces for that request —
-batching and sharding buy throughput, not approximation.
+fea/hybrid.py) and park/restore is an exact lane gather/scatter, the
+density an occupied slot produces is exactly the density a standalone
+``run_hybrid`` call produces for that request — across admission orders,
+slot counts, and preemption cycles. Scheduling buys deadlines, not
+approximation.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional
 
 import jax
@@ -38,6 +51,7 @@ import numpy as np
 
 from repro.configs.cronet import CRONetConfig
 from repro.fea import fea2d, hybrid
+from repro.serve.scheduler import INF, EDFScheduler, SlotView, preempt_victim
 
 
 @dataclasses.dataclass
@@ -45,14 +59,63 @@ class TopoRequest:
     uid: int
     problem: fea2d.Problem
     n_iter: int = 60
+    deadline_s: Optional[float] = None      # freshness deadline, relative to submit
+    # filled on submit
+    submit_t: float = 0.0
+    deadline: Optional[float] = None        # absolute wall-clock deadline
     # filled on completion
     done: bool = False
     density: Optional[np.ndarray] = None    # (nely, nelx) final design
     compliance: float = 0.0                 # last-iteration compliance
     cronet_iters: int = 0
     fea_iters: int = 0
-    latency_s: float = 0.0                  # slot admission -> completion
-    queue_wait_s: float = 0.0               # submit -> slot admission
+    latency_s: float = 0.0                  # first slot admission -> completion
+    queue_wait_s: float = 0.0               # submit -> first slot admission
+    deadline_met: Optional[bool] = None     # None when no deadline was set
+    preemptions: int = 0                    # times this request was parked
+
+
+class TopoFuture:
+    """Completion handle for a submitted request (threading.Event based)."""
+
+    def __init__(self, req: TopoRequest):
+        self.request = req
+        self._ev = threading.Event()
+        self._exc: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> TopoRequest:
+        """Block until the request completes; returns it with the density
+        filled. Raises TimeoutError on timeout, or the engine's failure
+        if serving aborted."""
+        if not self._ev.wait(timeout):
+            raise TimeoutError(f"request {self.request.uid} not done "
+                               f"after {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return self.request
+
+    def _resolve(self, exc: Optional[BaseException] = None):
+        self._exc = exc
+        self._ev.set()
+
+
+@dataclasses.dataclass
+class _Admission:
+    """A queued unit of work: fresh submission or parked preemptee."""
+    req: TopoRequest
+    future: TopoFuture
+    parked: Optional[hybrid.HybridState] = None  # host lane snapshot
+    iters_done: int = 0
+    first_admit_t: Optional[float] = None
+    seq: int = -1                # original EDF rank, preserved across parks
+    eff_deadline: float = INF
+
+    @property
+    def iters_left(self) -> int:
+        return self.req.n_iter - self.iters_done
 
 
 def auto_shards(slots: int, device_count: Optional[int] = None) -> int:
@@ -66,8 +129,34 @@ def auto_shards(slots: int, device_count: Optional[int] = None) -> int:
     return 1
 
 
+def shard_devices(slots: int, shards: Optional[int] = None,
+                  devices: Optional[list] = None) -> list:
+    """Resolve the shard count and pin each shard to a device — the ONE
+    place that logic lives (the engine ctor, restarts, and anything that
+    wants to predict placement all call this). Round-robin over the local
+    device list, so the assignment is a pure function of (slots, shards,
+    device list): rebuilding or restarting an engine with the same
+    arguments yields the same pinning."""
+    if devices is None:
+        devices = jax.local_devices()
+    if shards is None:
+        shards = auto_shards(slots, len(devices))
+    if slots < 2:
+        # XLA lowers a unit batch dim differently (breaks the bitwise
+        # slot-invariance contract); 2 is the minimum invariant width
+        raise ValueError("TopoServingEngine needs slots >= 2")
+    if slots % shards != 0 or slots // shards < 2:
+        raise ValueError(f"slots={slots} not divisible into "
+                         f"{shards} shards of width >= 2")
+    if shards > len(devices):
+        raise ValueError(f"{shards} shards > {len(devices)} devices")
+    return [devices[i % len(devices)] for i in range(shards)]
+
+
 class _Shard:
-    """One slot group: host-side slot constants + device-resident state."""
+    """One slot group: host-side slot constants + device-resident state,
+    driven by exactly one tick-loop thread (lane bookkeeping is therefore
+    single-writer; only the EDF queue is shared)."""
 
     def __init__(self, engine: "TopoServingEngine", device):
         self.engine = engine
@@ -81,13 +170,34 @@ class _Shard:
         self.free = np.zeros((L, ndof), np.float32)
         self.fixed_x = np.zeros((L, ndof), np.float32)
         self.volfrac = np.full((L,), 0.5, np.float32)
-        self.slot_req: List[Optional[TopoRequest]] = [None] * L
+        self.slot_adm: List[Optional[_Admission]] = [None] * L
         self.slot_iters = [0] * L
-        self.admitted_at = [0.0] * L
         self.params = jax.device_put(engine.params, device)
         self.bp = None
         self.load_vol = None
         self.state = None
+        self.steps = 0              # dispatched this activation
+        self.busy_t0: Optional[float] = None   # sync-point timing window
+        self.steps_in_window = 0
+
+    def activate(self):
+        """Fresh idle state for a (re)started tick loop."""
+        e = self.engine
+        L = e.shard_width
+        self.f[:] = 0.0
+        self.free[:] = 0.0
+        self.fixed_x[:] = 0.0
+        self.volfrac[:] = 0.5
+        self.slot_adm = [None] * L
+        self.slot_iters = [0] * L
+        self.steps = 0
+        self.busy_t0 = None
+        self.steps_in_window = 0
+        self.state = jax.device_put(
+            hybrid.init_state(e.cfg, fea2d.stack_problems(
+                [fea2d.idle_problem(e.cfg.nelx, e.cfg.nely)] * L)),
+            self.device)
+        self._upload()
 
     def _upload(self):
         e = self.engine
@@ -99,31 +209,58 @@ class _Shard:
             penal=e._penal, e_min=e._e_min), self.device)
         self.load_vol = fea2d.load_volume_b(self.bp)
 
-    def fill(self, lane: int, req: Optional[TopoRequest]):
-        if req is None:
+    def fill(self, lane: int, adm: Optional[_Admission]):
+        """Write lane constants + seed lane state (reset for a fresh
+        request, exact restore for a parked one). Caller must _upload()
+        after a batch of fills."""
+        if adm is None:
             self.f[lane] = 0.0
             self.free[lane] = 0.0
             self.fixed_x[lane] = 0.0
             self.volfrac[lane] = 0.5
         else:
-            p = req.problem
-            cfg = self.engine.cfg
-            if (p.nelx, p.nely) != (cfg.nelx, cfg.nely):
-                raise ValueError(
-                    f"request {req.uid} mesh {p.nelx}x{p.nely} does not "
-                    f"match engine mesh {cfg.nelx}x{cfg.nely}")
+            p = adm.req.problem
             self.f[lane] = np.asarray(p.f)
             self.free[lane] = np.asarray(p.free_mask)
             self.fixed_x[lane] = np.asarray(p.fixed_x_mask)
             self.volfrac[lane] = p.volfrac
-        self.slot_req[lane] = req
-        self.slot_iters[lane] = 0
+        self.slot_adm[lane] = adm
+        if adm is not None and adm.parked is not None:
+            self.state = hybrid.restore_slot(self.state, lane, adm.parked)
+            self.slot_iters[lane] = adm.iters_done
+            adm.parked = None
+        else:
+            self.state = hybrid.reset_slot(
+                self.engine.cfg, self.state, lane, float(self.volfrac[lane]))
+            self.slot_iters[lane] = 0
+
+    def park(self, lane: int) -> _Admission:
+        """Evict the lane's occupant: lane-gather its state to host and
+        return the admission carrying the snapshot (syncs the device)."""
+        adm = self.slot_adm[lane]
+        adm.parked = hybrid.park_slot(self.state, lane)
+        adm.iters_done = self.slot_iters[lane]
+        adm.req.preemptions += 1
+        self.slot_adm[lane] = None
+        return adm
 
 
 class TopoServingEngine:
-    """Admit TopoRequests sharing the engine's (nelx, nely) mesh; run them
-    to completion over `slots` batch slots in `shards` device-pinned slot
-    groups.
+    """Serve TopoRequests sharing the engine's (nelx, nely) mesh over
+    `slots` batch slots in `shards` device-pinned slot groups, with live
+    streaming admission.
+
+    Streaming API: ``submit(req) -> TopoFuture`` (starts the tick loops
+    on first use), ``drain()`` to wait for quiescence, ``shutdown()`` to
+    stop the worker threads (the engine restarts cleanly on the next
+    submit). ``run(requests)`` is a compatibility shim: submit all, wait
+    for all, shut down if the engine was not already running.
+
+    Scheduling: EDF admission with a `starvation_horizon` bound for
+    deadline-less requests; `preempt=True` enables slack-safe slot
+    preemption (see serve/scheduler.py). `tick_time_s` overrides the
+    measured per-step time estimate the preemption test uses
+    (deterministic tests set it; production leaves the EMA).
 
     backend: "oracle" (core/cronet.py forward) or "megakernel"
     (kernels/cronet_pipeline.py, batched over the Pallas grid, interpret
@@ -136,123 +273,336 @@ class TopoServingEngine:
                  slots: int = 8, precision: str = "fp32",
                  error_threshold: float = 0.05, verify_every: int = 3,
                  rmin: float = 1.5, backend: str = "oracle",
-                 shards: Optional[int] = None):
-        if slots < 2:
-            # XLA lowers a unit batch dim differently (breaks the bitwise
-            # slot-invariance contract); 2 is the minimum invariant width
-            raise ValueError("TopoServingEngine needs slots >= 2")
-        shards = auto_shards(slots) if shards is None else shards
-        if slots % shards != 0 or slots // shards < 2:
-            raise ValueError(f"slots={slots} not divisible into "
-                             f"{shards} shards of width >= 2")
-        if shards > jax.local_device_count():
-            raise ValueError(f"{shards} shards > "
-                             f"{jax.local_device_count()} devices")
+                 shards: Optional[int] = None, preempt: bool = True,
+                 starvation_horizon: float = 60.0,
+                 tick_time_s: Optional[float] = None):
+        self._devices = shard_devices(slots, shards)
         self.cfg = cfg
         self.slots = slots
-        self.shards = shards
-        self.shard_width = slots // shards
+        self.shards = len(self._devices)
+        self.shard_width = slots // self.shards
         self.params = hybrid.cast_params(params, precision)
         self.step = hybrid.make_hybrid_step(
             cfg, u_scale, error_threshold, verify_every, rmin, precision,
             backend)
+        self.preempt = preempt
+        self.tick_time_s = tick_time_s
         template = fea2d.mbb_problem(cfg.nelx, cfg.nely)
         self._edof, self._KE = template.edof, template.KE
         self._penal, self._e_min = template.penal, template.e_min
-        devices = jax.local_devices()
-        self._shards = [_Shard(self, devices[d % len(devices)])
-                        for d in range(shards)]
-        self.total_steps = 0        # engine lifetime
+        self._shards = [_Shard(self, dev) for dev in self._devices]
+        self._sched = EDFScheduler(starvation_horizon)
+        self._threads: List[threading.Thread] = []
+        self._running = False
+        self._stopping = False
+        self._inflight = 0
+        self._failure: Optional[BaseException] = None
+        self._completed: List[TopoRequest] = []
+        self._lifecycle = threading.Lock()
+        self._sec_per_step: Optional[float] = None
+        self.preemptions = 0        # engine lifetime eviction count
+        self._steps_base = 0        # steps from finished activations
         self.last_run_steps = 0     # most recent run() only
         self._steps_lock = threading.Lock()
 
-    # --------------------------------------------------------------- run
-
-    def _serve_shard(self, shard: _Shard, queue, qlock, t_submit: float):
-        """Worker loop for one slot group: burst-advance to the next
-        deterministic completion event, harvest, refill from the shared
-        queue. No device sync except at harvest."""
-        cfg, step = self.cfg, self.step
-        L = self.shard_width
-
-        def admit(lane):
-            with qlock:
-                req = queue.popleft() if queue else None
-            shard.fill(lane, req)
-            if req is not None:
-                shard.admitted_at[lane] = time.time()
-                req.queue_wait_s = shard.admitted_at[lane] - t_submit
-            shard.state = hybrid.reset_slot(
-                cfg, shard.state, lane, float(shard.volfrac[lane]))
-
-        shard.state = jax.device_put(
-            hybrid.init_state(cfg, fea2d.stack_problems(
-                [fea2d.idle_problem(cfg.nelx, cfg.nely)] * L)),
-            shard.device)
-        for lane in range(L):
-            admit(lane)
-        shard._upload()
-
-        steps = 0
-        while any(r is not None for r in shard.slot_req):
-            burst = min(r.n_iter - shard.slot_iters[i]
-                        for i, r in enumerate(shard.slot_req)
-                        if r is not None)
-            for _ in range(burst):
-                shard.state = step(shard.params, shard.bp, shard.load_vol,
-                                   shard.state)
-            steps += burst
-            refilled = False
-            for i, req in enumerate(shard.slot_req):
-                if req is None:
-                    continue
-                shard.slot_iters[i] += burst
-                if shard.slot_iters[i] < req.n_iter:
-                    continue
-                req.density = np.asarray(shard.state.x[i])
-                req.compliance = float(shard.state.compliance[i])
-                req.cronet_iters = int(shard.state.n_cronet[i])
-                req.fea_iters = int(shard.state.n_fea[i])
-                req.latency_s = time.time() - shard.admitted_at[i]
-                req.done = True
-                admit(i)
-                refilled = True
-            if refilled:
-                shard._upload()
+    @property
+    def total_steps(self) -> int:
+        """Engine-lifetime compiled-step count (live, includes the
+        current activation's in-flight shard counters)."""
         with self._steps_lock:
-            self.total_steps += steps
+            return self._steps_base + sum(sh.steps for sh in self._shards)
+
+    # --------------------------------------------------------- lifecycle
+
+    @property
+    def running(self) -> bool:
+        return self._running
+
+    def start(self):
+        """Spawn one tick-loop thread per shard (idempotent)."""
+        with self._lifecycle:
+            if self._running:
+                if any(t.is_alive() for t in self._threads):
+                    return
+                # a shutdown(wait=False) left _running set after the
+                # workers drained and exited: recover and restart
+                self._threads = []
+            if self._failure is not None:
+                raise RuntimeError("engine failed; build a new one") \
+                    from self._failure
+            self._stopping = False
+            self._running = True
+            self._threads = [
+                threading.Thread(target=self._shard_loop, args=(sh,),
+                                 name=f"topo-shard-{i}", daemon=True)
+                for i, sh in enumerate(self._shards)]
+            for t in self._threads:
+                t.start()
+
+    def shutdown(self, wait: bool = True):
+        """Stop accepting submissions; workers finish the queue and all
+        occupied slots, then exit. With wait=True, joins the threads."""
+        with self._lifecycle:
+            if not self._running and not self._threads:
+                return
+            with self._sched.cond:
+                self._stopping = True
+                self._sched.cond.notify_all()
+            threads = list(self._threads)
+        if wait:
+            for t in threads:
+                t.join()
+            with self._lifecycle:
+                self._running = False
+                self._threads = []
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every submitted request has resolved."""
+        with self._sched.cond:
+            return self._sched.cond.wait_for(
+                lambda: self._inflight == 0 or self._failure is not None,
+                timeout)
+
+    # --------------------------------------------------------- streaming
+
+    def submit(self, req: TopoRequest,
+               deadline_s: Optional[float] = None) -> TopoFuture:
+        """Thread-safe live admission: enqueue `req` (EDF by deadline) and
+        return a completion future. Starts the tick loops if needed; the
+        request is admitted at a tick boundary without recompiling the
+        batched step."""
+        p = req.problem
+        if (p.nelx, p.nely) != (self.cfg.nelx, self.cfg.nely):
+            raise ValueError(
+                f"request {req.uid} mesh {p.nelx}x{p.nely} does not "
+                f"match engine mesh {self.cfg.nelx}x{self.cfg.nely}")
+        if deadline_s is not None:
+            req.deadline_s = deadline_s
+        self.start()   # no-op while workers are alive
+        fut = TopoFuture(req)
+        now = time.time()
+        req.submit_t = now
+        req.deadline = (now + req.deadline_s
+                        if req.deadline_s is not None else None)
+        adm = _Admission(req, fut)
+        with self._sched.cond:
+            if self._stopping:
+                raise RuntimeError("engine is shut down")
+            if self._failure is not None:
+                raise RuntimeError("engine failed") from self._failure
+            self._inflight += 1
+            entry = self._sched.push(adm, req.deadline, now)
+            adm.seq, adm.eff_deadline = entry.seq, entry.eff_deadline
+        return fut
+
+    # --------------------------------------------------------- tick loop
+
+    def _estimate(self) -> float:
+        if self.tick_time_s is not None:
+            return self.tick_time_s
+        est = self._sec_per_step
+        return est if est is not None else 0.0
+
+    def _harvest_lane(self, shard: _Shard, lane: int, now: float):
+        """Pull a finished lane's result (device sync) + resolve."""
+        adm = shard.slot_adm[lane]
+        req = adm.req
+        req.density = np.asarray(shard.state.x[lane])
+        req.compliance = float(shard.state.compliance[lane])
+        req.cronet_iters = int(shard.state.n_cronet[lane])
+        req.fea_iters = int(shard.state.n_fea[lane])
+        t_done = time.time()
+        req.latency_s = t_done - adm.first_admit_t
+        req.deadline_met = (None if req.deadline is None
+                            else t_done <= req.deadline)
+        req.done = True
+        shard.slot_adm[lane] = None
+        with self._sched.cond:
+            self._completed.append(req)
+            self._inflight -= 1
+            self._sched.cond.notify_all()
+        adm.future._resolve()
+        # the np.asarray above synced through every dispatched step:
+        # close the timing window and update the per-step estimate
+        if shard.steps_in_window > 0 and shard.busy_t0 is not None:
+            per = (t_done - shard.busy_t0) / shard.steps_in_window
+            self._sec_per_step = (per if self._sec_per_step is None
+                                  else 0.5 * self._sec_per_step + 0.5 * per)
+        shard.busy_t0 = t_done
+        shard.steps_in_window = 0
+
+    def _admit_lane(self, shard: _Shard, lane: int, adm: _Admission,
+                    now: float):
+        if adm.first_admit_t is None:
+            adm.first_admit_t = now
+            adm.req.queue_wait_s = now - adm.req.submit_t
+        shard.fill(lane, adm)
+
+    def _shard_loop(self, shard: _Shard):
+        """One shard's tick loop: harvest finished lanes, drain admissions
+        (EDF pops + at most one slack-safe preemption) between compiled
+        steps, dispatch the next step. No device sync except at harvest
+        and park."""
+        sched = self._sched
+        L = self.shard_width
+        try:
+            shard.activate()
+            while True:
+                now = time.time()
+                # -- harvest (single-writer lane bookkeeping, syncs device)
+                harvested = False
+                for i in range(L):
+                    adm = shard.slot_adm[i]
+                    if adm is not None and shard.slot_iters[i] >= adm.req.n_iter:
+                        self._harvest_lane(shard, i, now)
+                        harvested = True
+                # -- admissions: atomic vs concurrent submit()
+                dirty = harvested
+                admitted_lanes = []
+                with sched.cond:
+                    for i in range(L):
+                        if shard.slot_adm[i] is not None:
+                            continue
+                        entry = sched.pop()
+                        if entry is None:
+                            if harvested:
+                                shard.fill(i, None)  # clear stale load
+                            continue
+                        self._admit_lane(shard, i, entry.payload, now)
+                        admitted_lanes.append(i)
+                        dirty = True
+                    # preemption: queue head about to miss, no free lane.
+                    # Decide and pop the head under the lock; the actual
+                    # park (a device sync) happens after release so other
+                    # shards and submit() are not stalled behind it.
+                    # Popping the head BEFORE re-queueing the victim also
+                    # matters: a long-waiting deadline-less victim can
+                    # outrank the head (starvation horizon), and popping
+                    # after the push would hand the lane straight back to
+                    # the evictee.
+                    victim = preempt_entry = None
+                    head = sched.peek() if self.preempt else None
+                    if head is not None:
+                        views = [
+                            None if a is None else SlotView(
+                                deadline=(a.req.deadline if a.req.deadline
+                                          is not None else INF),
+                                iters_left=a.req.n_iter - shard.slot_iters[i],
+                                preemptible=i not in admitted_lanes)
+                            for i, a in enumerate(shard.slot_adm)]
+                        victim = preempt_victim(
+                            head.deadline, head.payload.iters_left,
+                            views, now, self._estimate())
+                        if victim is not None:
+                            preempt_entry = sched.pop()
+                    occupied = any(a is not None for a in shard.slot_adm)
+                    if not occupied and preempt_entry is None:
+                        if self._stopping and len(sched._heap) == 0:
+                            break
+                        shard.busy_t0 = None
+                        shard.steps_in_window = 0
+                        sched.cond.wait(timeout=0.1)
+                        continue
+                if preempt_entry is not None:
+                    parked = shard.park(victim)   # device sync, lock-free
+                    self.preemptions += 1
+                    sched.push(parked, parked.req.deadline, now,
+                               seq=parked.seq,
+                               eff_deadline=parked.eff_deadline)
+                    self._admit_lane(shard, victim, preempt_entry.payload,
+                                     now)
+                    dirty = True
+                if dirty:
+                    shard._upload()
+                # -- tick: one compiled step, admissions drain before the
+                # next one; dispatch is async
+                if shard.busy_t0 is None:
+                    shard.busy_t0 = time.time()
+                shard.state = self.step(shard.params, shard.bp,
+                                        shard.load_vol, shard.state)
+                shard.steps += 1
+                shard.steps_in_window += 1
+                for i in range(L):
+                    if shard.slot_adm[i] is not None:
+                        shard.slot_iters[i] += 1
+                # bound the dispatch-ahead depth: unchecked, the host can
+                # queue the whole burst to the next completion (~shard
+                # width x n_iter steps) before the device catches up, and
+                # a request admitted "immediately" would start computing
+                # behind that backlog — blowing exactly the tight
+                # deadlines the scheduler exists to protect. Waiting on
+                # the current frontier every 2 dispatches keeps admission-
+                # to-silicon latency <= 2 ticks at negligible pipeline
+                # cost (host-side bookkeeping is microseconds per tick).
+                if shard.steps_in_window % 2 == 0:
+                    jax.block_until_ready(shard.state.it)
+        except BaseException as exc:  # fail every waiter, don't hang
+            with sched.cond:
+                self._failure = exc
+                self._stopping = True
+                while True:
+                    entry = sched.pop()
+                    if entry is None:
+                        break
+                    self._inflight -= 1
+                    entry.payload.future._resolve(exc)
+                for i, adm in enumerate(shard.slot_adm):
+                    if adm is not None:
+                        shard.slot_adm[i] = None
+                        self._inflight -= 1
+                        adm.future._resolve(exc)
+                self._sched.cond.notify_all()
+            raise
+        finally:
+            with self._steps_lock:
+                self._steps_base += shard.steps
+                shard.steps = 0
+
+    # -------------------------------------------------------------- shim
 
     def run(self, requests: List[TopoRequest]) -> List[TopoRequest]:
-        """Process all requests; returns them with densities filled."""
-        t_submit = time.time()
-        queue = collections.deque(requests)
-        qlock = threading.Lock()
+        """Drain-mode compatibility shim over the streaming core: submit
+        everything, wait for completion, and stop the tick loops if this
+        call started them. Returns the requests with densities filled."""
         steps_before = self.total_steps
-        if self.shards == 1:
-            self._serve_shard(self._shards[0], queue, qlock, t_submit)
-        else:
-            with ThreadPoolExecutor(max_workers=self.shards) as pool:
-                futs = [pool.submit(self._serve_shard, sh, queue, qlock,
-                                    t_submit) for sh in self._shards]
-                for f in futs:
-                    f.result()
+        was_running = self._running
+        futs = [self.submit(r) for r in requests]
+        for f in futs:
+            f.result()
+        if not was_running:
+            self.shutdown()
         self.last_run_steps = self.total_steps - steps_before
         return requests
 
-    def throughput_stats(self, requests: List[TopoRequest],
+    # ------------------------------------------------------------- stats
+
+    def throughput_stats(self, requests: Optional[List[TopoRequest]] = None,
                          wall_s: Optional[float] = None) -> Dict[str, float]:
-        done = [r for r in requests if r.done]
+        """Serving stats over `requests` (default: everything completed on
+        this engine). Latency percentiles are end-to-end (submit ->
+        completion); deadline_hit_rate covers deadline-carrying requests
+        only (1.0 when there were none)."""
+        pool = self._completed if requests is None else requests
+        done = [r for r in pool if r.done]
         iters = sum(r.cronet_iters + r.fea_iters for r in done)
-        # default wall clock: the run's makespan (submit -> last completion);
-        # summing concurrent latencies would understate throughput ~slots-fold
-        total = wall_s if wall_s is not None else max(
-            (r.queue_wait_s + r.latency_s for r in done), default=0.0)
+        e2e = [r.queue_wait_s + r.latency_s for r in done]
+        # default wall clock: the pool's makespan (submit -> last
+        # completion); summing concurrent latencies would understate
+        # throughput ~slots-fold
+        total = wall_s if wall_s is not None else max(e2e, default=0.0)
+        with_dl = [r for r in done if r.deadline is not None]
+        hits = sum(1 for r in with_dl if r.deadline_met)
         return {
             "requests": float(len(done)),
             "problems_per_s": len(done) / max(total, 1e-9),
             "mean_latency_s": float(np.mean([r.latency_s for r in done])
                                     if done else 0.0),
+            "p50_latency_s": float(np.percentile(e2e, 50) if e2e else 0.0),
+            "p99_latency_s": float(np.percentile(e2e, 99) if e2e else 0.0),
+            "deadline_hit_rate": (hits / len(with_dl)) if with_dl else 1.0,
+            "preemptions": float(self.preemptions),
             "cronet_hit_rate": (sum(r.cronet_iters for r in done)
                                 / max(iters, 1)),
             "batched_steps": float(self.last_run_steps),
+            "total_steps": float(self.total_steps),
         }

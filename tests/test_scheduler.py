@@ -1,0 +1,153 @@
+"""serve/scheduler.py unit tests: EDF ordering, deterministic
+tie-breaking, slack-safe preemption, and starvation bounds — pure policy,
+no threads, no devices."""
+import threading
+
+from repro.serve.scheduler import INF, EDFScheduler, SlotView, preempt_victim
+
+# ------------------------------------------------------------ EDF ordering
+
+
+def test_edf_pops_earliest_deadline_first():
+    s = EDFScheduler()
+    s.push("late", deadline=30.0, now=0.0)
+    s.push("early", deadline=5.0, now=0.0)
+    s.push("mid", deadline=12.0, now=0.0)
+    assert [s.pop().payload for _ in range(3)] == ["early", "mid", "late"]
+    assert s.pop() is None
+
+
+def test_equal_deadlines_break_ties_by_submit_order():
+    s = EDFScheduler()
+    for k in range(8):
+        s.push(k, deadline=10.0, now=0.0)
+    assert [s.pop().payload for _ in range(8)] == list(range(8))
+
+
+def test_deadline_less_requests_are_fifo_among_themselves():
+    s = EDFScheduler(starvation_horizon=60.0)
+    # submitted at increasing times -> increasing effective deadlines
+    for k in range(5):
+        s.push(k, deadline=None, now=float(k))
+    assert [s.pop().payload for _ in range(5)] == list(range(5))
+
+
+def test_starvation_horizon_bounds_deadline_less_wait():
+    """A deadline-less request submitted at t=0 with horizon H outranks
+    every deadline-carrying arrival whose deadline lies past t+H — an
+    unbounded urgent stream cannot starve it forever."""
+    s = EDFScheduler(starvation_horizon=10.0)
+    s.push("best-effort", deadline=None, now=0.0)     # eff deadline 10
+    s.push("tight", deadline=4.0, now=1.0)            # beats it
+    for k in range(20):
+        s.push(f"later-{k}", deadline=11.0 + k, now=2.0)  # all lose to it
+    assert s.pop().payload == "tight"
+    assert s.pop().payload == "best-effort"
+
+
+def test_repush_with_original_seq_preserves_rank():
+    """A parked (preempted) entry re-enters with its original sequence
+    number and effective deadline, so it resumes exactly where EDF had
+    placed it — ahead of anything submitted after it."""
+    s = EDFScheduler()
+    a = s.push("a", deadline=10.0, now=0.0)
+    s.push("b", deadline=10.0, now=0.0)
+    popped = s.pop()
+    assert popped.payload == "a"
+    # park + re-admit
+    s.push("a", deadline=10.0, now=5.0, seq=a.seq, eff_deadline=a.eff_deadline)
+    assert s.pop().payload == "a"
+    assert s.pop().payload == "b"
+
+
+def test_push_is_thread_safe_and_counts():
+    s = EDFScheduler()
+    n, per = 8, 50
+
+    def producer(k):
+        for i in range(per):
+            s.push((k, i), deadline=float(k * per + i), now=0.0)
+
+    ts = [threading.Thread(target=producer, args=(k,)) for k in range(n)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len(s) == n * per
+    assert s.pushed == n * per
+    seen = set()
+    prev = -1.0
+    while (e := s.pop()) is not None:
+        assert e.eff_deadline >= prev
+        prev = e.eff_deadline
+        seen.add(e.payload)
+    assert len(seen) == n * per
+    assert s.popped == n * per
+
+
+# --------------------------------------------------------- preempt_victim
+
+_SPI = 1.0  # seconds per iteration, fixed for readability
+
+
+def _slot(deadline=INF, left=10, preemptible=True):
+    return SlotView(deadline=deadline, iters_left=left,
+                    preemptible=preemptible)
+
+
+def test_no_preemption_when_waiting_makes_the_deadline():
+    # next natural completion in 2 iters; candidate needs 3; deadline 10s out
+    slots = [_slot(left=2), _slot(left=8)]
+    assert preempt_victim(10.0, 3, slots, now=0.0, sec_per_iter=_SPI) is None
+
+
+def test_no_preemption_when_a_lane_is_free():
+    slots = [None, _slot(left=50)]
+    assert preempt_victim(1.0, 3, slots, now=0.0, sec_per_iter=_SPI) is None
+
+
+def test_no_preemption_for_deadline_less_or_unestimated():
+    slots = [_slot(left=50), _slot(left=50)]
+    assert preempt_victim(INF, 3, slots, now=0.0, sec_per_iter=_SPI) is None
+    assert preempt_victim(1.0, 3, slots, now=0.0, sec_per_iter=0.0) is None
+
+
+def test_no_preemption_when_candidate_is_infeasible_anyway():
+    # deadline 2s, needs 3 iters at 1s each: even an immediate slot misses;
+    # evicting a victim would trade one miss for a possible second
+    slots = [_slot(left=50), _slot(left=50)]
+    assert preempt_victim(2.0, 3, slots, now=0.0, sec_per_iter=_SPI) is None
+
+
+def test_preemption_fires_only_when_victim_provably_safe():
+    """Urgent candidate (misses if it waits, makes it if admitted now).
+    The only occupant has a deadline that eviction would blow -> None;
+    give it slack -> it becomes the victim."""
+    urgent = dict(deadline=6.0, iters_needed=4, now=0.0, sec_per_iter=_SPI)
+    # victim would finish at 4 + 10 = 14 > its deadline 12: unsafe
+    tight = [_slot(deadline=12.0, left=10), _slot(deadline=12.0, left=10)]
+    assert preempt_victim(urgent["deadline"], urgent["iters_needed"], tight,
+                          urgent["now"], urgent["sec_per_iter"]) is None
+    # deadline 20 leaves slack 6 after eviction: safe -> evicted
+    slack = [_slot(deadline=20.0, left=10), _slot(deadline=12.0, left=10)]
+    assert preempt_victim(urgent["deadline"], urgent["iters_needed"], slack,
+                          urgent["now"], urgent["sec_per_iter"]) == 0
+
+
+def test_victim_choice_maximizes_slack_and_ties_break_low():
+    # both deadline-less (infinite slack): deterministic lowest lane
+    slots = [_slot(left=10), _slot(left=10)]
+    assert preempt_victim(6.0, 4, slots, now=0.0, sec_per_iter=_SPI) == 0
+    # lane 1 has more slack than lane 2 -> lane 1
+    slots = [_slot(deadline=13.0, left=10),     # unsafe (finish 14)
+             _slot(deadline=40.0, left=10),     # slack 26
+             _slot(deadline=20.0, left=10)]     # slack 6
+    assert preempt_victim(6.0, 4, slots, now=0.0, sec_per_iter=_SPI) == 1
+
+
+def test_non_preemptible_slots_are_skipped():
+    slots = [_slot(left=10, preemptible=False), _slot(deadline=20.0, left=10)]
+    assert preempt_victim(6.0, 4, slots, now=0.0, sec_per_iter=_SPI) == 1
+    slots = [_slot(left=10, preemptible=False),
+             _slot(left=10, preemptible=False)]
+    assert preempt_victim(6.0, 4, slots, now=0.0, sec_per_iter=_SPI) is None

@@ -1,0 +1,199 @@
+"""Streaming-admission invariance properties (the tentpole contract):
+for random request mixes, arrival orders, slot widths, and forced
+preemption/park/restore cycles, the streaming engine's final fp32
+densities are BITWISE-equal to standalone fea/hybrid.run_hybrid runs —
+and live admission never recompiles the batched step."""
+import dataclasses
+import random
+import time
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.common import materialize
+from repro.configs.cronet import get_cronet_config
+from repro.core import cronet
+from repro.fea import fea2d, hybrid
+from repro.serve.topo_service import TopoRequest, TopoServingEngine
+
+U_SCALE = 50.0
+_CTX = {}
+
+
+def _ctx():
+    """Module-cached (cfg, params, problem pool) — property examples must
+    share one config so compiled steps are reused across examples."""
+    if not _CTX:
+        cfg = dataclasses.replace(get_cronet_config("small"),
+                                  nelx=12, nely=4, hist_len=3)
+        params = materialize(cronet.param_specs(
+            dataclasses.replace(cfg, dtype="float32")), jax.random.key(0))
+        pool = [fea2d.point_load_problem(
+            cfg.nelx, cfg.nely, load_node=(i % (cfg.nelx - 1), 0),
+            load=(0.0, -1.0 - 0.1 * i)) for i in range(8)]
+        _CTX.update(cfg=cfg, params=params, pool=pool, refs={})
+    return _CTX["cfg"], _CTX["params"], _CTX["pool"]
+
+
+def _ref_density(prob_idx: int, n_iter: int) -> np.ndarray:
+    """Standalone run_hybrid reference, memoized across property examples."""
+    cfg, params, pool = _ctx()
+    key = (prob_idx, n_iter)
+    if key not in _CTX["refs"]:
+        res = hybrid.run_hybrid(cfg, params, u_scale=U_SCALE, n_iter=n_iter,
+                                precision="fp32", problem=pool[prob_idx],
+                                compute_metrics=False)
+        _CTX["refs"][key] = res.density
+    return _CTX["refs"][key]
+
+
+# ------------------------------------------------- the invariance property
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(2, 4),       # slot width
+       st.integers(3, 7),       # request count
+       st.integers(0, 10 ** 6))  # mix/arrival-order seed
+def test_streaming_densities_bitwise_equal_standalone(slots, n_req, seed):
+    """Any request mix served through live submission (random problems,
+    iteration budgets, deadline mixes, arrival order) must reproduce each
+    standalone run bitwise — scheduling buys deadlines, not approximation."""
+    cfg, params, pool = _ctx()
+    rng = random.Random(seed)
+    picks = [(rng.randrange(len(pool)), rng.randint(3, 7))
+             for _ in range(n_req)]
+    deadlines = [rng.choice([None, 30.0, 120.0]) for _ in range(n_req)]
+    eng = TopoServingEngine(cfg, params, u_scale=U_SCALE, slots=slots,
+                            precision="fp32")
+    futs = []
+    for k, ((pi, ni), dl) in enumerate(zip(picks, deadlines)):
+        futs.append(eng.submit(
+            TopoRequest(uid=k, problem=pool[pi], n_iter=ni), deadline_s=dl))
+        if rng.random() < 0.3:   # stagger some arrivals mid-serve
+            time.sleep(0.01)
+    reqs = [f.result(timeout=300) for f in futs]
+    eng.shutdown()
+    for req, (pi, ni) in zip(reqs, picks):
+        assert req.done and req.fea_iters + req.cronet_iters == ni
+        np.testing.assert_array_equal(
+            req.density, _ref_density(pi, ni),
+            err_msg=f"uid {req.uid} (problem {pi}, {ni} iters)")
+
+
+# ---------------------------------------- preemption / park-restore cycles
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(8, 14),      # occupant budget (long, deadline-less)
+       st.integers(2, 5),       # urgent budget (short, tight deadline)
+       st.integers(0, 10 ** 6))
+def test_preemption_park_restore_is_bitwise_exact(long_n, short_n, seed):
+    """Force an eviction: fill both lanes with deadline-less long jobs,
+    then submit a short job whose deadline is only feasible via
+    preemption (tick_time_s pinned so the decision is deterministic).
+    The evicted lane is parked, re-admitted, and must still finish
+    bitwise-identical to its standalone run."""
+    cfg, params, pool = _ctx()
+    rng = random.Random(seed)
+    occ = [(rng.randrange(len(pool)), long_n) for _ in range(2)]
+    urg = (rng.randrange(len(pool)), short_n)
+    # tick_time_s=10 makes "waiting" always look like a miss while the
+    # deadline below stays feasible for an immediate slot -> the scheduler
+    # MUST preempt (victims are deadline-less, hence provably safe)
+    eng = TopoServingEngine(cfg, params, u_scale=U_SCALE, slots=2,
+                            precision="fp32", tick_time_s=10.0)
+    futs = [eng.submit(TopoRequest(uid=k, problem=pool[pi], n_iter=ni))
+            for k, (pi, ni) in enumerate(occ)]
+    # wait until both occupants are actually admitted (lanes full)
+    t0 = time.time()
+    while any(a is None for a in eng._shards[0].slot_adm):
+        assert time.time() - t0 < 60, "occupants never admitted"
+        time.sleep(0.005)
+    fut_u = eng.submit(TopoRequest(uid=9, problem=pool[urg[0]],
+                                   n_iter=urg[1]),
+                       deadline_s=urg[1] * 10.0 + 5.0)
+    reqs = [f.result(timeout=600) for f in futs]
+    req_u = fut_u.result(timeout=600)
+    eng.shutdown()
+    assert eng.preemptions >= 1, "preemption never fired"
+    assert sum(r.preemptions for r in reqs) >= 1, "no occupant was parked"
+    for req, (pi, ni) in zip(reqs + [req_u], occ + [urg]):
+        np.testing.assert_array_equal(
+            req.density, _ref_density(pi, ni),
+            err_msg=f"uid {req.uid} (problem {pi}, {ni} iters, "
+                    f"{req.preemptions} preemptions)")
+
+
+# ----------------------------------------------- no-recompilation contract
+
+
+def test_live_admission_is_a_compiled_cache_hit():
+    """submit() against a running tick loop must never retrace the
+    batched step: the engine's trace counter stays flat from the first
+    warm batch through arbitrarily many live admissions."""
+    cfg, params, pool = _ctx()
+    eng = TopoServingEngine(cfg, params, u_scale=U_SCALE, slots=2,
+                            precision="fp32")
+    # warm: compiles the width-2 step once (count may also be 0 if an
+    # earlier test already compiled this config)
+    eng.run([TopoRequest(uid=100 + i, problem=pool[i], n_iter=3)
+             for i in range(2)])
+    traces_warm = eng.step.trace_count[0]
+    # live phase: keep the loop busy with a long occupant, then stream
+    # admissions against the running engine
+    long_fut = eng.submit(TopoRequest(uid=0, problem=pool[0], n_iter=30))
+    futs = []
+    for k in range(5):
+        assert eng.running
+        futs.append(eng.submit(
+            TopoRequest(uid=1 + k, problem=pool[(k + 1) % len(pool)],
+                        n_iter=4)))
+        time.sleep(0.02)
+    for f in futs + [long_fut]:
+        f.result(timeout=300)
+    assert eng.drain(timeout=60)
+    assert eng.step.trace_count[0] == traces_warm, \
+        "live admission retraced the compiled step"
+    eng.shutdown()
+    # every admission actually went through the running loop
+    assert all(f.result().done for f in futs)
+
+
+# ------------------------------------- deadline stats + future semantics
+
+
+def test_deadline_stats_and_future_timeout():
+    cfg, params, pool = _ctx()
+    eng = TopoServingEngine(cfg, params, u_scale=U_SCALE, slots=2,
+                            precision="fp32")
+    fut = eng.submit(TopoRequest(uid=0, problem=pool[0], n_iter=4),
+                     deadline_s=300.0)
+    with pytest.raises(TimeoutError):
+        TopoFuture_never = eng.submit(
+            TopoRequest(uid=1, problem=pool[1], n_iter=25))
+        TopoFuture_never.result(timeout=0.0)
+    req = fut.result(timeout=300)
+    assert req.deadline_met is True
+    eng.drain()
+    eng.shutdown()
+    stats = eng.throughput_stats()
+    assert stats["deadline_hit_rate"] == 1.0
+    assert stats["p99_latency_s"] >= stats["p50_latency_s"] > 0.0
+    # deadline-less request carries no verdict
+    assert TopoFuture_never.result().deadline_met is None
+    # submit after shutdown restarts the tick loops (documented behaviour
+    # the run() shim depends on)
+    assert not eng.running
+    restarted = eng.submit(TopoRequest(uid=2, problem=pool[0], n_iter=2))
+    assert restarted.result(timeout=300).done and eng.running
+    eng.shutdown()
+    # mesh mismatch fails at submit time, in the caller's thread
+    eng2 = TopoServingEngine(cfg, params, u_scale=U_SCALE, slots=2,
+                             precision="fp32")
+    with pytest.raises(ValueError, match="mesh"):
+        eng2.submit(TopoRequest(uid=3,
+                                problem=fea2d.point_load_problem(8, 4),
+                                n_iter=2))
+    eng2.shutdown()

@@ -11,7 +11,8 @@ from repro.common import materialize
 from repro.configs.cronet import get_cronet_config
 from repro.core import cronet
 from repro.fea import fea2d, hybrid
-from repro.serve.topo_service import TopoRequest, TopoServingEngine
+from repro.serve.topo_service import (TopoRequest, TopoServingEngine,
+                                      auto_shards, shard_devices)
 
 U_SCALE = 50.0
 
@@ -177,6 +178,49 @@ def test_tree_sum_matches_sum():
     for n in [1, 2, 3, 4, 7, 8]:
         y = jnp.arange(1.0, n + 1.0)
         assert float(fea2d.tree_sum(y)) == float(n * (n + 1) / 2)
+
+
+# ------------------------------------------------------ shard device pinning
+
+
+def test_shard_devices_is_the_single_pinning_source():
+    """shard_devices() resolves the shard count AND pins devices in one
+    place (the auto_shards/_Shard duplication flagged in PR 1): it is a
+    pure function of (slots, shards, device list)."""
+    fake = ["dev0", "dev1", "dev2"]
+    assert shard_devices(8, devices=fake) == \
+        ["dev" + str(i) for i in range(auto_shards(8, len(fake)))]
+    # explicit shard count round-robins deterministically
+    assert shard_devices(8, shards=2, devices=fake) == ["dev0", "dev1"]
+    assert shard_devices(8, shards=1, devices=fake) == ["dev0"]
+    # repeated resolution is identical (no hidden state)
+    assert shard_devices(12, devices=fake) == shard_devices(12, devices=fake)
+    with pytest.raises(ValueError):
+        shard_devices(8, shards=3, devices=fake)   # 8 % 3 != 0
+    with pytest.raises(ValueError):
+        shard_devices(4, shards=4, devices=fake)   # width < 2
+    with pytest.raises(ValueError):
+        shard_devices(8, shards=4, devices=fake[:2])  # shards > devices
+    with pytest.raises(ValueError):
+        shard_devices(1, devices=fake)             # slots < 2
+
+
+def test_shard_device_assignment_stable_across_restarts(cfg, params):
+    """Engine restarts (and rebuilt engines with the same arguments) must
+    pin the same shards to the same devices — the PR 1 regression risk of
+    re-deriving placement per start."""
+    eng = TopoServingEngine(cfg, params, u_scale=U_SCALE, slots=4,
+                            precision="fp32")
+    devs0 = [sh.device for sh in eng._shards]
+    assert devs0 == shard_devices(4, eng.shards)
+    probs = _problems(2)
+    for _ in range(2):  # each run() starts and shuts down the tick loops
+        eng.run([TopoRequest(uid=i, problem=p, n_iter=3)
+                 for i, p in enumerate(probs)])
+        assert [sh.device for sh in eng._shards] == devs0
+    eng2 = TopoServingEngine(cfg, params, u_scale=U_SCALE, slots=4,
+                             precision="fp32")
+    assert [sh.device for sh in eng2._shards] == devs0
 
 
 def test_point_load_problem_default_is_mbb():
