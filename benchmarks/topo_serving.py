@@ -33,6 +33,24 @@ rate where drain misses >= 30%.
 
     PYTHONPATH=src python -m benchmarks.topo_serving --streaming [--check]
 
+Gateway mode (--gateway) measures the mesh-agnostic front door
+(repro.serve.TopoGateway): a mixed-mesh Poisson arrival process pushed
+PAST aggregate capacity (sustained overload), served once through an
+UNBOUNDED admission queue and once through a bounded queue with the
+shed-latest-deadline policy. Under overload the unbounded queue grows
+without bound and every request finishes late; shedding the least-urgent
+requests keeps the feasible subset on time, so the overall deadline hit
+rate (sheds counted as misses) must EXCEED the unbounded baseline — the
+claim --check asserts, alongside "reject fails fast with a typed error"
+and "block makes submit() wait".
+
+    PYTHONPATH=src python -m benchmarks.topo_serving --gateway [--check]
+
+Smoke mode (--smoke) is the push-gate CI entry: a tiny-mesh gateway run
+(two meshes, a handful of requests, deterministic shed/reject checks)
+that keeps this benchmark's import-and-serve path from rotting between
+nightlies. It asserts unconditionally and finishes in about a minute.
+
 Also exposed as a suite for benchmarks/run.py (`--only topo_serving`).
 """
 import argparse
@@ -68,6 +86,42 @@ def _setup(size: str, hist_len: int):
     params = materialize(cronet.param_specs(
         dataclasses.replace(cfg, dtype="float32")), jax.random.key(0))
     return cfg, params
+
+
+def _engine_pool(cfg, params, u_scale, slots):
+    """Shared per-mesh engine pool for gateway phases: the returned
+    ``factory`` hands every gateway the SAME engines (one XLA compile
+    per mesh per process). The caller owns the pool — intermediate
+    gateways shut down with ``wait=False`` (which leaves factory-built
+    engines alone) and the pool is closed once at the end."""
+    from repro.serve import TopoServingEngine
+
+    engines = {}
+
+    def factory(nelx, nely):
+        key = (nelx, nely)
+        if key not in engines:
+            c = dataclasses.replace(cfg, nelx=nelx, nely=nely)
+            engines[key] = TopoServingEngine(c, params, u_scale,
+                                             slots=slots, precision="fp32")
+        return engines[key]
+
+    return engines, factory
+
+
+def _pin_engine(gw, prob, filler_iters, timeout=60.0):
+    """Submit one long filler and wait until the dispatcher forwards it.
+    With ``engine_depth=1`` this pins the mesh's engine at depth, so a
+    bounded gateway queue fills deterministically behind the filler."""
+    from repro.serve import TopoRequest
+
+    filler = gw.submit(TopoRequest(uid=-1, problem=prob,
+                                   n_iter=filler_iters))
+    t0 = time.time()
+    while gw.throughput_stats()["pending"] > 0:
+        assert time.time() - t0 < timeout, "filler never forwarded"
+        time.sleep(0.002)
+    return filler
 
 
 def seed_style_loop(cfg, params, u_scale, prob, n_iter,
@@ -284,7 +338,7 @@ def bench_streaming(size: str = "small", slots: int = 4,
         for f in futs:
             f.result(timeout=3600)
         wall_s = time.time() - t0
-        engine.shutdown()
+        engine.stop()
         stats_s = engine.throughput_stats(reqs_s, wall_s=wall_s)
 
         # ------------------------------------- (b) drain-mode baseline
@@ -400,6 +454,274 @@ def bench_streaming(size: str = "small", slots: int = 4,
     return {"t_svc_s": t_svc, "capacity_req_s": capacity, **point}
 
 
+def bench_gateway(size: str = "small", slots: int = 4,
+                  n_requests: int = 48, n_iter: int = 12,
+                  hist_len: int = 4, u_scale: float = 50.0,
+                  overload_mult: float = 2.5, deadline_mult: float = 2.0,
+                  check: bool = True, verbose: bool = True,
+                  seed: int = 0):
+    """Mesh-agnostic gateway under sustained overload: one mixed-mesh
+    Poisson arrival process pushed past aggregate capacity, served (a)
+    through an UNBOUNDED admission queue and (b) through a bounded queue
+    with the shed-latest-deadline policy — identical schedule, shared
+    per-mesh engines (no recompilation between phases).
+
+    Under overload the unbounded queue backlog grows without bound, so
+    late arrivals finish progressively later and the overall deadline
+    hit rate collapses; shedding the least-urgent queued requests keeps
+    the feasible subset on time. With --check the benchmark walks an
+    escalating overload ladder until shedding separates from the
+    unbounded baseline, then asserts (sheds count as misses):
+
+      hit_shed > hit_unbounded   and   shed_count > 0
+
+    plus the two cheap policy contracts: REJECT fails fast with
+    ``QueueFull`` (typed, sub-second) and BLOCK makes ``submit()`` wait
+    instead of growing the queue."""
+    from repro.fea import fea2d
+    from repro.serve import (QueueFull, RequestShed, TopoGateway,
+                             TopoRequest)
+
+    cfg, params = _setup(size, hist_len)
+    meshes = [(cfg.nelx, cfg.nely),
+              (max(8, (cfg.nelx * 4) // 5), max(4, (cfg.nely * 4) // 5))]
+    rng = np.random.default_rng(seed)
+    probs = {m: [fea2d.point_load_problem(
+        m[0], m[1], load_node=(i % (m[0] - 1), 0),
+        load=(0.0, -1.0 - 0.05 * i)) for i in range(8)] for m in meshes}
+
+    engines, factory = _engine_pool(cfg, params, u_scale, slots)
+
+    def calibrate():
+        # warm (compile) each mesh's step first, then measure full
+        # batches on ALL meshes CONCURRENTLY: the serving phases run
+        # every engine at once, so per-mesh latency must be taken under
+        # the same core contention — sequential calibration overstates
+        # aggregate capacity by ~the mesh count on a small host
+        for m in meshes:
+            pool = probs[m]
+            factory(*m).run([TopoRequest(uid=-1 - k,
+                                         problem=pool[k % len(pool)],
+                                         n_iter=2) for k in range(slots)])
+        calib = {m: [TopoRequest(uid=-100 - k,
+                                 problem=probs[m][k % len(probs[m])],
+                                 n_iter=n_iter) for k in range(slots)]
+                 for m in meshes}
+        futs = [factory(*m).submit(r) for m in meshes for r in calib[m]]
+        for f in futs:
+            f.result(timeout=3600)
+        for m in meshes:
+            factory(*m).stop()
+        t_svc = {m: float(np.mean([r.latency_s for r in calib[m]]))
+                 for m in meshes}
+        cap = sum(slots / max(t, 1e-9) for t in t_svc.values())
+        return t_svc, cap
+
+    t_svc, capacity = calibrate()
+    mesh_idx = rng.integers(0, len(meshes), n_requests)
+
+    def serve(max_pending, overload, arrivals, deadlines):
+        gw = TopoGateway(cfg, params, u_scale, slots=slots,
+                         max_pending=max_pending, overload=overload,
+                         engine_depth=slots, engine_factory=factory)
+        reqs = [TopoRequest(uid=i,
+                            problem=probs[meshes[mesh_idx[i]]][i % 8],
+                            n_iter=n_iter) for i in range(n_requests)]
+        t0 = time.time()
+        futs = []
+        for i, req in enumerate(reqs):
+            lag = t0 + arrivals[i] - time.time()
+            if lag > 0:
+                time.sleep(lag)
+            futs.append(gw.submit(req, deadline_s=float(deadlines[i])))
+        shed = 0
+        for f in futs:
+            try:
+                f.result(timeout=3600)
+            except RequestShed:
+                shed += 1
+        wall = time.time() - t0
+        hits = sum(1 for r in reqs if r.done and r.deadline_met)
+        gw.shutdown(wait=False)    # engines are shared: leave them alive
+        return {"hit": hits / n_requests, "shed": shed, "wall_s": wall}
+
+    def measure(rate):
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+        deadlines = np.array([deadline_mult * t_svc[meshes[mesh_idx[i]]]
+                              for i in range(n_requests)])
+        # shed capacity = slots: together with engine_depth=slots this
+        # keeps the unsheddable backlog (queued-in-engine + gateway
+        # queue) small relative to the arrival burst, so the policy has
+        # real decisions to make at the operating point
+        unb = serve(None, "block", arrivals, deadlines)
+        shd = serve(slots, "shed-latest-deadline", arrivals, deadlines)
+        if verbose:
+            print(f"  rate {rate:5.2f} req/s "
+                  f"({rate / capacity:.0%} of capacity):")
+            print(f"    unbounded : hit {100 * unb['hit']:5.1f}%  "
+                  f"wall {unb['wall_s']:.1f}s")
+            print(f"    shed      : hit {100 * shd['hit']:5.1f}%  "
+                  f"({shd['shed']} shed)  wall {shd['wall_s']:.1f}s")
+        return {"rate_req_s": rate, "hit_unbounded": unb["hit"],
+                "hit_shed": shd["hit"], "shed": shd["shed"]}
+
+    if verbose:
+        print(f"{len(meshes)} meshes "
+              f"({', '.join(f'{a}x{b}' for a, b in meshes)}), "
+              f"{n_requests} Poisson arrivals, deadlines "
+              f"{deadline_mult:.1f}x ideal per-mesh latency, aggregate "
+              f"capacity {capacity:.2f} req/s, {slots} slots/mesh")
+
+    # -- the overload claim: walk the ladder until shed separates
+    ladder = [1.0, 1.5, 2.0] if check else [1.0]
+    point = None
+    for attempt in range(2 if check else 1):
+        if attempt:
+            if verbose:
+                print("  (no separating rung; recalibrating, retrying)")
+            t_svc, capacity = calibrate()
+        for mult in ladder:
+            point = measure(overload_mult * capacity * mult)
+            if (point["shed"] > 0
+                    and point["hit_shed"] >= point["hit_unbounded"] + 0.10):
+                break
+        else:
+            continue
+        break
+
+    # -- REJECT fails fast with a typed error
+    gw_rej = TopoGateway(cfg, params, u_scale, slots=slots, max_pending=2,
+                         overload="reject", engine_depth=1,
+                         engine_factory=factory)
+    m0 = meshes[0]
+    filler = _pin_engine(gw_rej, probs[m0][0], 5 * n_iter)
+    held = [gw_rej.submit(TopoRequest(uid=-501 - k, problem=probs[m0][1],
+                                      n_iter=2), deadline_s=60.0)
+            for k in range(2)]
+    t0 = time.time()
+    try:
+        gw_rej.submit(TopoRequest(uid=-599, problem=probs[m0][2],
+                                  n_iter=2), deadline_s=60.0)
+        rejected, t_reject = False, 0.0
+    except QueueFull:
+        rejected, t_reject = True, time.time() - t0
+    for f in [filler] + held:
+        f.result(timeout=3600)
+    gw_rej.shutdown(wait=False)
+
+    # -- BLOCK makes submit() wait instead of growing the queue
+    gw_blk = TopoGateway(cfg, params, u_scale, slots=slots, max_pending=1,
+                         overload="block", engine_depth=1,
+                         engine_factory=factory)
+    futs = []
+    waits = []
+    for k in range(4):
+        t0 = time.time()
+        futs.append(gw_blk.submit(TopoRequest(
+            uid=-600 - k, problem=probs[m0][k % 8], n_iter=n_iter)))
+        waits.append(time.time() - t0)
+    for f in futs:
+        f.result(timeout=3600)
+    gw_blk.shutdown(wait=False)
+    blocked_s = max(waits[2:])    # first two fill depth+queue freely
+
+    for eng in engines.values():
+        eng.shutdown()
+    if verbose:
+        print(f"  reject    : typed QueueFull in {t_reject * 1e3:.1f}ms")
+        print(f"  block     : submit() waited up to {blocked_s:.2f}s "
+              f"at capacity 1")
+    if check:
+        assert point["shed"] > 0, "overload never triggered shedding"
+        assert point["hit_shed"] > point["hit_unbounded"], (
+            f"shed hit rate {point['hit_shed']:.0%} did not beat the "
+            f"unbounded baseline {point['hit_unbounded']:.0%} at any rung")
+        assert rejected and t_reject < 1.0, (
+            f"REJECT not fail-fast (rejected={rejected}, "
+            f"{t_reject:.2f}s)")
+        assert blocked_s > 0.01, "BLOCK policy never made submit() wait"
+    return {"capacity_req_s": capacity, "t_reject_s": t_reject,
+            "blocked_s": blocked_s, **point}
+
+
+def smoke():
+    """Push-gate CI entry (--smoke): exercise the import-and-serve path
+    end to end in about a minute — a two-mesh gateway run on tiny
+    meshes, plus deterministic shed/reject policy checks against a
+    deliberately saturated bounded queue. Asserts unconditionally."""
+    from repro.fea import fea2d
+    from repro.serve import (QueueFull, RequestShed, TopoGateway,
+                             TopoRequest)
+
+    cfg, params = _setup("small", hist_len=3)
+    meshes = [(12, 4), (10, 6)]
+    probs = {m: [fea2d.point_load_problem(
+        m[0], m[1], load_node=(i % (m[0] - 1), 0),
+        load=(0.0, -1.0 - 0.1 * i)) for i in range(4)] for m in meshes}
+    engines, factory = _engine_pool(cfg, params, 50.0, slots=2)
+
+    # 1. mixed-mesh serving through one queue
+    gw = TopoGateway(cfg, params, 50.0, slots=2, max_pending=16,
+                     engine_factory=factory)
+    futs = [gw.submit(TopoRequest(uid=i, problem=probs[meshes[i % 2]][i % 4],
+                                  n_iter=4), deadline_s=600.0)
+            for i in range(6)]
+    done = [f.result(timeout=600) for f in futs]
+    stats = gw.throughput_stats(per_mesh=True)
+    assert all(r.done for r in done)
+    assert stats["engines"] == 2.0 and stats["requests"] == 6.0
+    assert stats["deadline_hit_rate"] == 1.0
+    assert set(stats["per_mesh"]) == {"12x4", "10x6"}
+    gw.shutdown(wait=False)
+
+    def saturate(overload):
+        """Bounded gateway with one long filler holding the engine at
+        depth 1, so the 2-deep queue fills deterministically."""
+        g = TopoGateway(cfg, params, 50.0, slots=2, max_pending=2,
+                        overload=overload, engine_depth=1,
+                        engine_factory=factory)
+        filler = _pin_engine(g, probs[(12, 4)][0], filler_iters=500)
+        held = [g.submit(TopoRequest(uid=k, problem=probs[(12, 4)][1],
+                                     n_iter=2), deadline_s=30.0 + k)
+                for k in range(2)]
+        return g, filler, held
+
+    # 2. SHED: the queued laggard's future fails with the typed error
+    g, filler, held = saturate("shed-latest-deadline")
+    f_late = g.submit(TopoRequest(uid=10, problem=probs[(12, 4)][2],
+                                  n_iter=2), deadline_s=900.0)
+    assert f_late.done() and isinstance(f_late.exception(), RequestShed)
+    f_tight = g.submit(TopoRequest(uid=11, problem=probs[(12, 4)][3],
+                                   n_iter=2), deadline_s=5.0)
+    shed_victim = held[1]          # latest deadline among the queued
+    try:
+        shed_victim.result(timeout=60)
+        raise AssertionError("laggard was not shed")
+    except RequestShed:
+        pass
+    for f in [filler, held[0], f_tight]:
+        f.result(timeout=600)
+    assert g.throughput_stats()["shed"] == 2.0
+    g.shutdown(wait=False)
+
+    # 3. REJECT: typed fail-fast at the front door
+    g, filler, held = saturate("reject")
+    t0 = time.time()
+    try:
+        g.submit(TopoRequest(uid=20, problem=probs[(12, 4)][2], n_iter=2))
+        raise AssertionError("full queue did not reject")
+    except QueueFull:
+        pass
+    assert time.time() - t0 < 1.0, "REJECT was not fail-fast"
+    for f in [filler] + held:
+        f.result(timeout=600)
+    g.shutdown(wait=False)
+
+    for eng in engines.values():
+        eng.shutdown()
+    print("smoke: gateway mixed-mesh serving + shed/reject policies OK")
+
+
 def run(fast: bool = True):
     """benchmarks/run.py suite entry."""
     r = bench(slots=8, n_requests=8 if fast else 24,
@@ -432,11 +754,26 @@ def main():
                     help="CRONet history length (shorter = faster warm-up)")
     ap.add_argument("--check", action="store_true",
                     help="assert >=3x speedup and bitwise equality "
-                         "(drain), or >=95%%/<=70%% deadline hit rates "
-                         "(--streaming)")
+                         "(drain), >=95%%/<=70%% deadline hit rates "
+                         "(--streaming), or shed > unbounded hit rate + "
+                         "typed reject/block behaviour (--gateway)")
     ap.add_argument("--streaming", action="store_true",
                     help="measure deadline hit rate under live Poisson "
                          "arrivals: streaming admission vs drain batching")
+    ap.add_argument("--gateway", action="store_true",
+                    help="measure the mesh-agnostic gateway under "
+                         "sustained mixed-mesh overload: bounded queue "
+                         "with shed-latest-deadline vs unbounded baseline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast push-gate CI check: tiny-mesh gateway "
+                         "serving + deterministic overload-policy checks "
+                         "(asserts unconditionally)")
+    ap.add_argument("--overload-mult", type=float, default=2.5,
+                    help="gateway mode: base arrival rate as a multiple "
+                         "of measured aggregate capacity")
+    ap.add_argument("--deadline-mult", type=float, default=2.0,
+                    help="gateway mode: deadline as a multiple of the "
+                         "per-mesh ideal batch latency")
     ap.add_argument("--rate-frac", type=float, default=0.75,
                     help="arrival rate as a fraction of measured capacity")
     ap.add_argument("--tight-frac", type=float, default=0.7,
@@ -446,7 +783,15 @@ def main():
     ap.add_argument("--loose-mult", type=float, default=4.0,
                     help="loose deadline as a multiple of ideal latency")
     args = ap.parse_args()
-    if args.streaming:
+    if args.smoke:
+        smoke()
+    elif args.gateway:
+        bench_gateway(size=args.size, slots=args.slots,
+                      n_requests=args.requests or 48, n_iter=args.iters,
+                      hist_len=args.hist_len,
+                      overload_mult=args.overload_mult,
+                      deadline_mult=args.deadline_mult, check=args.check)
+    elif args.streaming:
         bench_streaming(size=args.size, slots=args.slots,
                         n_requests=args.requests or 32, n_iter=args.iters,
                         hist_len=args.hist_len, rate_frac=args.rate_frac,

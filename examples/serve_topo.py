@@ -1,20 +1,28 @@
 """Topology-optimization serving demo (the paper's digital-twin workload
 as a service): train CRONet once, then serve heterogeneous load cases
-through the TopoServingEngine with per-request latency, deadline, and
-CRONet hit-rate reporting.
+with per-request latency, deadline, and CRONet hit-rate reporting.
 
-Two modes:
+Three modes:
   * drain (default): enqueue everything up front, run to completion —
     the PR 1 batch workflow, now a shim over the streaming core.
   * streaming (--arrival-rate > 0): load cases arrive as a Poisson
     process and are submitted live against the running engine; each
     carries a freshness deadline (--deadline) and the earliest-deadline-
     first scheduler (with slack-safe slot preemption) decides admission.
+  * mixed-mesh (--meshes AxB,CxD,...): the fleet case — every monitored
+    structure has its own discretization, and ONE `repro.serve.
+    TopoGateway` serves them all: requests are bucketed by (nelx, nely)
+    into lazily-built per-mesh engines behind one bounded admission
+    queue (--max-pending / --overload pick the backpressure policy).
+    CRONet's parameters are mesh-independent (adaptive pooling), so the
+    net trained once on the --size mesh serves every bucket. Composes
+    with streaming mode.
 
     PYTHONPATH=src python examples/serve_topo.py \
         [--size small] [--requests 12] [--slots 4] [--iters 40] \
         [--train-steps 300] [--backend oracle] \
-        [--arrival-rate 2.0] [--deadline 6.0]
+        [--arrival-rate 2.0] [--deadline 6.0] \
+        [--meshes 30x10,48x16] [--max-pending 64] [--overload block]
 """
 import argparse
 import dataclasses
@@ -24,6 +32,14 @@ import time
 sys.path.insert(0, "src")
 
 import numpy as np
+
+
+def parse_meshes(spec):
+    meshes = []
+    for tok in spec.split(","):
+        nelx, nely = tok.lower().split("x")
+        meshes.append((int(nelx), int(nely)))
+    return meshes
 
 
 def main():
@@ -46,6 +62,16 @@ def main():
                          "(streaming mode; 0 = no deadlines)")
     ap.add_argument("--no-preempt", action="store_true",
                     help="disable slack-safe slot preemption")
+    ap.add_argument("--meshes", default="",
+                    help="comma-separated mesh list, e.g. 30x10,48x16: "
+                         "serve ALL of them through one TopoGateway "
+                         "(round-robin request assignment)")
+    ap.add_argument("--max-pending", type=int, default=64,
+                    help="gateway admission queue capacity (mixed-mesh "
+                         "mode); 0 = unbounded")
+    ap.add_argument("--overload", default="block",
+                    choices=["block", "reject", "shed-latest-deadline"],
+                    help="gateway policy when the admission queue is full")
     args = ap.parse_args()
 
     import jax
@@ -54,7 +80,8 @@ def main():
     from repro.configs.cronet import get_cronet_config
     from repro.core import cronet
     from repro.fea import fea2d, train_cronet
-    from repro.serve.topo_service import TopoRequest, TopoServingEngine
+    from repro.serve import QueueFull, RequestShed, TopoGateway, \
+        TopoRequest, TopoServingEngine
 
     cfg = get_cronet_config(args.size)
     if args.train_steps > 0:
@@ -68,36 +95,69 @@ def main():
             dataclasses.replace(cfg, dtype="float32")), jax.random.key(0))
         u_scale = 50.0
 
-    print(f"== 2. {args.requests} load cases "
-          f"(one per monitored structure) ==")
+    meshes = (parse_meshes(args.meshes) if args.meshes
+              else [(cfg.nelx, cfg.nely)])
+    print(f"== 2. {args.requests} load cases over "
+          f"{len(meshes)} mesh(es) "
+          f"({','.join(f'{a}x{b}' for a, b in meshes)}) ==")
     rng = np.random.default_rng(0)
     probs = []
     for i in range(args.requests):
+        nelx, nely = meshes[i % len(meshes)]   # round-robin over the fleet
         if i == 0:
             # the canonical MBB load case (the training distribution) —
             # the request the trained surrogate should actually accelerate
-            probs.append(fea2d.point_load_problem(cfg.nelx, cfg.nely))
+            probs.append(fea2d.point_load_problem(nelx, nely))
         else:
             probs.append(fea2d.point_load_problem(
-                cfg.nelx, cfg.nely,
-                load_node=(int(rng.integers(0, cfg.nelx - 1)), 0),
+                nelx, nely,
+                load_node=(int(rng.integers(0, nelx - 1)), 0),
                 load=(0.0, float(-0.5 - rng.random()))))
 
-    engine = TopoServingEngine(cfg, params, u_scale, slots=args.slots,
-                               precision="fp32",
-                               error_threshold=args.threshold,
-                               backend=args.backend,
-                               preempt=not args.no_preempt)
+    if args.meshes:
+        service = TopoGateway(
+            cfg, params, u_scale, slots=args.slots, precision="fp32",
+            max_pending=args.max_pending or None, overload=args.overload,
+            error_threshold=args.threshold, backend=args.backend,
+            preempt=not args.no_preempt)
+        label = f"gateway[{args.overload}]"
+    else:
+        service = TopoServingEngine(
+            cfg, params, u_scale, slots=args.slots, precision="fp32",
+            error_threshold=args.threshold, backend=args.backend,
+            preempt=not args.no_preempt)
+        label = "engine"
     deadline = args.deadline if args.deadline > 0 else None
 
+    rejected = []
+
+    def try_submit(futs, req, deadline_s=None):
+        """submit() that survives a full queue under --overload reject
+        (QueueFull is the policy working, not a demo failure)."""
+        try:
+            futs.append(service.submit(req, deadline_s=deadline_s))
+        except QueueFull:
+            rejected.append(req)
+
+    def harvest(futs):
+        done, shed = [], []
+        for f in futs:
+            try:
+                done.append(f.result(timeout=3600))
+            except RequestShed:
+                shed.append(f.request)
+        return done, shed
+
     if args.arrival_rate > 0:
-        print(f"== 3. stream at {args.arrival_rate:.2f} req/s onto "
-              f"{args.slots} slots ({args.backend} backend, "
+        print(f"== 3. stream at {args.arrival_rate:.2f} req/s onto the "
+              f"{label} ({args.slots} slots/mesh, {args.backend} backend, "
               f"deadline {args.deadline or 'none'}s) ==")
-        # warm-up: compile the batched step outside the timed region so
-        # the first arrival is not charged for XLA compilation
-        engine.run([TopoRequest(uid=-1 - k, problem=probs[k % len(probs)],
-                                n_iter=2) for k in range(args.slots)])
+        # warm-up: compile each mesh's batched step outside the timed
+        # region so the first arrival is not charged for XLA compilation
+        warm = [service.submit(TopoRequest(
+            uid=-1 - k, problem=probs[k % len(probs)], n_iter=2))
+            for k in range(max(args.slots, len(meshes)))]
+        harvest(warm)
         arrivals = np.cumsum(
             rng.exponential(1.0 / args.arrival_rate, args.requests))
         t0 = time.time()
@@ -108,19 +168,20 @@ def main():
             lag = t0 + arrivals[i] - time.time()
             if lag > 0:
                 time.sleep(lag)
-            futs.append(engine.submit(
-                TopoRequest(uid=i, problem=prob, n_iter=args.iters),
-                deadline_s=deadline))
-        done = [f.result(timeout=3600) for f in futs]
+            try_submit(futs, TopoRequest(uid=i, problem=prob,
+                                         n_iter=args.iters),
+                       deadline_s=deadline)
+        done, shed = harvest(futs)
         wall = time.time() - t0
-        engine.shutdown()
     else:
-        print(f"== 3. drain {args.requests} requests on {args.slots} "
-              f"slots ({args.backend} backend) ==")
-        reqs = [TopoRequest(uid=i, problem=p, n_iter=args.iters)
-                for i, p in enumerate(probs)]
+        print(f"== 3. drain {args.requests} requests through the {label} "
+              f"({args.slots} slots/mesh, {args.backend} backend) ==")
         t0 = time.time()
-        done = engine.run(reqs)
+        futs = []
+        for i, p in enumerate(probs):
+            try_submit(futs, TopoRequest(uid=i, problem=p,
+                                         n_iter=args.iters))
+        done, shed = harvest(futs)
         wall = time.time() - t0
 
     for r in done:
@@ -128,11 +189,17 @@ def main():
         dl = ("  hit" if r.deadline_met
               else " MISS" if r.deadline_met is not None else "     ")
         pre = f"  parked x{r.preemptions}" if r.preemptions else ""
-        print(f"  req {r.uid:2d}: compliance={r.compliance:9.2f}  "
+        mesh = (f"  {r.problem.nelx}x{r.problem.nely}"
+                if len(meshes) > 1 else "")
+        print(f"  req {r.uid:2d}:{mesh} compliance={r.compliance:9.2f}  "
               f"cronet {r.cronet_iters}/{total}  "
               f"latency {r.latency_s:.2f}s  queued {r.queue_wait_s:.2f}s"
               f"{dl}{pre}")
-    stats = engine.throughput_stats(done, wall_s=wall)
+    for r in shed:
+        print(f"  req {r.uid:2d}: SHED by the overload policy")
+    for r in rejected:
+        print(f"  req {r.uid:2d}: REJECTED at submit (queue full)")
+    stats = service.throughput_stats(done, wall_s=wall)
     line = (f"== {stats['problems_per_s']:.2f} problems/s, "
             f"CRONet hit rate {100 * stats['cronet_hit_rate']:.1f}%, "
             f"p50/p99 latency {stats['p50_latency_s']:.2f}/"
@@ -143,7 +210,22 @@ def main():
         line += (f", deadline hit rate "
                  f"{100 * stats['deadline_hit_rate']:.1f}%, "
                  f"{stats['preemptions']:.0f} preemptions")
+    if shed:
+        line += f", {len(shed)} shed"
+    if rejected:
+        line += f", {len(rejected)} rejected"
     print(line + f", wall {wall:.2f}s ==")
+    if args.meshes:
+        # per-mesh breakdown over the measured pool only (the engines'
+        # own completion rings would also count the warm-up requests)
+        for m in meshes:
+            pool = [r for r in done
+                    if (r.problem.nelx, r.problem.nely) == m]
+            s = service.throughput_stats(pool)
+            print(f"   {m[0]}x{m[1]}: {len(pool)} served, "
+                  f"p50 {s['p50_latency_s']:.2f}s, "
+                  f"CRONet {100 * s['cronet_hit_rate']:.1f}%")
+    service.shutdown()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,55 @@
+"""`repro.serve` — the topology-optimization serving surface.
+
+Public API (everything else in this package is implementation detail):
+
+  * ``TopoGateway`` — the mesh-agnostic front door: submit requests for
+    ANY ``(nelx, nely)`` mesh; they are bucketed into lazily-built
+    per-mesh engines behind one bounded (priority, EDF) admission queue
+    with pluggable overload policies (gateway.py).
+  * ``TopoServingEngine`` — a single-mesh slot-batched streaming engine
+    (topo_service.py); use it directly when the workload is one mesh.
+  * ``TopoRequest`` / ``TopoFuture`` — the unit of work and its
+    completion handle (types.py), shared end to end.
+  * ``OverloadPolicy`` + the typed failures ``QueueFull`` /
+    ``RequestShed`` — backpressure behaviour of a full admission queue.
+  * ``EngineState`` / ``EngineClosed`` — the explicit lifecycle state
+    machine; submitting to a shut-down engine/gateway raises.
+  * ``pool_stats`` — the shared metric definitions behind every
+    ``throughput_stats()`` (engine-level, per-mesh, and aggregate).
+
+Quickstart (mixed-mesh serving)::
+
+    from repro.serve import TopoGateway, TopoRequest
+
+    gw = TopoGateway(cfg, params, u_scale, slots=4,
+                     max_pending=64, overload="shed-latest-deadline")
+    fut = gw.submit(TopoRequest(uid=0, problem=prob_30x10, n_iter=60),
+                    deadline_s=6.0)
+    fut2 = gw.submit(TopoRequest(uid=1, problem=prob_48x16, n_iter=60),
+                     deadline_s=6.0, priority=1)   # jumps every deadline
+    req = fut.result()            # req.density, req.deadline_met, ...
+    stats = gw.throughput_stats(per_mesh=True)
+    gw.shutdown()
+
+The LM-decode serving half (``server``, ``decode``) is deliberately NOT
+re-exported here: import those modules directly.
+"""
+from repro.serve.gateway import TopoGateway
+from repro.serve.topo_service import TopoServingEngine
+from repro.serve.types import (EngineClosed, EngineState, GatewayOverloaded,
+                               OverloadPolicy, QueueFull, RequestShed,
+                               TopoFuture, TopoRequest, pool_stats)
+
+__all__ = [
+    "TopoGateway",
+    "TopoServingEngine",
+    "TopoRequest",
+    "TopoFuture",
+    "OverloadPolicy",
+    "GatewayOverloaded",
+    "QueueFull",
+    "RequestShed",
+    "EngineState",
+    "EngineClosed",
+    "pool_stats",
+]

@@ -1,0 +1,388 @@
+"""Mesh-agnostic serving gateway: one front door over per-mesh engines.
+
+A `TopoServingEngine` serves exactly one discretization — its compiled
+step is shaped by ``(slots, nelx, nely)`` and rejects foreign meshes at
+submit time. The paper's digital-twin fleet is the opposite shape: many
+monitored structures, each with its own mesh, one stream of load events.
+``TopoGateway`` closes that gap:
+
+  * ``submit(req, deadline_s, priority)`` accepts a request for ANY
+    mesh. Requests are bucketed by ``req.mesh == (nelx, nely)`` into
+    per-mesh engines that are instantiated lazily on first sight of a
+    mesh (CRONet's params are mesh-independent — adaptive pooling makes
+    the network fully size-agnostic — so one trained parameter set
+    serves every bucket).
+  * All meshes share ONE admission queue: a
+    ``scheduler.BoundedEDFScheduler`` ranks requests by (priority,
+    effective deadline) across meshes, and a single dispatcher thread
+    forwards the best ready entry to its engine. An engine at its depth
+    limit (``engine_depth`` in-flight) makes its entries "not ready" —
+    the dispatcher skips them without head-of-line blocking other
+    meshes.
+  * The queue is bounded (``max_pending``): when it is full, the
+    ``overload`` policy decides — BLOCK (submit waits for room), REJECT
+    (raise ``QueueFull``), or SHED_LATEST_DEADLINE (evict the
+    least-urgent queued request, failing its future with
+    ``RequestShed``, so the feasible subset keeps its deadlines under
+    sustained overload).
+  * One ``TopoFuture`` follows the request end to end: the gateway
+    creates it at the front door and hands it to the engine
+    (``TopoServingEngine.submit(..., _future=...)``), so callers never
+    observe the routing hop — and the engine's bitwise-invariance
+    contract (each density equal to a standalone single-mesh run) holds
+    verbatim through the gateway.
+
+Lifecycle mirrors the engine's explicit state machine: NEW -> RUNNING
+(first submit) -> CLOSED (``shutdown()``, which drains the queue, then
+closes every engine); ``submit()`` on a closed gateway raises
+``EngineClosed``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+from repro.configs.cronet import CRONetConfig
+from repro.serve.scheduler import BoundedEDFScheduler
+from repro.serve.topo_service import TopoServingEngine
+from repro.serve.types import (EngineClosed, EngineState, OverloadPolicy,
+                               RequestShed, TopoFuture, TopoRequest,
+                               pool_stats)
+
+__all__ = ["TopoGateway"]
+
+Mesh = Tuple[int, int]
+
+
+def _mesh_str(mesh: Mesh) -> str:
+    return f"{mesh[0]}x{mesh[1]}"
+
+
+class TopoGateway:
+    """Mesh-agnostic front door over a lazily-grown pool of per-mesh
+    ``TopoServingEngine``s behind one bounded (priority, EDF) queue.
+
+    Parameters
+    ----------
+    cfg, params, u_scale : the trained CRONet surrogate. ``cfg``'s own
+        ``(nelx, nely)`` is only a template — each engine is built with
+        ``dataclasses.replace(cfg, nelx=..., nely=...)`` for its bucket.
+    slots : batch slots per engine (every mesh bucket gets its own slot
+        group; engines also accept ``**engine_kwargs`` passthrough).
+    max_pending : admission queue capacity; ``None`` = unbounded (the
+        baseline the SHED policy is measured against).
+    overload : ``OverloadPolicy`` or its string value — what a full
+        queue does with the next submit.
+    engine_depth : max in-flight requests per engine before the
+        dispatcher stops forwarding to it (default ``2 * slots``: enough
+        to keep every slot fed plus a re-fill margin, small enough that
+        EDF ordering decisions stay at the gateway where all meshes are
+        visible).
+    block_timeout : BLOCK policy only — seconds a full-queue submit may
+        wait before raising ``QueueFull`` (``None`` = wait forever).
+    engine_factory : override engine construction entirely,
+        ``(nelx, nely) -> TopoServingEngine`` (tests inject slow or
+        pre-built engines through this).
+    """
+
+    def __init__(self, cfg: CRONetConfig, params, u_scale: float, *,
+                 slots: int = 4, max_pending: Optional[int] = 64,
+                 overload: Union[OverloadPolicy, str] = OverloadPolicy.BLOCK,
+                 engine_depth: Optional[int] = None,
+                 block_timeout: Optional[float] = None,
+                 starvation_horizon: float = 60.0,
+                 engine_factory: Optional[
+                     Callable[[int, int], TopoServingEngine]] = None,
+                 **engine_kwargs):
+        self.cfg = cfg
+        self.params = params
+        self.u_scale = u_scale
+        self.slots = slots
+        self.engine_depth = (engine_depth if engine_depth is not None
+                             else 2 * slots)
+        if self.engine_depth < 1:
+            raise ValueError(f"engine_depth must be >= 1, "
+                             f"got {self.engine_depth}")
+        self.block_timeout = block_timeout
+        self._engine_kwargs = dict(engine_kwargs)
+        self._owns_engines = engine_factory is None
+        self._engine_factory = engine_factory or self._default_factory
+        self._queue = BoundedEDFScheduler(max_pending, overload,
+                                          starvation_horizon)
+        self._engines: Dict[Mesh, TopoServingEngine] = {}
+        self._lifecycle = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._running = False
+        self._stopping = False
+        self._closed = False
+        self._inflight = 0           # offered and not yet resolved/shed
+        self._failure: Optional[BaseException] = None
+
+    # ------------------------------------------------------------ engines
+
+    def _default_factory(self, nelx: int, nely: int) -> TopoServingEngine:
+        cfg = dataclasses.replace(self.cfg, nelx=nelx, nely=nely)
+        return TopoServingEngine(cfg, self.params, self.u_scale,
+                                 slots=self.slots, **self._engine_kwargs)
+
+    def _engine_for(self, mesh: Mesh) -> TopoServingEngine:
+        """Lazy per-mesh engine creation (dispatcher thread only, so no
+        lock is needed around construction; the dict write is atomic)."""
+        eng = self._engines.get(mesh)
+        if eng is None:
+            eng = self._engine_factory(*mesh)
+            if (eng.cfg.nelx, eng.cfg.nely) != mesh:
+                raise ValueError(
+                    f"engine_factory built a {eng.cfg.nelx}x{eng.cfg.nely} "
+                    f"engine for mesh {_mesh_str(mesh)}")
+            self._engines[mesh] = eng
+        return eng
+
+    @property
+    def engines(self) -> Dict[Mesh, TopoServingEngine]:
+        """Live view of the per-mesh engine pool (read-only by contract)."""
+        return self._engines
+
+    # ---------------------------------------------------------- lifecycle
+
+    @property
+    def state(self) -> EngineState:
+        if self._failure is not None:
+            return EngineState.FAILED
+        if self._closed:
+            return EngineState.CLOSED
+        with self._lifecycle:
+            if self._running and self._thread is not None \
+                    and self._thread.is_alive():
+                return EngineState.RUNNING
+        return EngineState.NEW
+
+    @property
+    def running(self) -> bool:
+        return self.state is EngineState.RUNNING
+
+    @property
+    def inflight(self) -> int:
+        return self._inflight
+
+    def start(self):
+        """Spawn the dispatcher thread (idempotent; submit() calls it)."""
+        with self._lifecycle:
+            if self._closed:
+                raise EngineClosed("gateway is shut down; build a new one")
+            if self._failure is not None:
+                raise RuntimeError("gateway failed; build a new one") \
+                    from self._failure
+            if self._running and self._thread is not None \
+                    and self._thread.is_alive():
+                return
+            self._running = True
+            self._thread = threading.Thread(target=self._dispatch_loop,
+                                            name="topo-gateway-dispatch",
+                                            daemon=True)
+            self._thread.start()
+
+    def shutdown(self, wait: bool = True):
+        """Terminal: stop accepting submissions (later ``submit()``
+        raises ``EngineClosed``), let the dispatcher drain the admission
+        queue, then close the per-mesh engines. In-flight work
+        completes; BLOCKed submitters are woken with ``EngineClosed``.
+        With ``wait=False`` the drain happens asynchronously on the
+        dispatcher thread, which then closes the engines the gateway
+        built itself — engines from a caller-supplied
+        ``engine_factory`` are only closed by a ``wait=True`` shutdown
+        (the factory's owner may be sharing them)."""
+        with self._lifecycle:
+            if self._closed and self._thread is None:
+                return
+            self._closed = True
+            with self._queue.cond:
+                self._stopping = True
+                self._queue.close()   # wakes + fails BLOCK-policy waiters
+                self._queue.cond.notify_all()
+            thread = self._thread
+        if wait:
+            if thread is not None:
+                thread.join()
+            for eng in self._engines.values():
+                eng.shutdown(wait=True)
+            with self._lifecycle:
+                self._running = False
+                self._thread = None
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every accepted request has resolved (completed,
+        shed, or failed)."""
+        with self._queue.cond:
+            return self._queue.cond.wait_for(
+                lambda: self._inflight == 0 or self._failure is not None,
+                timeout)
+
+    # ---------------------------------------------------------- streaming
+
+    def submit(self, req: TopoRequest, deadline_s: Optional[float] = None,
+               priority: int = 0) -> TopoFuture:
+        """Thread-safe mesh-agnostic admission: stamp the request, rank
+        it (priority, EDF) in the shared bounded queue, and return its
+        end-to-end future. Applies the overload policy when the queue is
+        full; raises ``EngineClosed`` after ``shutdown()``."""
+        if self._closed:
+            raise EngineClosed("gateway is shut down")
+        try:
+            nelx, nely = req.mesh
+            if int(nelx) < 1 or int(nely) < 1:
+                raise ValueError
+        except (AttributeError, TypeError, ValueError):
+            # validate at the front door, in the caller's thread — a
+            # malformed problem must fail ITS submit, not reach the
+            # dispatcher and take every tenant's requests down with it
+            raise ValueError(
+                f"request {req.uid} problem must expose positive integer "
+                f"nelx/nely (got {type(req.problem).__name__})") from None
+        self.start()   # no-op while the dispatcher is alive
+        if deadline_s is not None:
+            req.deadline_s = deadline_s
+        if priority:
+            req.priority = priority
+        now = time.time()
+        req.submit_t = now
+        req.deadline = (now + req.deadline_s
+                        if req.deadline_s is not None else None)
+        fut = TopoFuture(req)
+        fut.add_done_callback(self._on_request_done)
+        with self._queue.cond:
+            self._inflight += 1
+        try:
+            entry, shed = self._queue.offer(
+                (req, fut), req.deadline, now, priority=req.priority,
+                timeout=self.block_timeout)
+        except RuntimeError as exc:
+            with self._queue.cond:
+                self._inflight -= 1
+                self._queue.cond.notify_all()
+            if self._closed and not isinstance(exc, EngineClosed):
+                raise EngineClosed("gateway shut down during submit") \
+                    from exc
+            raise
+        if shed is not None:
+            if entry is None:
+                # the incoming request itself ranked last: its future is
+                # returned already failed (fail-fast, but uniformly
+                # observable via result()/exception())
+                fut._resolve(RequestShed(
+                    f"request {req.uid} shed at admission: queue full and "
+                    f"its deadline was the latest"))
+            else:
+                sreq, sfut = shed.payload
+                sfut._resolve(RequestShed(
+                    f"request {sreq.uid} shed by overload policy: queue "
+                    f"full and its deadline was the latest"))
+        return fut
+
+    def _on_request_done(self, fut: TopoFuture):
+        with self._queue.cond:
+            self._inflight -= 1
+            self._queue.cond.notify_all()   # wake drain() + dispatcher
+
+    # --------------------------------------------------------- dispatcher
+
+    def _ready(self, payload) -> bool:
+        """May this queued request be forwarded right now? Yes if its
+        mesh has no engine yet (first sight instantiates one), its
+        engine has in-flight depth to spare, or its engine is failed or
+        closed — forwarding to a dead engine raises at eng.submit and
+        fails THAT future, which is the only way those entries ever
+        resolve (gating them here would strand them in the queue and
+        hang drain()/shutdown()). Plain attribute reads only — called
+        under the queue lock, so no engine lock may be taken here."""
+        eng = self._engines.get(payload[0].mesh)
+        if eng is None:
+            return True
+        return (eng._failure is not None or eng._closed
+                or eng.inflight < self.engine_depth)
+
+    def _dispatch_loop(self):
+        """Single consumer of the shared queue: pop the highest-ranked
+        ready entry, route it to (or lazily build) its mesh engine, hand
+        over the front-door future. Engine backpressure is the ready
+        predicate; queue backpressure is the overload policy in
+        submit()."""
+        q = self._queue
+        try:
+            while True:
+                with q.cond:
+                    entry = q.pop_ready(self._ready)
+                    if entry is None:
+                        if self._stopping and len(q._heap) == 0:
+                            break
+                        # woken by submit(), request completion, or
+                        # shutdown; the timeout only bounds engine-depth
+                        # polling when an engine is saturated
+                        q.cond.wait(timeout=0.05)
+                        continue
+                req, fut = entry.payload
+                try:
+                    eng = self._engine_for(req.mesh)
+                    eng.submit(req, priority=req.priority, _future=fut)
+                except BaseException as exc:
+                    # a single bad request (or a failed engine) must not
+                    # take the gateway down: fail its future and move on
+                    fut._resolve(exc)
+            # normal exit (shutdown drained the queue): an async
+            # shutdown(wait=False) has nobody left to close the engine
+            # pool, so the dispatcher does it for the engines the
+            # gateway built itself (a caller-supplied factory owns its
+            # engines' lifecycle; shutdown(wait=True) closes those too)
+            if self._closed and self._owns_engines:
+                for eng in self._engines.values():
+                    eng.shutdown(wait=False)
+        except BaseException as exc:   # dispatcher died: fail every waiter
+            with q.cond:
+                self._failure = exc
+                self._stopping = True
+                q.close()   # BLOCKed submitters must error, not re-queue
+                while True:
+                    e = q.pop()
+                    if e is None:
+                        break
+                    e.payload[1]._resolve(exc)
+                q.cond.notify_all()
+            raise
+
+    # -------------------------------------------------------------- stats
+
+    def throughput_stats(self, requests: Optional[List[TopoRequest]] = None,
+                         wall_s: Optional[float] = None,
+                         per_mesh: bool = False) -> Dict:
+        """Aggregate serving stats across every per-mesh engine (or over
+        an explicit request pool), plus gateway-level counters: ``shed``
+        and ``rejected`` admissions, ``pending`` queue depth, ``engines``
+        in the pool. With ``per_mesh=True`` the dict gains a
+        ``"per_mesh"`` sub-dict keyed by ``"<nelx>x<nely>"`` with each
+        engine's own ``throughput_stats()``."""
+        engines = dict(self._engines)
+        if requests is None:
+            pool: List[TopoRequest] = []
+            for eng in engines.values():
+                with eng._sched.cond:
+                    pool.extend(eng._completed)
+        else:
+            pool = requests
+        stats: Dict = pool_stats(pool, wall_s)
+        stats.update({
+            "preemptions": float(sum(e.preemptions
+                                     for e in engines.values())),
+            "total_steps": float(sum(e.total_steps
+                                     for e in engines.values())),
+            "shed": float(self._queue.shed_count),
+            "rejected": float(self._queue.rejected),
+            "pending": float(len(self._queue)),
+            "engines": float(len(engines)),
+        })
+        if per_mesh:
+            stats["per_mesh"] = {
+                _mesh_str(mesh): eng.throughput_stats(wall_s=wall_s)
+                for mesh, eng in engines.items()}
+        return stats

@@ -4,17 +4,32 @@ The paper's digital-twin workload is a continuous arrival process: each
 monitoring event ships a load case with a freshness deadline ("the
 updated design must reflect this load within D seconds"), not a batch to
 drain. This module provides the policy half of that serving story —
-serve/topo_service.py owns the slots, this owns the queue:
+serve/topo_service.py owns the slots, serve/gateway.py owns the routing,
+this owns the queues:
 
   * ``EDFScheduler`` — a thread-safe earliest-deadline-first admission
-    queue. Entries are ordered by (effective deadline, admission
-    sequence number): the sequence number makes tie-breaking
-    deterministic (equal deadlines pop in submit order), which the
+    queue. Entries are ordered by (priority, effective deadline,
+    admission sequence number): a higher ``priority`` outranks any
+    deadline (the gateway's ``submit(..., priority=...)`` lane for
+    must-run work), and the sequence number makes tie-breaking
+    deterministic (equal ranks pop in submit order), which the
     bitwise-invariance test suite relies on. A deadline-less entry is
     given an *effective* deadline of ``submit + starvation_horizon``, so
     an unbounded stream of deadline-carrying arrivals can delay it by at
     most the horizon — EDF without the horizon starves best-effort work
     forever.
+
+  * ``BoundedEDFScheduler`` — the gateway-level backpressure half: the
+    same queue with a capacity bound and a pluggable
+    ``types.OverloadPolicy`` deciding what ``offer()`` does when full —
+    BLOCK (wait for the dispatcher to make room), REJECT (raise
+    ``QueueFull``), or SHED_LATEST_DEADLINE (evict the lowest-ranked
+    queued entry — latest effective deadline after priority — so the
+    urgent traffic keeps its deadlines; under sustained overload this
+    converts "everything finishes late" into "the feasible subset
+    finishes on time"). ``pop_ready`` pops the best entry that a
+    predicate accepts, so the dispatcher can skip meshes whose engine is
+    at depth without head-of-line blocking the others.
 
   * ``preempt_victim`` — the slack-based preemption decision, kept a
     pure function of (candidate, slot views, clock, step-time estimate)
@@ -38,7 +53,9 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import threading
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
+
+from repro.serve.types import OverloadPolicy, QueueFull
 
 INF = float("inf")
 
@@ -95,20 +112,27 @@ def preempt_victim(deadline: float, iters_needed: int,
 
 @dataclasses.dataclass(order=True)
 class _Entry:
+    neg_priority: int        # -priority: higher priority pops first
     eff_deadline: float
     seq: int
     payload: Any = dataclasses.field(compare=False)
     deadline: float = dataclasses.field(compare=False, default=INF)
 
+    @property
+    def priority(self) -> int:
+        return -self.neg_priority
+
 
 class EDFScheduler:
     """Thread-safe earliest-deadline-first queue with deterministic ties.
 
+    Ordering is (priority desc, effective deadline asc, sequence asc).
     ``starvation_horizon`` bounds how long deadline-less work can be
     bypassed: its effective deadline is ``now + horizon`` at push time,
-    after which it outranks any arrival whose real deadline lies further
-    out. Re-pushing a parked entry via ``push(..., seq=entry.seq,
-    eff_deadline=entry.eff_deadline)`` preserves its original rank.
+    after which it outranks any same-priority arrival whose real deadline
+    lies further out. Re-pushing a parked entry via ``push(...,
+    seq=entry.seq, eff_deadline=entry.eff_deadline,
+    priority=entry.priority)`` preserves its original rank.
     """
 
     def __init__(self, starvation_horizon: float = 60.0):
@@ -125,7 +149,8 @@ class EDFScheduler:
 
     def push(self, payload: Any, deadline: Optional[float], now: float,
              seq: Optional[int] = None,
-             eff_deadline: Optional[float] = None) -> _Entry:
+             eff_deadline: Optional[float] = None,
+             priority: int = 0) -> _Entry:
         """Enqueue; returns the entry (its seq identifies re-admissions)."""
         with self.cond:
             if seq is None:
@@ -135,7 +160,8 @@ class EDFScheduler:
             if eff_deadline is None:
                 eff_deadline = (deadline if deadline is not None
                                 else now + self.starvation_horizon)
-            e = _Entry(eff_deadline=eff_deadline, seq=seq, payload=payload,
+            e = _Entry(neg_priority=-priority, eff_deadline=eff_deadline,
+                       seq=seq, payload=payload,
                        deadline=INF if deadline is None else deadline)
             heapq.heappush(self._heap, e)
             self.cond.notify_all()
@@ -150,4 +176,125 @@ class EDFScheduler:
             if not self._heap:
                 return None
             self.popped += 1
-            return heapq.heappop(self._heap)
+            e = heapq.heappop(self._heap)
+            self.cond.notify_all()   # wake BLOCK-policy offer() waiters
+            return e
+
+
+class BoundedEDFScheduler(EDFScheduler):
+    """EDF queue with a capacity bound and an overload policy — the
+    gateway's admission buffer. ``offer()`` is the policy-aware front
+    door; the inherited ``push`` stays unbounded for internal re-pushes.
+
+    ``capacity=None`` means unbounded (the baseline the SHED policy is
+    benchmarked against). ``close()`` permanently wakes and fails
+    BLOCK-policy waiters so a gateway shutdown cannot strand submitters.
+    """
+
+    def __init__(self, capacity: Optional[int] = None,
+                 policy: Union[OverloadPolicy, str] = OverloadPolicy.BLOCK,
+                 starvation_horizon: float = 60.0):
+        super().__init__(starvation_horizon)
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1 or None, got {capacity}")
+        self.capacity = capacity
+        self.policy = OverloadPolicy.coerce(policy)
+        self.shed_count = 0       # lifetime SHED evictions
+        self.rejected = 0         # lifetime REJECT failures
+        self._closed = False
+
+    def close(self):
+        with self.cond:
+            self._closed = True
+            self.cond.notify_all()
+
+    def _worst(self) -> Optional[_Entry]:
+        """The lowest-ranked queued entry (last to pop): max
+        (neg_priority, eff_deadline, seq) — i.e. the latest effective
+        deadline within the lowest priority class."""
+        with self.cond:
+            return max(self._heap) if self._heap else None
+
+    def offer(self, payload: Any, deadline: Optional[float], now: float,
+              priority: int = 0,
+              timeout: Optional[float] = None
+              ) -> Tuple[Optional[_Entry], Optional[_Entry]]:
+        """Policy-aware enqueue. Returns ``(entry, shed)``:
+
+          * ``(entry, None)`` — admitted (possibly after BLOCKing).
+          * ``(entry, shed)`` — admitted by evicting ``shed`` (SHED
+            policy); the caller owns failing ``shed.payload``'s future.
+          * ``(None, entry)`` — the incoming request itself was shed
+            (it ranked below everything already queued).
+
+        REJECT raises ``QueueFull``; BLOCK raises ``QueueFull`` only if
+        ``timeout`` expires, and ``RuntimeError`` if closed while
+        waiting.
+        """
+        with self.cond:
+            if self._closed:
+                raise RuntimeError("admission queue is closed")
+            if self.capacity is None or len(self._heap) < self.capacity:
+                return self.push(payload, deadline, now,
+                                 priority=priority), None
+            if self.policy is OverloadPolicy.REJECT:
+                self.rejected += 1
+                raise QueueFull(
+                    f"admission queue full ({self.capacity} pending)")
+            if self.policy is OverloadPolicy.SHED_LATEST_DEADLINE:
+                worst = self._worst()
+                eff = (deadline if deadline is not None
+                       else now + self.starvation_horizon)
+                cand = (-priority, eff)
+                if (worst is None
+                        or cand >= (worst.neg_priority, worst.eff_deadline)):
+                    # the incoming request is the least urgent: shed it
+                    # without ever queueing it (seq order breaks the tie
+                    # toward keeping what already waited)
+                    self.shed_count += 1
+                    e = _Entry(neg_priority=-priority, eff_deadline=eff,
+                               seq=-1, payload=payload,
+                               deadline=INF if deadline is None
+                               else deadline)
+                    return None, e
+                self._heap.remove(worst)
+                heapq.heapify(self._heap)
+                self.shed_count += 1
+                return self.push(payload, deadline, now,
+                                 priority=priority), worst
+            # BLOCK: wait for a pop (or close/timeout) to make room
+            ok = self.cond.wait_for(
+                lambda: self._closed or len(self._heap) < self.capacity,
+                timeout)
+            if self._closed:
+                raise RuntimeError("admission queue closed while blocked")
+            if not ok:
+                raise QueueFull(
+                    f"admission queue still full ({self.capacity} "
+                    f"pending) after {timeout}s")
+            return self.push(payload, deadline, now,
+                             priority=priority), None
+
+    def pop_ready(self, ready: Callable[[Any], bool]) -> Optional[_Entry]:
+        """Pop the highest-ranked entry whose payload satisfies
+        ``ready`` (e.g. "its mesh engine has queue room"), skipping
+        blocked ones so one saturated mesh cannot head-of-line block the
+        rest. Skipped entries are popped into a side list and re-pushed:
+        O(k log n) for k not-ready entries ahead of the hit — no full
+        sort or re-heapify, which matters for the unbounded
+        (capacity=None) configuration under a deep backlog."""
+        with self.cond:
+            skipped: List[_Entry] = []
+            found = None
+            while self._heap:
+                e = heapq.heappop(self._heap)
+                if ready(e.payload):
+                    found = e
+                    break
+                skipped.append(e)
+            for e in skipped:
+                heapq.heappush(self._heap, e)
+            if found is not None:
+                self.popped += 1
+                self.cond.notify_all()
+            return found

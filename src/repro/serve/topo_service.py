@@ -12,17 +12,26 @@ single compiled step — but admission is live:
     the tick loops are running; the new request is admitted at the next
     tick boundary with NO recompilation (the compiled step is shaped by
     (batch width, mesh), neither of which admission changes).
-  * Admission order is earliest-deadline-first with deterministic
-    tie-breaking and a starvation horizon for deadline-less requests
-    (serve/scheduler.py).
+  * Admission order is (priority, earliest-deadline-first) with
+    deterministic tie-breaking and a starvation horizon for
+    deadline-less requests (serve/scheduler.py).
   * A slot whose occupant has slack can be preempted for a request about
     to miss its deadline: the occupant's per-lane optimization state is
     parked (lane gather to host, fea/hybrid.park_slot), the lane is
     re-seeded, and the parked request re-enters the queue with its
     original rank, resuming bitwise-exactly on re-admission
     (fea/hybrid.restore_slot).
+  * Lifecycle is an explicit state machine (serve/types.EngineState):
+    ``stop()`` is the restartable pause the ``run()`` drain shim cycles
+    through; ``shutdown()`` is terminal — ``submit()`` afterwards raises
+    ``EngineClosed`` instead of hanging or racing the tick loops.
   * ``run(requests)`` remains as a thin submit+drain compatibility shim
     over the streaming core.
+
+One engine serves ONE mesh: requests whose ``(nelx, nely)`` differs from
+the engine's are rejected at submit time. serve/gateway.py is the
+mesh-agnostic front door — it buckets mixed-mesh traffic into a pool of
+these engines behind one bounded admission queue.
 
 Scaling axes are unchanged from the drain-mode engine: slots per shard
 (one compiled step serves the group) and shards (slot groups pinned to
@@ -40,6 +49,7 @@ approximation.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 import time
@@ -52,54 +62,11 @@ import numpy as np
 from repro.configs.cronet import CRONetConfig
 from repro.fea import fea2d, hybrid
 from repro.serve.scheduler import INF, EDFScheduler, SlotView, preempt_victim
+from repro.serve.types import (EngineClosed, EngineState, TopoFuture,
+                               TopoRequest, pool_stats)
 
-
-@dataclasses.dataclass
-class TopoRequest:
-    uid: int
-    problem: fea2d.Problem
-    n_iter: int = 60
-    deadline_s: Optional[float] = None      # freshness deadline, relative to submit
-    # filled on submit
-    submit_t: float = 0.0
-    deadline: Optional[float] = None        # absolute wall-clock deadline
-    # filled on completion
-    done: bool = False
-    density: Optional[np.ndarray] = None    # (nely, nelx) final design
-    compliance: float = 0.0                 # last-iteration compliance
-    cronet_iters: int = 0
-    fea_iters: int = 0
-    latency_s: float = 0.0                  # first slot admission -> completion
-    queue_wait_s: float = 0.0               # submit -> first slot admission
-    deadline_met: Optional[bool] = None     # None when no deadline was set
-    preemptions: int = 0                    # times this request was parked
-
-
-class TopoFuture:
-    """Completion handle for a submitted request (threading.Event based)."""
-
-    def __init__(self, req: TopoRequest):
-        self.request = req
-        self._ev = threading.Event()
-        self._exc: Optional[BaseException] = None
-
-    def done(self) -> bool:
-        return self._ev.is_set()
-
-    def result(self, timeout: Optional[float] = None) -> TopoRequest:
-        """Block until the request completes; returns it with the density
-        filled. Raises TimeoutError on timeout, or the engine's failure
-        if serving aborted."""
-        if not self._ev.wait(timeout):
-            raise TimeoutError(f"request {self.request.uid} not done "
-                               f"after {timeout}s")
-        if self._exc is not None:
-            raise self._exc
-        return self.request
-
-    def _resolve(self, exc: Optional[BaseException] = None):
-        self._exc = exc
-        self._ev.set()
+__all__ = ["TopoRequest", "TopoFuture", "TopoServingEngine", "auto_shards",
+           "shard_devices"]
 
 
 @dataclasses.dataclass
@@ -251,16 +218,23 @@ class TopoServingEngine:
     streaming admission.
 
     Streaming API: ``submit(req) -> TopoFuture`` (starts the tick loops
-    on first use), ``drain()`` to wait for quiescence, ``shutdown()`` to
-    stop the worker threads (the engine restarts cleanly on the next
-    submit). ``run(requests)`` is a compatibility shim: submit all, wait
-    for all, shut down if the engine was not already running.
+    on first use), ``drain()`` to wait for quiescence, ``stop()`` to
+    pause the worker threads (the engine restarts cleanly on the next
+    submit), ``shutdown()`` to close the engine for good (``submit``
+    afterwards raises ``EngineClosed``). ``run(requests)`` is a
+    compatibility shim: submit all, wait for all, stop the loops if this
+    call started them.
 
-    Scheduling: EDF admission with a `starvation_horizon` bound for
-    deadline-less requests; `preempt=True` enables slack-safe slot
-    preemption (see serve/scheduler.py). `tick_time_s` overrides the
+    Scheduling: (priority, EDF) admission with a `starvation_horizon`
+    bound for deadline-less requests; `preempt=True` enables slack-safe
+    slot preemption (see serve/scheduler.py). `tick_time_s` overrides the
     measured per-step time estimate the preemption test uses
     (deterministic tests set it; production leaves the EMA).
+
+    completed_limit bounds the completed-request history ring
+    (`throughput_stats` reports over it): a long-lived engine keeps the
+    most recent `completed_limit` results instead of growing without
+    bound.
 
     backend: "oracle" (core/cronet.py forward) or "megakernel"
     (kernels/cronet_pipeline.py, batched over the Pallas grid, interpret
@@ -275,7 +249,8 @@ class TopoServingEngine:
                  rmin: float = 1.5, backend: str = "oracle",
                  shards: Optional[int] = None, preempt: bool = True,
                  starvation_horizon: float = 60.0,
-                 tick_time_s: Optional[float] = None):
+                 tick_time_s: Optional[float] = None,
+                 completed_limit: int = 1024):
         self._devices = shard_devices(slots, shards)
         self.cfg = cfg
         self.slots = slots
@@ -295,9 +270,12 @@ class TopoServingEngine:
         self._threads: List[threading.Thread] = []
         self._running = False
         self._stopping = False
+        self._closed = False
+        self._ever_started = False
         self._inflight = 0
         self._failure: Optional[BaseException] = None
-        self._completed: List[TopoRequest] = []
+        self._completed: collections.deque = collections.deque(
+            maxlen=completed_limit)
         self._lifecycle = threading.Lock()
         self._sec_per_step: Optional[float] = None
         self.preemptions = 0        # engine lifetime eviction count
@@ -318,20 +296,42 @@ class TopoServingEngine:
     def running(self) -> bool:
         return self._running
 
+    @property
+    def inflight(self) -> int:
+        """Requests accepted but not yet resolved (queued + in slots) —
+        the gateway's per-engine depth signal."""
+        return self._inflight
+
+    @property
+    def state(self) -> EngineState:
+        if self._failure is not None:
+            return EngineState.FAILED
+        if self._closed:
+            return EngineState.CLOSED
+        with self._lifecycle:
+            if self._running and any(t.is_alive() for t in self._threads):
+                return EngineState.RUNNING
+        return EngineState.STOPPED if self._ever_started else EngineState.NEW
+
     def start(self):
         """Spawn one tick-loop thread per shard (idempotent)."""
         with self._lifecycle:
+            if self._closed:
+                raise EngineClosed(
+                    f"engine ({self.cfg.nelx}x{self.cfg.nely}) is shut "
+                    f"down; build a new one")
             if self._running:
                 if any(t.is_alive() for t in self._threads):
                     return
-                # a shutdown(wait=False) left _running set after the
-                # workers drained and exited: recover and restart
+                # a stop(wait=False) left _running set after the workers
+                # drained and exited: recover and restart
                 self._threads = []
             if self._failure is not None:
                 raise RuntimeError("engine failed; build a new one") \
                     from self._failure
             self._stopping = False
             self._running = True
+            self._ever_started = True
             self._threads = [
                 threading.Thread(target=self._shard_loop, args=(sh,),
                                  name=f"topo-shard-{i}", daemon=True)
@@ -339,9 +339,11 @@ class TopoServingEngine:
             for t in self._threads:
                 t.start()
 
-    def shutdown(self, wait: bool = True):
-        """Stop accepting submissions; workers finish the queue and all
-        occupied slots, then exit. With wait=True, joins the threads."""
+    def stop(self, wait: bool = True):
+        """Pause serving: workers finish the queue and all occupied
+        slots, then exit. With wait=True, joins the threads. The engine
+        RESTARTS on the next submit()/start() — use ``shutdown()`` to
+        close it for good."""
         with self._lifecycle:
             if not self._running and not self._threads:
                 return
@@ -356,6 +358,13 @@ class TopoServingEngine:
                 self._running = False
                 self._threads = []
 
+    def shutdown(self, wait: bool = True):
+        """Terminal stop: drain like ``stop()`` and transition to
+        CLOSED — every later submit()/start() raises ``EngineClosed``
+        (in-flight work still completes)."""
+        self._closed = True
+        self.stop(wait)
+
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until every submitted request has resolved."""
         with self._sched.cond:
@@ -366,11 +375,17 @@ class TopoServingEngine:
     # --------------------------------------------------------- streaming
 
     def submit(self, req: TopoRequest,
-               deadline_s: Optional[float] = None) -> TopoFuture:
-        """Thread-safe live admission: enqueue `req` (EDF by deadline) and
-        return a completion future. Starts the tick loops if needed; the
-        request is admitted at a tick boundary without recompiling the
-        batched step."""
+               deadline_s: Optional[float] = None, priority: int = 0,
+               _future: Optional[TopoFuture] = None) -> TopoFuture:
+        """Thread-safe live admission: enqueue `req` ((priority, EDF)
+        rank) and return a completion future. Starts the tick loops if
+        needed; the request is admitted at a tick boundary without
+        recompiling the batched step.
+
+        ``_future`` is the gateway hook: a pre-stamped request arriving
+        with its front-door future keeps that future (and its original
+        submit_t/deadline), so callers see one handle end to end.
+        """
         p = req.problem
         if (p.nelx, p.nely) != (self.cfg.nelx, self.cfg.nely):
             raise ValueError(
@@ -378,20 +393,32 @@ class TopoServingEngine:
                 f"match engine mesh {self.cfg.nelx}x{self.cfg.nely}")
         if deadline_s is not None:
             req.deadline_s = deadline_s
-        self.start()   # no-op while workers are alive
-        fut = TopoFuture(req)
+        if priority:
+            req.priority = priority
+        self.start()   # no-op while workers are alive; EngineClosed if shut
         now = time.time()
-        req.submit_t = now
-        req.deadline = (now + req.deadline_s
-                        if req.deadline_s is not None else None)
+        if _future is None:
+            fut = TopoFuture(req)
+            req.submit_t = now
+            req.deadline = (now + req.deadline_s
+                            if req.deadline_s is not None else None)
+        else:
+            fut = _future   # gateway already stamped submit_t/deadline
         adm = _Admission(req, fut)
         with self._sched.cond:
+            if self._closed:
+                raise EngineClosed("engine is shut down")
             if self._stopping:
-                raise RuntimeError("engine is shut down")
+                # a restartable stop() is still draining: this is a
+                # transient pause, NOT the terminal CLOSED state — the
+                # engine accepts again once the drain finishes
+                raise RuntimeError(
+                    "engine is stopping; retry once stop() completes")
             if self._failure is not None:
                 raise RuntimeError("engine failed") from self._failure
             self._inflight += 1
-            entry = self._sched.push(adm, req.deadline, now)
+            entry = self._sched.push(adm, req.deadline, now,
+                                     priority=req.priority)
             adm.seq, adm.eff_deadline = entry.seq, entry.eff_deadline
         return fut
 
@@ -508,7 +535,8 @@ class TopoServingEngine:
                     self.preemptions += 1
                     sched.push(parked, parked.req.deadline, now,
                                seq=parked.seq,
-                               eff_deadline=parked.eff_deadline)
+                               eff_deadline=parked.eff_deadline,
+                               priority=parked.req.priority)
                     self._admit_lane(shard, victim, preempt_entry.payload,
                                      now)
                     dirty = True
@@ -570,7 +598,7 @@ class TopoServingEngine:
         for f in futs:
             f.result()
         if not was_running:
-            self.shutdown()
+            self.stop()
         self.last_run_steps = self.total_steps - steps_before
         return requests
 
@@ -578,31 +606,18 @@ class TopoServingEngine:
 
     def throughput_stats(self, requests: Optional[List[TopoRequest]] = None,
                          wall_s: Optional[float] = None) -> Dict[str, float]:
-        """Serving stats over `requests` (default: everything completed on
-        this engine). Latency percentiles are end-to-end (submit ->
-        completion); deadline_hit_rate covers deadline-carrying requests
-        only (1.0 when there were none)."""
-        pool = self._completed if requests is None else requests
-        done = [r for r in pool if r.done]
-        iters = sum(r.cronet_iters + r.fea_iters for r in done)
-        e2e = [r.queue_wait_s + r.latency_s for r in done]
-        # default wall clock: the pool's makespan (submit -> last
-        # completion); summing concurrent latencies would understate
-        # throughput ~slots-fold
-        total = wall_s if wall_s is not None else max(e2e, default=0.0)
-        with_dl = [r for r in done if r.deadline is not None]
-        hits = sum(1 for r in with_dl if r.deadline_met)
-        return {
-            "requests": float(len(done)),
-            "problems_per_s": len(done) / max(total, 1e-9),
-            "mean_latency_s": float(np.mean([r.latency_s for r in done])
-                                    if done else 0.0),
-            "p50_latency_s": float(np.percentile(e2e, 50) if e2e else 0.0),
-            "p99_latency_s": float(np.percentile(e2e, 99) if e2e else 0.0),
-            "deadline_hit_rate": (hits / len(with_dl)) if with_dl else 1.0,
+        """Serving stats over `requests` (default: the completed-request
+        ring, i.e. the most recent `completed_limit` completions). See
+        types.pool_stats for the shared metric definitions."""
+        if requests is None:
+            with self._sched.cond:
+                pool = list(self._completed)
+        else:
+            pool = requests
+        stats = pool_stats(pool, wall_s)
+        stats.update({
             "preemptions": float(self.preemptions),
-            "cronet_hit_rate": (sum(r.cronet_iters for r in done)
-                                / max(iters, 1)),
             "batched_steps": float(self.last_run_steps),
             "total_steps": float(self.total_steps),
-        }
+        })
+        return stats

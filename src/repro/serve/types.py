@@ -1,0 +1,198 @@
+"""Shared request/future/lifecycle/stats types for the topo serving stack.
+
+This module is the dependency floor of the ``repro.serve`` package: the
+scheduler (policy), the per-mesh engine (mechanism), and the gateway
+(routing + backpressure) all build on these types, so they live below
+all three and import nothing from them.
+
+  * ``TopoRequest`` / ``TopoFuture`` — the unit of work and its
+    completion handle, shared verbatim between the gateway front door
+    and the per-mesh engines (one future per request, end to end).
+  * ``OverloadPolicy`` — what a bounded admission queue does when full:
+    ``BLOCK`` (submit waits), ``REJECT`` (fail fast with ``QueueFull``),
+    ``SHED_LATEST_DEADLINE`` (evict the least-urgent queued request so
+    the rest keep their deadlines; the evictee's future fails with
+    ``RequestShed``).
+  * ``EngineState`` + ``EngineClosed`` — the explicit lifecycle state
+    machine: submitting to a CLOSED engine/gateway raises instead of
+    hanging or racing the tick loops.
+  * ``pool_stats`` — the pure request-pool half of ``throughput_stats``,
+    so the engine (one pool) and the gateway (per-mesh pools + an
+    aggregate) report identical metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import threading
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+
+# --------------------------------------------------------------- lifecycle
+
+
+class EngineState(enum.Enum):
+    """Explicit lifecycle for engines and the gateway.
+
+    NEW -> RUNNING <-> STOPPED -> CLOSED, with FAILED terminal from any
+    state. ``stop()`` is the restartable pause (the ``run()`` drain shim
+    uses it between batches); ``shutdown()`` is terminal — submitting
+    afterwards raises ``EngineClosed``.
+    """
+    NEW = "new"
+    RUNNING = "running"
+    STOPPED = "stopped"
+    CLOSED = "closed"
+    FAILED = "failed"
+
+
+class EngineClosed(RuntimeError):
+    """submit() on a shut-down (or shutting-down) engine/gateway."""
+
+
+class GatewayOverloaded(RuntimeError):
+    """Base of the typed backpressure failures."""
+
+
+class QueueFull(GatewayOverloaded):
+    """REJECT policy: the bounded admission queue is full."""
+
+
+class RequestShed(GatewayOverloaded):
+    """SHED_LATEST_DEADLINE policy: this request was evicted from the
+    bounded queue in favour of more-urgent work; its future raises this."""
+
+
+class OverloadPolicy(enum.Enum):
+    """What a full bounded admission queue does with the next submit."""
+    BLOCK = "block"
+    REJECT = "reject"
+    SHED_LATEST_DEADLINE = "shed-latest-deadline"
+
+    @classmethod
+    def coerce(cls, v: Union["OverloadPolicy", str]) -> "OverloadPolicy":
+        if isinstance(v, cls):
+            return v
+        try:
+            return cls(v)
+        except ValueError:
+            raise ValueError(
+                f"unknown overload policy {v!r}; have "
+                f"{[p.value for p in cls]}") from None
+
+
+# ----------------------------------------------------------- request/future
+
+
+@dataclasses.dataclass
+class TopoRequest:
+    uid: int
+    problem: "object"                       # fea2d.Problem (kept untyped to
+    n_iter: int = 60                        # keep this module jax-free)
+    deadline_s: Optional[float] = None      # freshness deadline, rel. submit
+    priority: int = 0                       # higher = more urgent; outranks
+    # filled on submit                      # deadline ordering entirely
+    submit_t: float = 0.0
+    deadline: Optional[float] = None        # absolute wall-clock deadline
+    # filled on completion
+    done: bool = False
+    density: Optional[np.ndarray] = None    # (nely, nelx) final design
+    compliance: float = 0.0                 # last-iteration compliance
+    cronet_iters: int = 0
+    fea_iters: int = 0
+    latency_s: float = 0.0                  # first slot admission -> completion
+    queue_wait_s: float = 0.0               # submit -> first slot admission
+    deadline_met: Optional[bool] = None     # None when no deadline was set
+    preemptions: int = 0                    # times this request was parked
+
+    @property
+    def mesh(self) -> tuple:
+        """(nelx, nely) routing key — what the gateway buckets on."""
+        return (self.problem.nelx, self.problem.nely)
+
+
+class TopoFuture:
+    """Completion handle for a submitted request (threading.Event based).
+
+    One future follows the request end to end: the gateway creates it at
+    the front door and the per-mesh engine resolves it, so callers never
+    see the routing hop. ``add_done_callback`` runs callbacks on the
+    resolving thread (engine tick loop / gateway dispatcher) — keep them
+    cheap and non-blocking.
+    """
+
+    def __init__(self, req: TopoRequest):
+        self.request = req
+        self._ev = threading.Event()
+        self._exc: Optional[BaseException] = None
+        self._callbacks: List[Callable[["TopoFuture"], None]] = []
+        self._cb_lock = threading.Lock()
+
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    def exception(self) -> Optional[BaseException]:
+        """The failure this future resolved with, if any (None while
+        pending or on success)."""
+        return self._exc
+
+    def result(self, timeout: Optional[float] = None) -> TopoRequest:
+        """Block until the request completes; returns it with the density
+        filled. Raises TimeoutError on timeout, or the engine's failure
+        (e.g. ``RequestShed``) if serving aborted."""
+        if not self._ev.wait(timeout):
+            raise TimeoutError(f"request {self.request.uid} not done "
+                               f"after {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return self.request
+
+    def add_done_callback(self, fn: Callable[["TopoFuture"], None]):
+        """Run ``fn(self)`` when the future resolves (immediately if it
+        already has)."""
+        with self._cb_lock:
+            if not self._ev.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+    def _resolve(self, exc: Optional[BaseException] = None):
+        with self._cb_lock:
+            self._exc = exc
+            self._ev.set()
+            callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            fn(self)
+
+
+# ------------------------------------------------------------------- stats
+
+
+def pool_stats(pool: Sequence[TopoRequest],
+               wall_s: Optional[float] = None) -> Dict[str, float]:
+    """Serving stats over a pool of requests — the pure half shared by
+    engine and gateway ``throughput_stats``. Latency percentiles are
+    end-to-end (submit -> completion); ``deadline_hit_rate`` covers
+    deadline-carrying completed requests only (1.0 when there were
+    none)."""
+    done = [r for r in pool if r.done]
+    iters = sum(r.cronet_iters + r.fea_iters for r in done)
+    e2e = [r.queue_wait_s + r.latency_s for r in done]
+    # default wall clock: the pool's makespan (submit -> last completion);
+    # summing concurrent latencies would understate throughput ~slots-fold
+    total = wall_s if wall_s is not None else max(e2e, default=0.0)
+    with_dl = [r for r in done if r.deadline is not None]
+    hits = sum(1 for r in with_dl if r.deadline_met)
+    return {
+        "requests": float(len(done)),
+        "problems_per_s": len(done) / max(total, 1e-9),
+        "mean_latency_s": float(np.mean([r.latency_s for r in done])
+                                if done else 0.0),
+        "p50_latency_s": float(np.percentile(e2e, 50) if e2e else 0.0),
+        "p99_latency_s": float(np.percentile(e2e, 99) if e2e else 0.0),
+        "deadline_hit_rate": (hits / len(with_dl)) if with_dl else 1.0,
+        "cronet_hit_rate": (sum(r.cronet_iters for r in done)
+                            / max(iters, 1)),
+    }

@@ -1,0 +1,500 @@
+"""Mesh-agnostic gateway tests (serve/gateway.py).
+
+Two layers:
+  * policy/routing mechanics against an injected in-memory fake engine
+    (deterministic, device-free): lazy bucket creation, per-engine depth
+    gating, cross-mesh rank ordering, all three overload policies at the
+    front door, lifecycle, stats plumbing;
+  * end-to-end against real engines: two meshes interleaved under one
+    queue, each completed density BITWISE-equal to the corresponding
+    single-mesh engine run — the gateway's acceptance contract — plus a
+    slow-tier mixed-mesh Poisson stress.
+"""
+import dataclasses
+import random
+import threading
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.serve import (EngineClosed, EngineState, OverloadPolicy,
+                         QueueFull, RequestShed, TopoGateway, TopoRequest)
+
+U_SCALE = 50.0
+
+
+def wait_until(cond, timeout=10.0, interval=0.005):
+    t0 = time.time()
+    while not cond():
+        if time.time() - t0 > timeout:
+            return False
+        time.sleep(interval)
+    return True
+
+
+# ------------------------------------------------------------ fake engine
+
+
+class _FakeEngine:
+    """In-memory stand-in honouring the engine interface the gateway
+    touches: requests park in ``submitted`` until the test calls
+    ``complete()``, making depth gating and overload deterministic."""
+
+    def __init__(self, nelx, nely):
+        self.cfg = SimpleNamespace(nelx=nelx, nely=nely)
+        self._failure = None
+        self.inflight = 0
+        self.preemptions = 0
+        self.total_steps = 0
+        self._sched = SimpleNamespace(cond=threading.Condition())
+        self._completed = []
+        self.submitted = []          # (req, fut), forwarding order
+        self._closed = False
+        self._lock = threading.Lock()
+
+    def submit(self, req, deadline_s=None, priority=0, _future=None):
+        with self._lock:
+            if self._failure is not None:   # mirrors the real engine
+                raise RuntimeError("engine failed") from self._failure
+            if self._closed:
+                raise EngineClosed("fake engine closed")
+            self.inflight += 1
+            self.submitted.append((req, _future))
+        return _future
+
+    def complete(self):
+        """Resolve the oldest pending request."""
+        with self._lock:
+            req, fut = self.submitted.pop(0)
+            req.done = True
+            req.deadline_met = (None if req.deadline is None
+                                else time.time() <= req.deadline)
+            self._completed.append(req)
+            self.inflight -= 1
+        fut._resolve()
+        return req
+
+    def throughput_stats(self, requests=None, wall_s=None):
+        return {"requests": float(len(self._completed))}
+
+    def shutdown(self, wait=True):
+        self._closed = True
+
+    def stop(self, wait=True):
+        pass
+
+
+def _fake_gateway(**kw):
+    fakes = {}
+
+    def factory(nelx, nely):
+        fakes[(nelx, nely)] = _FakeEngine(nelx, nely)
+        return fakes[(nelx, nely)]
+
+    cfg = SimpleNamespace(nelx=0, nely=0)   # template never used by fakes
+    gw = TopoGateway(cfg, params=None, u_scale=U_SCALE,
+                     engine_factory=factory, **kw)
+    return gw, fakes
+
+
+def _req(uid, nelx=12, nely=4, n_iter=5):
+    return TopoRequest(uid=uid,
+                       problem=SimpleNamespace(nelx=nelx, nely=nely),
+                       n_iter=n_iter)
+
+
+# ----------------------------------------------- routing + depth mechanics
+
+
+def test_lazy_engine_instantiation_per_mesh():
+    gw, fakes = _fake_gateway(max_pending=None)
+    assert gw.state is EngineState.NEW and not gw.engines
+    gw.submit(_req(0, 12, 4))
+    assert wait_until(lambda: (12, 4) in fakes)
+    assert (10, 6) not in fakes      # untouched meshes build nothing
+    gw.submit(_req(1, 10, 6))
+    gw.submit(_req(2, 12, 4))        # reuses the existing bucket
+    assert wait_until(lambda: (10, 6) in fakes
+                      and len(fakes[(12, 4)].submitted) == 2)
+    assert len(gw.engines) == 2 and gw.state is EngineState.RUNNING
+    for f in fakes.values():
+        while f.submitted:
+            f.complete()
+    assert gw.drain(timeout=10)
+    gw.shutdown()
+    assert all(f._closed for f in fakes.values())
+
+
+def test_engine_depth_gates_forwarding_without_blocking_other_meshes():
+    gw, fakes = _fake_gateway(max_pending=None, engine_depth=2)
+    futs = [gw.submit(_req(k, 12, 4), deadline_s=10.0 + k)
+            for k in range(5)]
+    assert wait_until(lambda: len(fakes.get((12, 4), _FakeEngine(0, 0))
+                                  .submitted) == 2)
+    time.sleep(0.1)   # dispatcher must NOT forward past the depth limit
+    assert fakes[(12, 4)].inflight == 2 and gw.inflight == 5
+    # a second mesh is not head-of-line blocked behind the saturated one
+    gw.submit(_req(9, 10, 6), deadline_s=999.0)
+    assert wait_until(lambda: (10, 6) in fakes
+                      and len(fakes[(10, 6)].submitted) == 1)
+    # completing one frees depth: the NEXT-tightest-deadline entry follows
+    fakes[(12, 4)].complete()
+    assert wait_until(lambda: len(fakes[(12, 4)].submitted) == 2)
+    forwarded = [r.uid for r, _ in fakes[(12, 4)].submitted]
+    assert forwarded == [1, 2]       # uid 0 completed; EDF order held
+    while not gw.drain(timeout=0.2):  # completions refill from the queue
+        for f in fakes.values():
+            while f.submitted:
+                f.complete()
+    assert all(f.result(timeout=10).done for f in futs)
+    gw.shutdown()
+
+
+def test_cross_mesh_edf_order_through_one_queue():
+    """Requests for two meshes share ONE rank order: with both engines
+    saturated, releasing them drains the queue globally
+    earliest-deadline-first per mesh."""
+    gw, fakes = _fake_gateway(max_pending=None, engine_depth=1)
+    # saturate both buckets (one filler each reaches the engine)
+    gw.submit(_req(100, 12, 4), priority=5)
+    gw.submit(_req(101, 10, 6), priority=5)
+    assert wait_until(lambda: len(fakes) == 2
+                      and all(f.inflight == 1 for f in fakes.values()))
+    # interleaved arrivals, deadlines NOT in submit order
+    plan = [(0, (12, 4), 30.0), (1, (10, 6), 10.0), (2, (12, 4), 5.0),
+            (3, (10, 6), 40.0), (4, (12, 4), 20.0)]
+    for uid, mesh, dl in plan:
+        gw.submit(_req(uid, *mesh), deadline_s=dl)
+    time.sleep(0.1)
+    assert all(f.inflight == 1 for f in fakes.values())   # still gated
+    for f in list(fakes.values()):
+        f.complete()                  # release the fillers
+    # drain step by step, recording per-mesh forwarding order: it must
+    # follow the SHARED (priority, EDF) rank restricted to each mesh
+    order_a, order_b = [], []
+    while len(order_a) + len(order_b) < len(plan):
+        assert wait_until(
+            lambda: any(f.submitted for f in fakes.values()))
+        for mesh, f in fakes.items():
+            while f.submitted:
+                (order_a if mesh == (12, 4) else order_b).append(
+                    f.submitted[0][0].uid)
+                f.complete()
+    assert order_a == [2, 4, 0]
+    assert order_b == [1, 3]
+    assert gw.drain(timeout=10)
+    gw.shutdown()
+
+
+def test_priority_reaches_the_engine_and_outranks_deadlines():
+    gw, fakes = _fake_gateway(max_pending=None, engine_depth=1)
+    gw.submit(_req(100, 12, 4), priority=9)              # filler
+    assert wait_until(lambda: (12, 4) in fakes
+                      and fakes[(12, 4)].inflight == 1)
+    gw.submit(_req(0, 12, 4), deadline_s=1.0)
+    gw.submit(_req(1, 12, 4), deadline_s=500.0, priority=3)
+    time.sleep(0.05)
+    fakes[(12, 4)].complete()
+    assert wait_until(lambda: len(fakes[(12, 4)].submitted) == 1)
+    req, _ = fakes[(12, 4)].submitted[0]
+    assert req.uid == 1 and req.priority == 3   # priority beat the deadline
+    while fakes[(12, 4)].submitted:
+        fakes[(12, 4)].complete()
+    assert wait_until(lambda: len(fakes[(12, 4)].submitted) == 1)
+    fakes[(12, 4)].complete()
+    assert gw.drain(timeout=10)
+    gw.shutdown()
+
+
+# -------------------------------------------------------- overload policies
+
+
+def _saturated_gateway(policy, max_pending=2, **kw):
+    """Gateway whose single fake engine holds one in-flight filler
+    (depth=1), so further submissions pile into the bounded queue."""
+    gw, fakes = _fake_gateway(max_pending=max_pending, overload=policy,
+                              engine_depth=1, **kw)
+    gw.submit(_req(100, 12, 4), priority=9)
+    assert wait_until(lambda: (12, 4) in fakes
+                      and fakes[(12, 4)].inflight == 1)
+    return gw, fakes[(12, 4)]
+
+
+def test_reject_policy_raises_queue_full_at_the_front_door():
+    gw, eng = _saturated_gateway(OverloadPolicy.REJECT)
+    f1 = gw.submit(_req(0, 12, 4), deadline_s=5.0)
+    f2 = gw.submit(_req(1, 12, 4), deadline_s=6.0)
+    with pytest.raises(QueueFull):
+        gw.submit(_req(2, 12, 4), deadline_s=1.0)
+    assert gw.throughput_stats()["rejected"] == 1.0
+    eng.complete()
+    for _ in range(2):
+        assert wait_until(lambda: eng.submitted)
+        eng.complete()
+    assert f1.result(timeout=10).done and f2.result(timeout=10).done
+    gw.shutdown()
+
+
+def test_shed_policy_fails_the_least_urgent_future_with_typed_error():
+    gw, eng = _saturated_gateway("shed-latest-deadline")
+    f_keep = gw.submit(_req(0, 12, 4), deadline_s=5.0)
+    f_shed = gw.submit(_req(1, 12, 4), deadline_s=600.0)
+    # incoming ranks last -> it is shed itself, fail-fast but observable
+    f_self = gw.submit(_req(2, 12, 4), deadline_s=900.0)
+    assert f_self.done()
+    with pytest.raises(RequestShed):
+        f_self.result()
+    # incoming tighter than the queued laggard -> the laggard is shed
+    f_tight = gw.submit(_req(3, 12, 4), deadline_s=2.0)
+    assert wait_until(f_shed.done, timeout=5)
+    with pytest.raises(RequestShed):
+        f_shed.result()
+    assert isinstance(f_shed.exception(), RequestShed)
+    assert gw.throughput_stats()["shed"] == 2.0
+    eng.complete()
+    for _ in range(2):
+        assert wait_until(lambda: eng.submitted)
+        eng.complete()
+    assert f_keep.result(timeout=10).done and f_tight.result(timeout=10).done
+    assert gw.drain(timeout=10)   # shed futures resolved: nothing leaks
+    gw.shutdown()
+
+
+def test_block_policy_waits_and_is_released_by_completion():
+    gw, eng = _saturated_gateway("block", max_pending=1)
+    gw.submit(_req(0, 12, 4), deadline_s=5.0)   # fills the queue
+    admitted = []
+
+    def submitter():
+        admitted.append(gw.submit(_req(1, 12, 4), deadline_s=6.0))
+
+    t = threading.Thread(target=submitter)
+    t.start()
+    time.sleep(0.15)
+    assert not admitted, "submit() returned while the queue was full"
+    eng.complete()   # frees depth -> dispatcher pops -> queue has room
+    t.join(timeout=10)
+    assert not t.is_alive() and len(admitted) == 1
+    while not gw.drain(timeout=0.2):
+        if eng.submitted:
+            eng.complete()
+    gw.shutdown()
+
+
+def test_block_policy_timeout_raises_queue_full():
+    gw, eng = _saturated_gateway("block", max_pending=1,
+                                 block_timeout=0.1)
+    gw.submit(_req(0, 12, 4), deadline_s=5.0)
+    with pytest.raises(QueueFull):
+        gw.submit(_req(1, 12, 4), deadline_s=6.0)
+    eng.complete()
+    assert wait_until(lambda: eng.submitted)
+    eng.complete()
+    assert gw.drain(timeout=10)
+    gw.shutdown()
+
+
+def test_failed_engine_fails_its_queued_requests_instead_of_stranding():
+    """Entries routed to a mesh whose engine has FAILED must resolve
+    with the engine's failure — not sit unforwardable in the queue
+    forever (which would hang result(), drain(), and shutdown)."""
+    gw, eng = _saturated_gateway("block", max_pending=8)
+    f1 = gw.submit(_req(0, 12, 4), deadline_s=5.0)
+    f2 = gw.submit(_req(1, 12, 4), deadline_s=6.0)
+    boom = RuntimeError("device exploded")
+    eng._failure = boom               # shard loop died mid-serve
+    # the queued entries are forwarded anyway, fail at eng.submit, and
+    # their futures carry the engine's failure
+    for f in (f1, f2):
+        with pytest.raises(RuntimeError):
+            f.result(timeout=10)
+        assert f.exception().__cause__ is boom
+    # the filler's future is the engine's to fail (real engines do);
+    # resolve it so gateway accounting closes
+    eng.submitted.pop(0)[1]._resolve(boom)
+    assert gw.drain(timeout=10)       # nothing stranded
+    gw.shutdown()
+
+
+def test_malformed_problem_fails_at_the_front_door():
+    """A request whose problem has no usable mesh must raise in the
+    CALLER's thread — never reach the dispatcher, where it would take
+    every tenant's queued requests down."""
+    gw, fakes = _fake_gateway(max_pending=4)
+    ok = gw.submit(_req(0, 12, 4))
+    with pytest.raises(ValueError, match="nelx/nely"):
+        gw.submit(TopoRequest(uid=1, problem=object(), n_iter=3))
+    with pytest.raises(ValueError, match="nelx/nely"):
+        gw.submit(_req(2, 0, 4))      # degenerate mesh
+    # the gateway survived: the good request still completes
+    assert wait_until(lambda: fakes.get((12, 4))
+                      and fakes[(12, 4)].submitted)
+    fakes[(12, 4)].complete()
+    assert ok.result(timeout=10).done
+    assert gw.state is EngineState.RUNNING
+    gw.shutdown()
+
+
+# ---------------------------------------------------------------- lifecycle
+
+
+def test_gateway_lifecycle_state_machine():
+    gw, fakes = _fake_gateway(max_pending=4)
+    assert gw.state is EngineState.NEW
+    fut = gw.submit(_req(0, 12, 4))
+    assert gw.state is EngineState.RUNNING
+    assert wait_until(lambda: fakes.get((12, 4))
+                      and fakes[(12, 4)].submitted)
+    fakes[(12, 4)].complete()
+    assert fut.result(timeout=10).done
+    gw.shutdown()
+    assert gw.state is EngineState.CLOSED
+    with pytest.raises(EngineClosed):
+        gw.submit(_req(1, 12, 4))
+    with pytest.raises(EngineClosed):
+        gw.start()
+    gw.shutdown()    # idempotent
+    assert all(f._closed for f in fakes.values())
+
+
+def test_shutdown_wakes_blocked_submitters_with_engine_closed():
+    gw, eng = _saturated_gateway("block", max_pending=1)
+    gw.submit(_req(0, 12, 4), deadline_s=5.0)
+    errors = []
+
+    def submitter():
+        try:
+            gw.submit(_req(1, 12, 4), deadline_s=6.0)
+        except EngineClosed as e:
+            errors.append(e)
+
+    t = threading.Thread(target=submitter)
+    t.start()
+    time.sleep(0.1)
+    # shutdown on another thread: it drains (blocks on the engine), but
+    # must FIRST wake the stranded submitter
+    st = threading.Thread(target=gw.shutdown)
+    st.start()
+    t.join(timeout=10)
+    assert not t.is_alive() and len(errors) == 1
+    eng.complete()
+    assert wait_until(lambda: eng.submitted)
+    eng.complete()
+    st.join(timeout=10)
+    assert not st.is_alive() and gw.state is EngineState.CLOSED
+
+
+# ----------------------------------------------- real engines: the contract
+
+
+@pytest.fixture(scope="module")
+def trained():
+    import jax
+
+    from repro.common import materialize
+    from repro.configs.cronet import get_cronet_config
+    from repro.core import cronet
+
+    cfg = dataclasses.replace(get_cronet_config("small"),
+                              nelx=12, nely=4, hist_len=3)
+    params = materialize(cronet.param_specs(
+        dataclasses.replace(cfg, dtype="float32")), jax.random.key(0))
+    return cfg, params
+
+
+MESHES = [(12, 4), (10, 6)]
+
+
+def _mesh_problems(n, nelx, nely):
+    from repro.fea import fea2d
+    return [fea2d.point_load_problem(nelx, nely,
+                                     load_node=(i % (nelx - 1), 0),
+                                     load=(0.0, -1.0 - 0.1 * i))
+            for i in range(n)]
+
+
+def test_gateway_serves_two_meshes_bitwise_equal_to_single_mesh_engines(
+        trained):
+    """THE acceptance contract: one gateway, two meshes interleaved
+    through one queue, each completed density bitwise-equal to the same
+    request served on a dedicated single-mesh TopoServingEngine."""
+    from repro.serve import TopoServingEngine
+
+    cfg, params = trained
+    per_mesh = {m: _mesh_problems(3, *m) for m in MESHES}
+    # interleave: A B A B A B
+    gw = TopoGateway(cfg, params, U_SCALE, slots=2, max_pending=32)
+    futs = []
+    for i in range(3):
+        for m in MESHES:
+            uid = len(futs)
+            futs.append(gw.submit(
+                TopoRequest(uid=uid, problem=per_mesh[m][i],
+                            n_iter=4 + (i % 3))))
+    done = [f.result(timeout=600) for f in futs]
+    assert gw.throughput_stats()["engines"] == 2.0
+    stats = gw.throughput_stats(per_mesh=True)
+    assert set(stats["per_mesh"]) == {"12x4", "10x6"}
+    gw.shutdown()
+    assert all(r.done for r in done)
+    # reference: dedicated single-mesh engines, same requests
+    for m in MESHES:
+        eng = TopoServingEngine(
+            dataclasses.replace(cfg, nelx=m[0], nely=m[1]),
+            params, U_SCALE, slots=2)
+        mine = [r for r in done if r.mesh == m]
+        refs = eng.run([TopoRequest(uid=r.uid, problem=r.problem,
+                                    n_iter=r.n_iter) for r in mine])
+        eng.shutdown()
+        for r, ref in zip(mine, refs):
+            np.testing.assert_array_equal(
+                r.density, ref.density,
+                err_msg=f"uid {r.uid} mesh {m[0]}x{m[1]}")
+            assert r.cronet_iters == ref.cronet_iters
+            assert r.fea_iters == ref.fea_iters
+
+
+@pytest.mark.slow
+def test_mixed_mesh_poisson_stress(trained):
+    """Slow tier: Poisson arrivals across three meshes with mixed
+    deadlines/priorities through one bounded gateway queue — nothing
+    lost, nothing duplicated, every future resolves (completed or shed),
+    no leaked threads."""
+    cfg, params = trained
+    meshes = [(12, 4), (10, 6), (8, 4)]
+    pools = {m: _mesh_problems(4, *m) for m in meshes}
+    gw = TopoGateway(cfg, params, U_SCALE, slots=2, max_pending=64,
+                     overload="shed-latest-deadline")
+    rng = random.Random(7)
+    n = 36
+    futs = []
+    for i in range(n):
+        m = meshes[rng.randrange(len(meshes))]
+        dl = rng.choice([None, 30.0, 300.0])
+        pr = rng.choice([0, 0, 0, 1])
+        futs.append(gw.submit(
+            TopoRequest(uid=i, problem=pools[m][rng.randrange(4)],
+                        n_iter=rng.randint(3, 7)),
+            deadline_s=dl, priority=pr))
+        time.sleep(rng.random() * 0.02)
+    completed, shed = [], []
+    for f in futs:
+        try:
+            completed.append(f.result(timeout=900))
+        except RequestShed:
+            shed.append(f.request)
+    assert gw.drain(timeout=60)
+    assert len(completed) + len(shed) == n
+    assert sorted(r.uid for r in completed + shed) == list(range(n))
+    assert all(r.done for r in completed)
+    assert all(r.fea_iters + r.cronet_iters == r.n_iter
+               for r in completed)
+    stats = gw.throughput_stats(per_mesh=True)
+    assert stats["shed"] == float(len(shed))
+    assert stats["requests"] == float(len(completed))
+    gw.shutdown()
+    leaked = [t for t in threading.enumerate()
+              if t.name.startswith(("topo-shard", "topo-gateway"))]
+    assert leaked == [], f"leaked serving threads: {leaked}"

@@ -1,9 +1,16 @@
-"""serve/scheduler.py unit tests: EDF ordering, deterministic
-tie-breaking, slack-safe preemption, and starvation bounds — pure policy,
-no threads, no devices."""
+"""serve/scheduler.py unit tests: EDF ordering, priority lanes,
+deterministic tie-breaking, slack-safe preemption, starvation bounds,
+and the gateway's bounded-queue overload policies — pure policy, no
+threads (except where blocking IS the behaviour under test), no
+devices."""
 import threading
+import time
 
-from repro.serve.scheduler import INF, EDFScheduler, SlotView, preempt_victim
+import pytest
+
+from repro.serve.scheduler import (INF, BoundedEDFScheduler, EDFScheduler,
+                                   SlotView, preempt_victim)
+from repro.serve.types import OverloadPolicy, QueueFull
 
 # ------------------------------------------------------------ EDF ordering
 
@@ -83,6 +90,152 @@ def test_push_is_thread_safe_and_counts():
         seen.add(e.payload)
     assert len(seen) == n * per
     assert s.popped == n * per
+
+
+# ----------------------------------------------------------- priority lane
+
+
+def test_priority_outranks_any_deadline():
+    s = EDFScheduler()
+    s.push("tightest", deadline=0.1, now=0.0)
+    s.push("urgent-flag", deadline=1000.0, now=0.0, priority=1)
+    s.push("urgent-none", deadline=None, now=0.0, priority=2)
+    assert [s.pop().payload for _ in range(3)] == \
+        ["urgent-none", "urgent-flag", "tightest"]
+
+
+def test_equal_priority_falls_back_to_edf_then_seq():
+    s = EDFScheduler()
+    s.push("b", deadline=20.0, now=0.0, priority=1)
+    s.push("a", deadline=10.0, now=0.0, priority=1)
+    s.push("c", deadline=10.0, now=0.0, priority=1)
+    # same priority: deadline first (a before c by submit order), b last
+    assert [s.pop().payload for _ in range(3)] == ["a", "c", "b"]
+
+
+def test_repush_preserves_priority_rank():
+    s = EDFScheduler()
+    e = s.push("parked", deadline=50.0, now=0.0, priority=3)
+    s.pop()
+    s.push("later", deadline=1.0, now=0.0)
+    s.push("parked", deadline=50.0, now=0.0, seq=e.seq,
+           eff_deadline=e.eff_deadline, priority=e.priority)
+    assert s.pop().payload == "parked"
+
+
+# ------------------------------------------------- bounded queue: policies
+
+
+def test_unbounded_capacity_never_applies_policy():
+    s = BoundedEDFScheduler(capacity=None, policy=OverloadPolicy.REJECT)
+    for k in range(100):
+        entry, shed = s.offer(k, deadline=float(k), now=0.0)
+        assert entry is not None and shed is None
+    assert len(s) == 100 and s.rejected == 0 and s.shed_count == 0
+
+
+def test_reject_policy_fails_fast_with_typed_error():
+    s = BoundedEDFScheduler(capacity=2, policy="reject")
+    s.offer("a", deadline=1.0, now=0.0)
+    s.offer("b", deadline=2.0, now=0.0)
+    with pytest.raises(QueueFull):
+        s.offer("c", deadline=0.5, now=0.0)
+    assert s.rejected == 1
+    assert len(s) == 2              # queue untouched by the rejection
+    assert s.pop().payload == "a"   # and order preserved
+
+
+def test_shed_policy_evicts_latest_effective_deadline():
+    s = BoundedEDFScheduler(capacity=3, policy="shed-latest-deadline",
+                            starvation_horizon=60.0)
+    s.offer("keep-5", deadline=5.0, now=0.0)
+    s.offer("shed-me", deadline=90.0, now=0.0)
+    s.offer("keep-10", deadline=10.0, now=0.0)
+    entry, shed = s.offer("keep-7", deadline=7.0, now=0.0)
+    assert entry is not None and shed.payload == "shed-me"
+    assert s.shed_count == 1
+    assert [s.pop().payload for _ in range(3)] == \
+        ["keep-5", "keep-7", "keep-10"]
+
+
+def test_shed_policy_sheds_the_incoming_request_when_it_ranks_last():
+    s = BoundedEDFScheduler(capacity=2, policy="shed-latest-deadline")
+    s.offer("a", deadline=5.0, now=0.0)
+    s.offer("b", deadline=10.0, now=0.0)
+    entry, shed = s.offer("late", deadline=99.0, now=0.0)
+    assert entry is None and shed.payload == "late"
+    assert len(s) == 2 and s.shed_count == 1
+    # a deadline-less incoming ranks by the starvation horizon
+    entry, shed = s.offer("horizon", deadline=None, now=0.0)
+    assert entry is None and shed.payload == "horizon"
+
+
+def test_shed_policy_never_evicts_higher_priority():
+    s = BoundedEDFScheduler(capacity=2, policy="shed-latest-deadline")
+    s.offer("vip", deadline=500.0, now=0.0, priority=1)
+    s.offer("norm", deadline=1.0, now=0.0)
+    # incoming normal-priority with a tighter deadline than the VIP's:
+    # the shed victim must be the lower-priority entry
+    entry, shed = s.offer("norm2", deadline=0.5, now=0.0)
+    assert shed.payload == "norm"
+    assert [s.pop().payload for _ in range(2)] == ["vip", "norm2"]
+
+
+def test_block_policy_waits_for_a_pop_to_make_room():
+    s = BoundedEDFScheduler(capacity=1, policy="block")
+    s.offer("first", deadline=1.0, now=0.0)
+    admitted = []
+
+    def submitter():
+        entry, _ = s.offer("second", deadline=2.0, now=0.0)
+        admitted.append(entry)
+
+    t = threading.Thread(target=submitter)
+    t.start()
+    time.sleep(0.1)
+    assert not admitted, "offer() returned while the queue was full"
+    assert s.pop().payload == "first"   # pop frees a slot -> wakes waiter
+    t.join(timeout=5.0)
+    assert not t.is_alive() and admitted[0].payload == "second"
+    assert s.pop().payload == "second"
+
+
+def test_block_policy_timeout_and_close_release_waiters():
+    s = BoundedEDFScheduler(capacity=1, policy="block")
+    s.offer("first", deadline=1.0, now=0.0)
+    with pytest.raises(QueueFull):
+        s.offer("timed-out", deadline=2.0, now=0.0, timeout=0.05)
+    results = []
+
+    def submitter():
+        try:
+            s.offer("stranded", deadline=2.0, now=0.0)
+        except RuntimeError as e:
+            results.append(e)
+
+    t = threading.Thread(target=submitter)
+    t.start()
+    time.sleep(0.05)
+    s.close()                        # shutdown must not strand the waiter
+    t.join(timeout=5.0)
+    assert not t.is_alive() and len(results) == 1
+    with pytest.raises(RuntimeError):
+        s.offer("after-close", deadline=1.0, now=0.0)
+
+
+def test_pop_ready_skips_blocked_entries_in_rank_order():
+    s = BoundedEDFScheduler(capacity=8)
+    s.offer(("meshA", 1), deadline=1.0, now=0.0)
+    s.offer(("meshA", 2), deadline=2.0, now=0.0)
+    s.offer(("meshB", 3), deadline=3.0, now=0.0)
+    # meshA saturated: the best READY entry is meshB's, despite its later
+    # deadline — no head-of-line blocking across meshes
+    e = s.pop_ready(lambda p: p[0] != "meshA")
+    assert e.payload == ("meshB", 3)
+    assert s.pop_ready(lambda p: p[0] != "meshA") is None
+    assert len(s) == 2
+    # unblocked: rank order resumes
+    assert s.pop_ready(lambda p: True).payload == ("meshA", 1)
 
 
 # --------------------------------------------------------- preempt_victim

@@ -177,14 +177,14 @@ def test_deadline_stats_and_future_timeout():
     req = fut.result(timeout=300)
     assert req.deadline_met is True
     eng.drain()
-    eng.shutdown()
+    eng.stop()
     stats = eng.throughput_stats()
     assert stats["deadline_hit_rate"] == 1.0
     assert stats["p99_latency_s"] >= stats["p50_latency_s"] > 0.0
     # deadline-less request carries no verdict
     assert TopoFuture_never.result().deadline_met is None
-    # submit after shutdown restarts the tick loops (documented behaviour
-    # the run() shim depends on)
+    # submit after stop() restarts the tick loops (documented behaviour
+    # the run() shim depends on); shutdown() below is terminal
     assert not eng.running
     restarted = eng.submit(TopoRequest(uid=2, problem=pool[0], n_iter=2))
     assert restarted.result(timeout=300).done and eng.running

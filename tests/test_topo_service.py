@@ -13,6 +13,7 @@ from repro.core import cronet
 from repro.fea import fea2d, hybrid
 from repro.serve.topo_service import (TopoRequest, TopoServingEngine,
                                       auto_shards, shard_devices)
+from repro.serve.types import EngineClosed, EngineState
 
 U_SCALE = 50.0
 
@@ -221,6 +222,62 @@ def test_shard_device_assignment_stable_across_restarts(cfg, params):
     eng2 = TopoServingEngine(cfg, params, u_scale=U_SCALE, slots=4,
                              precision="fp32")
     assert [sh.device for sh in eng2._shards] == devs0
+
+
+# ------------------------------------------------------ lifecycle machine
+
+
+def test_engine_lifecycle_state_machine(cfg, params):
+    """NEW -> RUNNING <-> STOPPED -> CLOSED: stop() is the restartable
+    pause the run() shim cycles through; shutdown() is terminal and
+    submit()/start() afterwards fail fast with EngineClosed instead of
+    hanging or racing the tick loops."""
+    probs = _problems(2)
+    eng = TopoServingEngine(cfg, params, u_scale=U_SCALE, slots=2,
+                            precision="fp32")
+    assert eng.state is EngineState.NEW
+    fut = eng.submit(TopoRequest(uid=0, problem=probs[0], n_iter=3))
+    assert eng.state is EngineState.RUNNING
+    assert fut.result(timeout=300).done
+    eng.stop()
+    assert eng.state is EngineState.STOPPED and not eng.running
+    # STOPPED is restartable (run() depends on this)
+    fut = eng.submit(TopoRequest(uid=1, problem=probs[1], n_iter=3))
+    assert eng.state is EngineState.RUNNING
+    assert fut.result(timeout=300).done
+    eng.shutdown()
+    assert eng.state is EngineState.CLOSED
+    with pytest.raises(EngineClosed):
+        eng.submit(TopoRequest(uid=2, problem=probs[0], n_iter=3))
+    with pytest.raises(EngineClosed):
+        eng.start()
+    with pytest.raises(EngineClosed):
+        eng.run([TopoRequest(uid=3, problem=probs[0], n_iter=3)])
+    eng.shutdown()   # idempotent
+    assert eng.state is EngineState.CLOSED
+
+
+# --------------------------------------------------- completed-request ring
+
+
+def test_completed_ring_buffer_evicts_oldest(cfg, params):
+    """A long-lived engine must not grow its completed-request history
+    without bound: completed_limit caps it, evicting oldest-first."""
+    probs = _problems(4)
+    eng = TopoServingEngine(cfg, params, u_scale=U_SCALE, slots=2,
+                            precision="fp32", completed_limit=4)
+    eng.run([TopoRequest(uid=i, problem=probs[i], n_iter=3)
+             for i in range(4)])
+    assert sorted(r.uid for r in eng._completed) == [0, 1, 2, 3]
+    assert eng.throughput_stats()["requests"] == 4.0
+    # a second full batch evicts the first one entirely, oldest-first
+    eng.run([TopoRequest(uid=10 + i, problem=probs[i], n_iter=3)
+             for i in range(4)])
+    assert len(eng._completed) == 4
+    assert sorted(r.uid for r in eng._completed) == [10, 11, 12, 13]
+    # stats now cover only the surviving ring
+    assert eng.throughput_stats()["requests"] == 4.0
+    eng.shutdown()
 
 
 def test_point_load_problem_default_is_mbb():
