@@ -48,8 +48,11 @@ and "block makes submit() wait".
 
 Smoke mode (--smoke) is the push-gate CI entry: a tiny-mesh gateway run
 (two meshes, a handful of requests, deterministic shed/reject checks)
-that keeps this benchmark's import-and-serve path from rotting between
-nightlies. It asserts unconditionally and finishes in about a minute.
+plus the training-lifecycle smoke (multi-case dataset -> a few train
+steps -> registry register/bitwise restore -> gateway hot swap). It
+asserts unconditionally and finishes in a couple of minutes; the FULL
+multi-trajectory training run is the nightly slow tier
+(tests/test_surrogate_lifecycle.py).
 
 Also exposed as a suite for benchmarks/run.py (`--only topo_serving`).
 """
@@ -644,11 +647,72 @@ def bench_gateway(size: str = "small", slots: int = 4,
             "blocked_s": blocked_s, **point}
 
 
+def train_smoke():
+    """Push-gate training-lifecycle smoke: a tiny-mesh multi-load-case
+    dataset (trajectories batched through fea2d.solve_b), a few train
+    steps, register -> restore through the model registry (bitwise), and
+    a registry-backed gateway hot swap with zero dropped requests. The
+    FULL multi-trajectory training run (held-out generalization, >= 30%
+    off-distribution hit rate) is the nightly `slow` tier
+    (tests/test_surrogate_lifecycle.py); this keeps the train ->
+    register -> serve -> swap path from rotting between nightlies."""
+    import dataclasses
+    import tempfile
+
+    import jax
+
+    from repro.configs.cronet import get_cronet_config
+    from repro.fea import dataset as dsm
+    from repro.fea import fea2d, train_cronet
+    from repro.serve import ModelRegistry, TopoGateway, TopoRequest
+
+    cfg = dataclasses.replace(get_cronet_config("small"),
+                              nelx=10, nely=4, hist_len=3)
+    data = dsm.build_dataset(cfg, cases=dsm.sample_load_cases(3, seed=0),
+                             n_iter=8)
+    assert data.n_trajectories == 3 and data.n_windows == 3 * 5
+    with tempfile.TemporaryDirectory() as td:
+        reg = ModelRegistry(td)
+        record, result = train_cronet.train_and_register(
+            cfg, reg, tag="smoke", data=data, steps=8, verbose=False)
+        assert reg.latest().tag == "smoke"
+        assert "acceptance" in record.metrics
+        assert len(record.load_cases) == 3
+        restored, rec2 = reg.load("smoke")
+        for a, b in zip(jax.tree.leaves(result.params),
+                        jax.tree.leaves(restored)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                "registry restore is not bitwise"
+        assert rec2.u_scale == result.u_scale
+
+        # second version + hot swap through a registry-backed gateway
+        reg.register(result.params, cfg, result.u_scale, tag="smoke-2")
+        gw = TopoGateway.from_registry(reg, tag="smoke", slots=2,
+                                       precision="fp32")
+        probs = [fea2d.point_load_problem(cfg.nelx, cfg.nely,
+                                          load_node=(i % (cfg.nelx - 1), 0),
+                                          load=(0.0, -1.0 - 0.1 * i))
+                 for i in range(4)]
+        futs = [gw.submit(TopoRequest(uid=i, problem=p, n_iter=4))
+                for i, p in enumerate(probs)]
+        assert gw.swap_model("smoke-2") == "smoke-2"
+        done = [f.result(timeout=600) for f in futs]
+        assert all(r.done for r in done), "swap dropped in-flight requests"
+        post = gw.submit(TopoRequest(uid=9, problem=probs[0], n_iter=4))
+        assert post.result(timeout=600).model_tag == "smoke-2"
+        stats = gw.throughput_stats()
+        assert stats["model_tag"] == "smoke-2"
+        assert stats["model_swaps"] == 1.0
+        gw.shutdown()
+    print("smoke: train -> register -> restore -> serve -> swap OK")
+
+
 def smoke():
     """Push-gate CI entry (--smoke): exercise the import-and-serve path
     end to end in about a minute — a two-mesh gateway run on tiny
     meshes, plus deterministic shed/reject policy checks against a
-    deliberately saturated bounded queue. Asserts unconditionally."""
+    deliberately saturated bounded queue, plus the training/registry
+    lifecycle smoke (train_smoke). Asserts unconditionally."""
     from repro.fea import fea2d
     from repro.serve import (QueueFull, RequestShed, TopoGateway,
                              TopoRequest)
@@ -720,6 +784,7 @@ def smoke():
     for eng in engines.values():
         eng.shutdown()
     print("smoke: gateway mixed-mesh serving + shed/reject policies OK")
+    train_smoke()
 
 
 def run(fast: bool = True):

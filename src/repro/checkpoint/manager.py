@@ -138,10 +138,27 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
     return jax.tree_util.tree_unflatten(treedef, out_leaves), extras
 
 
-def prune_old(ckpt_dir: str, keep: int = 3):
+def prune_old(ckpt_dir: str, keep: int = 3, pinned=()):
+    """Delete all but the newest ``keep`` checkpoints. Steps in
+    ``pinned`` are never deleted (the model registry pins versions that
+    serving may still hot-swap back to) and do not count against
+    ``keep``. Returns the steps actually removed."""
+    pinned = set(int(p) for p in pinned)
     steps = sorted(
         int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
         if d.startswith("step_") and not d.endswith(".tmp")
     )
-    for s in steps[:-keep]:
-        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+    kept = set(s for s in steps if s not in pinned)
+    kept = set(sorted(kept)[-keep:] if keep > 0 else ())
+    removed = []
+    for s in steps:
+        if s in pinned or s in kept:
+            continue
+        path = os.path.join(ckpt_dir, f"step_{s:08d}")
+        shutil.rmtree(path, ignore_errors=True)
+        # only report steps that are actually gone: a failed delete
+        # (EBUSY/EACCES) must not make the registry drop a version whose
+        # checkpoint still occupies disk
+        if not os.path.isdir(path):
+            removed.append(s)
+    return removed

@@ -14,6 +14,12 @@ Public API (everything else in this package is implementation detail):
     ``RequestShed`` — backpressure behaviour of a full admission queue.
   * ``EngineState`` / ``EngineClosed`` — the explicit lifecycle state
     machine; submitting to a shut-down engine/gateway raises.
+  * ``ModelRegistry`` / ``ModelRecord`` + ``NoModelError`` — the
+    versioned checkpoint registry (registry.py): training runs register
+    immutable versions (params + cfg + u_scale + load distribution +
+    eval metrics); the gateway resolves its served model from here
+    (``TopoGateway.from_registry``) and hot-swaps versions with
+    ``gateway.swap_model(tag)`` without dropping queued requests.
   * ``pool_stats`` — the shared metric definitions behind every
     ``throughput_stats()`` (engine-level, per-mesh, and aggregate).
 
@@ -35,6 +41,7 @@ The LM-decode serving half (``server``, ``decode``) is deliberately NOT
 re-exported here: import those modules directly.
 """
 from repro.serve.gateway import TopoGateway
+from repro.serve.registry import ModelRecord, ModelRegistry, NoModelError
 from repro.serve.topo_service import TopoServingEngine
 from repro.serve.types import (EngineClosed, EngineState, GatewayOverloaded,
                                OverloadPolicy, QueueFull, RequestShed,
@@ -43,6 +50,9 @@ from repro.serve.types import (EngineClosed, EngineState, GatewayOverloaded,
 __all__ = [
     "TopoGateway",
     "TopoServingEngine",
+    "ModelRegistry",
+    "ModelRecord",
+    "NoModelError",
     "TopoRequest",
     "TopoFuture",
     "OverloadPolicy",

@@ -85,9 +85,17 @@ class TopoGateway:
     engine_factory : override engine construction entirely,
         ``(nelx, nely) -> TopoServingEngine`` (tests inject slow or
         pre-built engines through this).
+    registry, model_tag : resolve the served model from a
+        ``serve.registry.ModelRegistry`` instead of passing params
+        explicitly: ``cfg``/``params``/``u_scale`` may then be omitted
+        (they come from the checkpoint record; ``model_tag=None`` means
+        latest). A registry-backed gateway can later
+        ``swap_model(tag)`` to hot-swap every bucket to another
+        version. ``TopoGateway.from_registry`` is the concise spelling.
     """
 
-    def __init__(self, cfg: CRONetConfig, params, u_scale: float, *,
+    def __init__(self, cfg: Optional[CRONetConfig] = None, params=None,
+                 u_scale: Optional[float] = None, *,
                  slots: int = 4, max_pending: Optional[int] = 64,
                  overload: Union[OverloadPolicy, str] = OverloadPolicy.BLOCK,
                  engine_depth: Optional[int] = None,
@@ -95,7 +103,23 @@ class TopoGateway:
                  starvation_horizon: float = 60.0,
                  engine_factory: Optional[
                      Callable[[int, int], TopoServingEngine]] = None,
+                 registry=None, model_tag: Optional[str] = None,
                  **engine_kwargs):
+        self.registry = registry
+        self.model_tag = model_tag
+        if params is None and registry is not None:
+            params, record = registry.load(model_tag)
+            cfg = cfg if cfg is not None else record.cfg
+            u_scale = u_scale if u_scale is not None else record.u_scale
+            self.model_tag = record.tag
+        if engine_factory is None and (cfg is None or params is None
+                                       or u_scale is None):
+            # a caller-supplied factory owns engine construction, so the
+            # gateway itself never needs a model; otherwise one must come
+            # from (cfg, params, u_scale) or the registry
+            raise ValueError(
+                "TopoGateway needs (cfg, params, u_scale) or a registry "
+                "to resolve them from")
         self.cfg = cfg
         self.params = params
         self.u_scale = u_scale
@@ -119,13 +143,25 @@ class TopoGateway:
         self._closed = False
         self._inflight = 0           # offered and not yet resolved/shed
         self._failure: Optional[BaseException] = None
+        self._swapping = False       # swap_model() gates forwarding
+        self._dispatch_busy = False  # dispatcher holds a popped entry
+        self._swap_count = 0
+
+    @classmethod
+    def from_registry(cls, registry, tag: Optional[str] = None,
+                      **kwargs) -> "TopoGateway":
+        """Build a gateway serving a registry checkpoint (``tag=None``
+        = latest); the registry stays attached for ``swap_model``."""
+        return cls(registry=registry, model_tag=tag, **kwargs)
 
     # ------------------------------------------------------------ engines
 
     def _default_factory(self, nelx: int, nely: int) -> TopoServingEngine:
         cfg = dataclasses.replace(self.cfg, nelx=nelx, nely=nely)
         return TopoServingEngine(cfg, self.params, self.u_scale,
-                                 slots=self.slots, **self._engine_kwargs)
+                                 slots=self.slots,
+                                 model_tag=self.model_tag,
+                                 **self._engine_kwargs)
 
     def _engine_for(self, mesh: Mesh) -> TopoServingEngine:
         """Lazy per-mesh engine creation (dispatcher thread only, so no
@@ -220,6 +256,86 @@ class TopoGateway:
                 lambda: self._inflight == 0 or self._failure is not None,
                 timeout)
 
+    # --------------------------------------------------------- model swap
+
+    def swap_model(self, tag: Optional[str] = None, *, params=None,
+                   u_scale: Optional[float] = None,
+                   timeout: Optional[float] = None) -> str:
+        """Hot-swap every per-mesh bucket to another checkpoint without
+        dropping a single queued or in-flight request.
+
+        The new model comes from the attached registry (``tag``; None =
+        latest) or from explicit ``params``/``u_scale``. Sequence, per
+        the engines' stop()-restartable lifecycle:
+
+        1. gate the dispatcher: ``_ready`` goes False for everything, so
+           queued requests WAIT at the gateway (the bounded queue and
+           overload policy still apply to new submits);
+        2. wait out the entry the dispatcher may already hold
+           (``_dispatch_busy`` handshake), then ``drain()`` each bucket
+           — in-flight requests complete on the old model;
+        3. ``stop()`` + ``swap_params()`` each bucket (params re-upload
+           happens in the shard ``activate()`` on restart);
+        4. un-gate: buckets restart lazily as the backlog forwards.
+
+        Returns the new model tag. Raises ``TimeoutError`` if a bucket
+        does not drain within ``timeout``; buckets swapped before the
+        timeout keep the NEW model, the rest keep the old one, and
+        ``gateway.model_tag`` still names the old version — re-invoke
+        ``swap_model`` to finish the rollout (already-swapped buckets
+        just swap again)."""
+        if self._closed:
+            raise EngineClosed("gateway is shut down")
+        new_tag = tag
+        if params is None:
+            if self.registry is None:
+                raise ValueError("swap_model needs explicit params when "
+                                 "the gateway has no registry attached")
+            params, record = self.registry.load(tag)
+            # fail fast BEFORE draining: the buckets' compiled steps were
+            # built from self.cfg, so a checkpoint trained under a
+            # different architecture (mesh aside — that's per-bucket)
+            # would crash the shard tick loops after the swap
+            want = dataclasses.replace(record.cfg, nelx=self.cfg.nelx,
+                                       nely=self.cfg.nely,
+                                       name=self.cfg.name,
+                                       dtype=self.cfg.dtype)
+            if want != self.cfg:
+                raise ValueError(
+                    f"checkpoint {record.tag!r} was trained under an "
+                    f"incompatible config ({record.cfg.name}: e.g. "
+                    f"hist_len={record.cfg.hist_len} vs "
+                    f"{self.cfg.hist_len}); build a new gateway for it")
+            u_scale = record.u_scale if u_scale is None else u_scale
+            new_tag = record.tag
+        with self._queue.cond:
+            if self._swapping:
+                raise RuntimeError("a model swap is already in progress")
+            self._swapping = True
+            if not self._queue.cond.wait_for(
+                    lambda: not self._dispatch_busy, timeout):
+                self._swapping = False
+                self._queue.cond.notify_all()
+                raise TimeoutError("dispatcher did not quiesce for swap")
+        try:
+            for mesh, eng in list(self._engines.items()):
+                if not eng.drain(timeout):
+                    raise TimeoutError(
+                        f"bucket {_mesh_str(mesh)} did not drain within "
+                        f"{timeout}s; old model still serving")
+                eng.stop(wait=True)
+                eng.swap_params(params, u_scale=u_scale, model_tag=new_tag)
+            self.params = params
+            if u_scale is not None:
+                self.u_scale = u_scale
+            self.model_tag = new_tag
+            self._swap_count += 1
+        finally:
+            with self._queue.cond:
+                self._swapping = False
+                self._queue.cond.notify_all()   # resume forwarding
+        return new_tag
+
     # ---------------------------------------------------------- streaming
 
     def submit(self, req: TopoRequest, deadline_s: Optional[float] = None,
@@ -296,7 +412,11 @@ class TopoGateway:
         fails THAT future, which is the only way those entries ever
         resolve (gating them here would strand them in the queue and
         hang drain()/shutdown()). Plain attribute reads only — called
-        under the queue lock, so no engine lock may be taken here."""
+        under the queue lock, so no engine lock may be taken here.
+        During ``swap_model`` nothing is ready: queued requests wait at
+        the gateway (none are dropped) until the swap finishes."""
+        if self._swapping:
+            return False
         eng = self._engines.get(payload[0].mesh)
         if eng is None:
             return True
@@ -322,6 +442,11 @@ class TopoGateway:
                         # polling when an engine is saturated
                         q.cond.wait(timeout=0.05)
                         continue
+                    # handshake with swap_model(): between this flag and
+                    # its clear, a popped entry is in flight to an engine
+                    # — a swap must not observe the pool "drained" while
+                    # the entry is still on its way
+                    self._dispatch_busy = True
                 req, fut = entry.payload
                 try:
                     eng = self._engine_for(req.mesh)
@@ -330,6 +455,10 @@ class TopoGateway:
                     # a single bad request (or a failed engine) must not
                     # take the gateway down: fail its future and move on
                     fut._resolve(exc)
+                finally:
+                    with q.cond:
+                        self._dispatch_busy = False
+                        q.cond.notify_all()
             # normal exit (shutdown drained the queue): an async
             # shutdown(wait=False) has nobody left to close the engine
             # pool, so the dispatcher does it for the engines the
@@ -380,6 +509,8 @@ class TopoGateway:
             "rejected": float(self._queue.rejected),
             "pending": float(len(self._queue)),
             "engines": float(len(engines)),
+            "model_tag": self.model_tag,
+            "model_swaps": float(self._swap_count),
         })
         if per_mesh:
             stats["per_mesh"] = {

@@ -1,0 +1,224 @@
+"""Versioned model registry: the lifecycle seam between training and
+serving.
+
+Every training run is registered as an immutable VERSION: the fp32
+parameter tree persisted through ``checkpoint/manager.py`` (atomic
+write, content hashes, one ``step_<version>`` directory per version in
+``<root>/ckpts``) plus JSON metadata — the CRONet config, the deployed
+``u_scale``, the training load distribution (``fea.dataset.LoadCase``
+descriptors), and the held-out eval metrics. The serving gateway
+resolves params from here at engine build and hot-swaps between versions
+(``TopoGateway.swap_model``); ``prune`` reclaims old versions while
+``pin`` protects the ones serving may still swap back to.
+
+Layout::
+
+    <root>/registry.json          index: versions + metadata (atomic)
+    <root>/ckpts/step_<version>/  one checkpoint per version (manager.py)
+
+The index is the source of truth for metadata; the checkpoint manifest
+remains the source of truth for array bytes (hash-verified on load).
+"""
+from __future__ import annotations
+
+import dataclasses
+import datetime
+import json
+import os
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.checkpoint import manager as ckpt
+from repro.configs.cronet import CRONetConfig
+
+__all__ = ["ModelRecord", "ModelRegistry", "NoModelError"]
+
+
+class NoModelError(LookupError):
+    """The registry has no version matching the request (or none at
+    all — train and ``register()`` one first)."""
+
+
+def cfg_to_dict(cfg: CRONetConfig) -> Dict:
+    return dataclasses.asdict(cfg)
+
+
+def cfg_from_dict(d: Dict) -> CRONetConfig:
+    d = dict(d)
+    for k in ("b_pool", "t_pool"):           # json round-trips tuples as lists
+        if k in d:
+            d[k] = tuple(d[k])
+    return CRONetConfig(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelRecord:
+    """One registered checkpoint version (metadata only; ``load`` on the
+    registry materializes the params)."""
+    tag: str
+    version: int                    # checkpoint step in <root>/ckpts
+    cfg: CRONetConfig
+    u_scale: float
+    metrics: Dict                   # held-out eval (acceptance, mse, ...)
+    load_cases: List[Dict]          # training distribution descriptors
+    created_at: str
+    pinned: bool = False
+
+    def describe(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["cfg"] = cfg_to_dict(self.cfg)
+        return d
+
+
+class ModelRegistry:
+    """Versioned CRONet checkpoint store with ``register`` / ``get`` /
+    ``latest`` / ``load`` / ``pin`` / ``prune``. Thread-safe; the index
+    write is atomic (tmp + rename), so a crashed register never corrupts
+    the registry."""
+
+    INDEX = "registry.json"
+
+    def __init__(self, root: str):
+        self.root = root
+        self.ckpt_dir = os.path.join(root, "ckpts")
+        self._lock = threading.RLock()
+
+    # ------------------------------------------------------------- index
+
+    def _read_index(self) -> Dict:
+        path = os.path.join(self.root, self.INDEX)
+        if not os.path.exists(path):
+            return {"versions": []}
+        with open(path) as f:
+            return json.load(f)
+
+    def _write_index(self, index: Dict):
+        os.makedirs(self.root, exist_ok=True)
+        tmp = os.path.join(self.root, self.INDEX + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(index, f, indent=1)
+        os.replace(tmp, os.path.join(self.root, self.INDEX))
+
+    @staticmethod
+    def _record(entry: Dict) -> ModelRecord:
+        return ModelRecord(
+            tag=entry["tag"], version=int(entry["version"]),
+            cfg=cfg_from_dict(entry["cfg"]),
+            u_scale=float(entry["u_scale"]),
+            metrics=entry.get("metrics") or {},
+            load_cases=entry.get("load_cases") or [],
+            created_at=entry.get("created_at", ""),
+            pinned=bool(entry.get("pinned", False)))
+
+    # ------------------------------------------------------------ queries
+
+    def records(self) -> List[ModelRecord]:
+        """All versions, oldest first."""
+        with self._lock:
+            entries = self._read_index()["versions"]
+        return [self._record(e) for e in entries]
+
+    def tags(self) -> List[str]:
+        return [r.tag for r in self.records()]
+
+    def get(self, tag: str) -> ModelRecord:
+        for r in self.records():
+            if r.tag == tag:
+                return r
+        raise NoModelError(
+            f"no model tagged {tag!r} in registry {self.root} "
+            f"(have {self.tags() or 'none'})")
+
+    def latest(self) -> Optional[ModelRecord]:
+        """The most recently registered version, or None when empty."""
+        recs = self.records()
+        return recs[-1] if recs else None
+
+    def __len__(self) -> int:
+        return len(self.records())
+
+    # ----------------------------------------------------------- mutation
+
+    def register(self, params, cfg: CRONetConfig, u_scale: float, *,
+                 tag: Optional[str] = None, metrics: Optional[Dict] = None,
+                 load_cases: Optional[Sequence[Dict]] = None,
+                 pin: bool = False) -> ModelRecord:
+        """Persist ``params`` as a new immutable version (checkpoint
+        write first, index update second — a crash in between leaves an
+        orphan checkpoint, never a dangling index entry)."""
+        with self._lock:
+            index = self._read_index()
+            version = 1 + max((int(e["version"])
+                               for e in index["versions"]), default=0)
+            tag = tag if tag is not None else f"v{version}"
+            if any(e["tag"] == tag for e in index["versions"]):
+                raise ValueError(f"tag {tag!r} already registered "
+                                 f"(versions are immutable)")
+            extras = {"tag": tag, "u_scale": float(u_scale),
+                      "cfg": cfg_to_dict(cfg)}
+            ckpt.save(self.ckpt_dir, version, {"params": params},
+                      extras=extras)
+            entry = {"tag": tag, "version": version,
+                     "cfg": cfg_to_dict(cfg), "u_scale": float(u_scale),
+                     "metrics": dict(metrics or {}),
+                     "load_cases": list(load_cases or []),
+                     "created_at": datetime.datetime.now(
+                         datetime.timezone.utc).isoformat(),
+                     "pinned": bool(pin)}
+            index["versions"].append(entry)
+            self._write_index(index)
+            return self._record(entry)
+
+    def pin(self, tag: str, pinned: bool = True) -> ModelRecord:
+        """(Un)pin a version: pinned versions survive ``prune``."""
+        with self._lock:
+            index = self._read_index()
+            for e in index["versions"]:
+                if e["tag"] == tag:
+                    e["pinned"] = bool(pinned)
+                    self._write_index(index)
+                    return self._record(e)
+        raise NoModelError(f"no model tagged {tag!r} in {self.root}")
+
+    def prune(self, keep: int = 3) -> List[str]:
+        """Drop all but the newest ``keep`` versions; pinned versions
+        are always kept (and don't count against ``keep``). Returns the
+        pruned tags."""
+        with self._lock:
+            index = self._read_index()
+            pinned = [int(e["version"]) for e in index["versions"]
+                      if e.get("pinned")]
+            removed = set(ckpt.prune_old(self.ckpt_dir, keep=keep,
+                                         pinned=pinned))
+            dropped = [e["tag"] for e in index["versions"]
+                       if int(e["version"]) in removed]
+            index["versions"] = [e for e in index["versions"]
+                                 if int(e["version"]) not in removed]
+            self._write_index(index)
+            return dropped
+
+    # -------------------------------------------------------------- load
+
+    def load(self, tag: Optional[str] = None, dtype: str = "float32"
+             ) -> Tuple[Dict, ModelRecord]:
+        """Materialize a version's params (hash-verified restore through
+        checkpoint/manager.py). ``tag=None`` loads the latest.
+
+        ``dtype`` is the deploy cast: "float32" restores the training
+        master weights, "bfloat16" the paper's deployment precision —
+        the cast happens inside ``restore`` via the like-tree dtypes.
+        """
+        record = self.get(tag) if tag is not None else self.latest()
+        if record is None:
+            raise NoModelError(
+                f"registry {self.root} is empty — train a surrogate and "
+                f"register() it first")
+        from repro.common import abstract_tree
+        from repro.core import cronet    # deferred: keep import cycle out
+        specs = cronet.param_specs(
+            dataclasses.replace(record.cfg, dtype=dtype))
+        like = {"params": abstract_tree(specs)}
+        tree, _ = ckpt.restore(self.ckpt_dir, like, step=record.version)
+        return tree["params"], record

@@ -139,7 +139,7 @@ class _Shard:
         self.volfrac = np.full((L,), 0.5, np.float32)
         self.slot_adm: List[Optional[_Admission]] = [None] * L
         self.slot_iters = [0] * L
-        self.params = jax.device_put(engine.params, device)
+        self.params = None          # device copy, refreshed by activate()
         self.bp = None
         self.load_vol = None
         self.state = None
@@ -160,6 +160,9 @@ class _Shard:
         self.steps = 0
         self.busy_t0 = None
         self.steps_in_window = 0
+        # params are re-put per activation: a swap_params() between
+        # activations (hot model swap) takes effect on the next start
+        self.params = jax.device_put(e.params, self.device)
         self.state = jax.device_put(
             hybrid.init_state(e.cfg, fea2d.stack_problems(
                 [fea2d.idle_problem(e.cfg.nelx, e.cfg.nely)] * L)),
@@ -250,12 +253,20 @@ class TopoServingEngine:
                  shards: Optional[int] = None, preempt: bool = True,
                  starvation_horizon: float = 60.0,
                  tick_time_s: Optional[float] = None,
-                 completed_limit: int = 1024):
+                 completed_limit: int = 1024,
+                 model_tag: Optional[str] = None):
         self._devices = shard_devices(slots, shards)
         self.cfg = cfg
         self.slots = slots
         self.shards = len(self._devices)
         self.shard_width = slots // self.shards
+        self.u_scale = u_scale
+        self.precision = precision
+        self.backend = backend
+        self.model_tag = model_tag
+        self._error_threshold = error_threshold
+        self._verify_every = verify_every
+        self._rmin = rmin
         self.params = hybrid.cast_params(params, precision)
         self.step = hybrid.make_hybrid_step(
             cfg, u_scale, error_threshold, verify_every, rmin, precision,
@@ -372,6 +383,34 @@ class TopoServingEngine:
                 lambda: self._inflight == 0 or self._failure is not None,
                 timeout)
 
+    def swap_params(self, params, u_scale: Optional[float] = None, *,
+                    model_tag: Optional[str] = None):
+        """Replace the engine's model between activations (the hot-swap
+        mechanism behind ``TopoGateway.swap_model``): new fp32 params,
+        optionally a new deployed ``u_scale`` (the compiled step is
+        rebuilt through the ``make_hybrid_step`` cache — same batch
+        shapes, so a swap never recompiles unless u_scale changed), and
+        the ``model_tag`` stamped on every subsequent completion.
+
+        The engine must be quiescent: call ``drain()`` + ``stop()``
+        first (the gateway's ``swap_model`` does exactly that). The next
+        ``submit()``/``start()`` restarts the tick loops, and each
+        shard's ``activate()`` re-uploads the new params to its device.
+        """
+        with self._lifecycle:
+            if self._running and any(t.is_alive() for t in self._threads):
+                raise RuntimeError(
+                    "swap_params on a running engine: drain() and stop() "
+                    "it first (TopoGateway.swap_model does this)")
+            self.params = hybrid.cast_params(params, self.precision)
+            if u_scale is not None and u_scale != self.u_scale:
+                self.u_scale = u_scale
+                self.step = hybrid.make_hybrid_step(
+                    self.cfg, u_scale, self._error_threshold,
+                    self._verify_every, self._rmin, self.precision,
+                    self.backend)
+            self.model_tag = model_tag
+
     # --------------------------------------------------------- streaming
 
     def submit(self, req: TopoRequest,
@@ -438,6 +477,7 @@ class TopoServingEngine:
         req.compliance = float(shard.state.compliance[lane])
         req.cronet_iters = int(shard.state.n_cronet[lane])
         req.fea_iters = int(shard.state.n_fea[lane])
+        req.model_tag = self.model_tag
         t_done = time.time()
         req.latency_s = t_done - adm.first_admit_t
         req.deadline_met = (None if req.deadline is None
@@ -619,5 +659,6 @@ class TopoServingEngine:
             "preemptions": float(self.preemptions),
             "batched_steps": float(self.last_run_steps),
             "total_steps": float(self.total_steps),
+            "model_tag": self.model_tag,
         })
         return stats

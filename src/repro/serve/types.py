@@ -106,6 +106,7 @@ class TopoRequest:
     queue_wait_s: float = 0.0               # submit -> first slot admission
     deadline_met: Optional[bool] = None     # None when no deadline was set
     preemptions: int = 0                    # times this request was parked
+    model_tag: Optional[str] = None         # registry tag of the serving model
 
     @property
     def mesh(self) -> tuple:
@@ -186,6 +187,10 @@ def pool_stats(pool: Sequence[TopoRequest],
     with_dl = [r for r in done if r.deadline is not None]
     hits = sum(1 for r in with_dl if r.deadline_met)
     return {
+        # which registry checkpoints served this pool (a hot swap mid-pool
+        # legitimately shows more than one tag)
+        "model_tags": sorted({r.model_tag for r in done
+                              if r.model_tag is not None}),
         "requests": float(len(done)),
         "problems_per_s": len(done) / max(total, 1e-9),
         "mean_latency_s": float(np.mean([r.latency_s for r in done])

@@ -121,3 +121,68 @@ def test_atomic_no_partial_checkpoint(tmp_path):
     os.makedirs(os.path.join(tmp_path, "step_00000002.tmp"))
     assert ckpt.latest_step(str(tmp_path)) == 1
     restored, _ = ckpt.restore(str(tmp_path), t)
+
+
+# ------------------------------------------------- CRONet surrogate params
+
+
+def _cronet_params(seed=0):
+    import dataclasses
+
+    from repro.configs.cronet import get_cronet_config
+    from repro.core import cronet
+
+    cfg = dataclasses.replace(get_cronet_config("small"),
+                              nelx=12, nely=4, hist_len=3, dtype="float32")
+    return cfg, materialize(cronet.param_specs(cfg), jax.random.key(seed))
+
+
+def test_cronet_params_roundtrip_bitexact(tmp_path):
+    """The real cronet.param_specs tree (nested dicts, conv + fc + rnn
+    leaves) must survive save->restore bitwise — this is what the model
+    registry persists for every trained surrogate."""
+    cfg, params = _cronet_params()
+    ckpt.save(str(tmp_path), 1, {"params": params},
+              extras={"u_scale": 50.0})
+    restored, extras = ckpt.restore(str(tmp_path), {"params": params})
+    assert extras["u_scale"] == 50.0
+    for a, b in zip(jax.tree.leaves(params),
+                    jax.tree.leaves(restored["params"])):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cronet_params_bf16_deploy_cast(tmp_path):
+    """Restoring the fp32 master weights into a bf16 like-tree must equal
+    the serving stack's own deploy cast (hybrid.cast_params) exactly."""
+    from repro.fea import hybrid
+
+    cfg, params = _cronet_params()
+    ckpt.save(str(tmp_path), 1, {"params": params})
+    like = {"params": jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16), params)}
+    restored, _ = ckpt.restore(str(tmp_path), like)
+    want = hybrid.cast_params(params, "bf16")
+    for a, b in zip(jax.tree.leaves(want),
+                    jax.tree.leaves(restored["params"])):
+        assert b.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(a.astype(jnp.float32)),
+                                      np.asarray(b.astype(jnp.float32)))
+
+
+def test_prune_old_keeps_pinned_versions(tmp_path):
+    """prune_old must never delete pinned steps (the registry pins
+    versions serving may still hot-swap back to), and pinned steps must
+    not count against `keep`."""
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, t)
+    removed = ckpt.prune_old(str(tmp_path), keep=2, pinned=(1, 3))
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    assert steps == [1, 3, 4, 5]          # pinned 1,3 + newest 2 unpinned
+    assert removed == [2]
+    # pinned checkpoints stay restorable
+    restored, _ = ckpt.restore(str(tmp_path), t, step=3)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(t["a"]))
