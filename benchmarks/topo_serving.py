@@ -46,6 +46,18 @@ and "block makes submit() wait".
 
     PYTHONPATH=src python -m benchmarks.topo_serving --gateway [--check]
 
+Fleet mode (--fleet) measures the fleet-operations layer: a canary of a
+DELIBERATELY-regressed checkpoint (single-MBB surrogate, 0% acceptance
+on off-distribution loads) against the multi-load-case prod model must
+AUTO-ROLL-BACK on the acceptance regression with zero dropped or
+mis-tagged requests and an overall deadline hit rate within epsilon of
+the no-canary baseline; an evicted + lazily-rebuilt bucket must serve
+densities bitwise-equal to a dedicated engine; and a mesh-specialized
+registry version must win its bucket. ``--fleet --smoke`` gates every
+push; ``--fleet --check`` is the nightly full-budget ladder.
+
+    PYTHONPATH=src python -m benchmarks.topo_serving --fleet --smoke
+
 Smoke mode (--smoke) is the push-gate CI entry: a tiny-mesh gateway run
 (two meshes, a handful of requests, deterministic shed/reject checks)
 plus the training-lifecycle smoke (multi-case dataset -> a few train
@@ -647,6 +659,180 @@ def bench_gateway(size: str = "small", slots: int = 4,
             "blocked_s": blocked_s, **point}
 
 
+def bench_fleet(size: str = "small", n_iter: int = 20,
+                train_cases: int = 12, train_steps: int = 600,
+                threshold: float = 0.15, fraction: float = 0.5,
+                epsilon: float = 0.10, check: bool = True,
+                verbose: bool = True):
+    """Fleet-operations leg (--fleet): the canary safety claim plus the
+    elasticity bitwise claim, end to end on REAL trained models.
+
+    1. Train and register the production surrogate (multi-load-case, the
+       configuration the tier-1 lifecycle gate proves accepts on
+       held-out loads) and a DELIBERATELY-REGRESSED candidate (single-
+       MBB-trajectory surrogate — 0% CRONet acceptance on
+       off-distribution point loads, the PR 4 measured fact).
+    2. Baseline: serve an off-distribution request schedule through a
+       prod-only gateway; record acceptance + deadline hit rate.
+    3. Fleet: same schedule through a gateway canarying the bad
+       checkpoint at ``fraction`` with auto-rollback armed (margin 0:
+       any acceptance regression vs concurrent prod traffic fires).
+       Assert: the rollback FIRES, zero requests dropped, zero
+       mis-tagged (every completion's model_tag == routed_tag), the
+       post-rollback wave is all-prod, and the overall deadline hit
+       rate stays within ``epsilon`` of the no-canary baseline.
+    4. Elasticity: evict the bucket, re-serve a request through the
+       lazily-rebuilt engine, and assert the density is BITWISE-equal
+       to a dedicated never-evicted engine; a mesh-specialized registry
+       version must win its bucket (per-bucket resolution).
+
+    ``--fleet --smoke`` gates every push with the default budget;
+    ``--fleet --check`` is the nightly full ladder (more requests, same
+    assertions)."""
+    import tempfile
+
+    from repro.fea import dataset as dsm
+    from repro.fea import fea2d, train_cronet
+    from repro.serve import ModelRegistry, TopoGateway, TopoRequest
+
+    cfg0, _ = _setup(size, hist_len=0)
+    cfg = dataclasses.replace(cfg0, nelx=12, nely=4, hist_len=3)
+    rng = np.random.default_rng(99)
+    held = [fea2d.point_load_problem(
+        cfg.nelx, cfg.nely,
+        load_node=(int(rng.integers(0, cfg.nelx - 1)), 0),
+        load=(0.0, float(-0.5 - rng.random()))) for _ in range(5)]
+    wave1 = [held[i % len(held)] for i in range(10)]
+    wave2 = [held[i % len(held)] for i in range(4)]
+
+    with tempfile.TemporaryDirectory() as td:
+        reg = ModelRegistry(td)
+        t0 = time.time()
+        multi = dsm.build_dataset(
+            cfg, cases=dsm.sample_load_cases(train_cases, seed=0,
+                                             max_angle_deg=30.0),
+            n_iter=30)
+        train_cronet.train_and_register(
+            cfg, reg, tag="prod", data=multi, steps=train_steps,
+            verbose=False, heldout_frac=0.25, error_threshold=threshold)
+        single = train_cronet.build_dataset(cfg, n_iter=30)
+        train_cronet.train_and_register(
+            cfg, reg, tag="bad", data=single, steps=train_steps,
+            verbose=False)
+        t_train = time.time() - t0
+        if verbose:
+            print(f"trained prod ({train_cases} cases) + bad "
+                  f"(single-MBB) in {t_train:.0f}s")
+
+        def serve_wave(gw, probs, uid0, deadline_s=120.0):
+            futs = [gw.submit(TopoRequest(uid=uid0 + i, problem=p,
+                                          n_iter=n_iter),
+                              deadline_s=deadline_s)
+                    for i, p in enumerate(probs)]
+            return [f.result(timeout=3600) for f in futs]
+
+        def hit_rates(done):
+            iters = sum(r.cronet_iters + r.fea_iters for r in done)
+            accept = sum(r.cronet_iters for r in done) / max(iters, 1)
+            dl = [r for r in done if r.deadline is not None]
+            hit = (sum(1 for r in dl if r.deadline_met) / len(dl)
+                   if dl else 1.0)
+            return accept, hit
+
+        # ---- 2. no-canary baseline
+        gw = TopoGateway.from_registry(reg, tag="prod", slots=2,
+                                       error_threshold=threshold)
+        serve_wave(gw, wave1[:2], uid0=-100)     # warm/compile
+        base = serve_wave(gw, wave1 + wave2, uid0=0)
+        base_accept, base_hit = hit_rates(base)
+        gw.shutdown()
+        if verbose:
+            print(f"  baseline  : acceptance {base_accept:5.1%}  "
+                  f"deadline hit {base_hit:5.1%}")
+
+        # ---- 3. canary of the bad checkpoint, auto-rollback armed
+        gw = TopoGateway.from_registry(reg, tag="prod", slots=2,
+                                       error_threshold=threshold)
+        serve_wave(gw, wave1[:2], uid0=-200)     # warm/compile
+        gw.canary("bad", fraction=fraction, mesh=(cfg.nelx, cfg.nely),
+                  min_requests=3, margin=0.0, auto_rollback=True)
+        fleet1 = serve_wave(gw, wave1, uid0=100)
+        rollbacks = [e for e in gw.events if e.kind == "rollback"]
+        fleet2 = serve_wave(gw, wave2, uid0=200)
+        fleet = fleet1 + fleet2
+        fleet_accept, fleet_hit = hit_rates(fleet)
+        mis = [r for r in fleet if r.model_tag != r.routed_tag]
+        canary_served = sum(1 for r in fleet1 if r.routed_tag == "bad")
+        stats = gw.throughput_stats()
+        if verbose:
+            print(f"  fleet     : acceptance {fleet_accept:5.1%}  "
+                  f"deadline hit {fleet_hit:5.1%}  "
+                  f"({canary_served} canary-served, "
+                  f"{len(rollbacks)} rollback(s), {len(mis)} mis-tagged)")
+            if rollbacks:
+                print(f"  rollback  : {rollbacks[0].reason}")
+
+        # ---- 4a. per-bucket resolution: a mesh-specialized version
+        # wins ITS bucket (prod params under a specialized tag)
+        prod_params, prod_rec = reg.load("prod")
+        reg.register(prod_params, cfg, prod_rec.u_scale, tag="spec-10x6",
+                     mesh=(10, 6))
+        spec_prob = fea2d.point_load_problem(10, 6)
+        spec = gw.submit(TopoRequest(uid=300, problem=spec_prob,
+                                     n_iter=4)).result(timeout=3600)
+
+        # ---- 4b. elasticity: evict + lazy rebuild stays bitwise
+        assert gw.drain(timeout=600)
+        gw.evict_bucket((cfg.nelx, cfg.nely), timeout=600)
+        rebuilt = gw.submit(TopoRequest(uid=301, problem=held[0],
+                                        n_iter=n_iter)).result(timeout=3600)
+        estats = gw.throughput_stats()
+        gw.shutdown()
+
+        from repro.serve import TopoServingEngine
+        eng = TopoServingEngine(cfg, prod_params, prod_rec.u_scale,
+                                slots=2, error_threshold=threshold)
+        ref = eng.run([TopoRequest(uid=301, problem=held[0],
+                                   n_iter=n_iter)])[0]
+        eng.shutdown()
+        bitwise = np.array_equal(rebuilt.density, ref.density)
+        if verbose:
+            print(f"  elasticity: evictions "
+                  f"{estats['evictions']:.0f}, rebuilds "
+                  f"{estats['rebuilds']:.0f}, rebuilt bucket bitwise-"
+                  f"equal: {bitwise}; specialized bucket tag "
+                  f"{spec.model_tag!r}")
+
+        if check:
+            assert base_accept > 0.0, (
+                "prod surrogate never accepted on the off-distribution "
+                "schedule — no acceptance signal to canary against")
+            assert len(rollbacks) >= 1, (
+                "canary of the 0%-acceptance checkpoint never "
+                "auto-rolled back")
+            assert "CRONet hit rate regressed" in rollbacks[0].reason
+            assert canary_served > 0, "canary fraction routed nothing"
+            assert not mis, f"{len(mis)} completions mis-tagged"
+            assert all(r.done for r in fleet), "fleet leg dropped requests"
+            assert all(r.routed_tag == "prod" for r in fleet2), (
+                "post-rollback traffic still reached the canary")
+            assert fleet_hit >= base_hit - epsilon, (
+                f"fleet deadline hit rate {fleet_hit:.0%} fell more than "
+                f"{epsilon:.0%} below the no-canary baseline "
+                f"{base_hit:.0%}")
+            assert stats["rollbacks"] >= 1.0
+            assert spec.model_tag == "spec-10x6", (
+                "mesh-specialized version did not win its bucket")
+            assert bitwise, "rebuilt bucket diverged from dedicated engine"
+            assert estats["evictions"] >= 1.0 \
+                and estats["rebuilds"] >= 1.0
+        return {"t_train_s": t_train, "base_accept": base_accept,
+                "base_hit": base_hit, "fleet_accept": fleet_accept,
+                "fleet_hit": fleet_hit, "rollbacks": len(rollbacks),
+                "canary_served": canary_served,
+                "mis_tagged": len(mis), "bitwise_rebuild": bitwise}
+
+
 def train_smoke():
     """Push-gate training-lifecycle smoke: a tiny-mesh multi-load-case
     dataset (trajectories batched through fea2d.solve_b), a few train
@@ -833,6 +1019,12 @@ def main():
                     help="fast push-gate CI check: tiny-mesh gateway "
                          "serving + deterministic overload-policy checks "
                          "(asserts unconditionally)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="fleet-operations leg: canary auto-rollback on "
+                         "a deliberately-regressed checkpoint + "
+                         "evict/rebuild bitwise + per-bucket "
+                         "resolution. With --smoke: push-gate budget, "
+                         "asserts; with --check: nightly full budget")
     ap.add_argument("--overload-mult", type=float, default=2.5,
                     help="gateway mode: base arrival rate as a multiple "
                          "of measured aggregate capacity")
@@ -848,7 +1040,13 @@ def main():
     ap.add_argument("--loose-mult", type=float, default=4.0,
                     help="loose deadline as a multiple of ideal latency")
     args = ap.parse_args()
-    if args.smoke:
+    if args.fleet:
+        bench_fleet(size=args.size, check=args.check or args.smoke,
+                    train_cases=24 if args.check else 12,
+                    train_steps=1000 if args.check else 600)
+        print("fleet: canary auto-rollback + evict/rebuild bitwise + "
+              "per-bucket resolution OK")
+    elif args.smoke:
         smoke()
     elif args.gateway:
         bench_gateway(size=args.size, slots=args.slots,

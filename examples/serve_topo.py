@@ -23,14 +23,19 @@ Serving modes (same as before):
     buckets every discretization behind one bounded admission queue.
     ``--swap`` additionally hot-swaps the gateway to another registry
     version MID-STREAM (default: re-loads the serving tag) and reports
-    that zero in-flight requests were dropped.
+    that zero in-flight requests were dropped. ``--canary TAG``
+    canaries a registry version on every bucket
+    (``--canary-fraction`` of admissions routed to a canary engine),
+    reports the per-tag acceptance/deadline stats, and PROMOTEs the
+    survivor — or surfaces the auto-rollback, if the canary regressed
+    against the concurrent primary traffic.
 
     PYTHONPATH=src python examples/serve_topo.py --train \
         [--registry experiments/registry] [--train-steps 600] \
         [--train-cases 6] [--size small] [--requests 12] [--slots 4] \
         [--arrival-rate 2.0] [--deadline 6.0] \
         [--meshes 30x10,48x16] [--max-pending 64] [--overload block] \
-        [--swap [TAG]]
+        [--swap [TAG]] [--canary TAG [--canary-fraction 0.25]]
 """
 import argparse
 import sys
@@ -104,6 +109,13 @@ def main():
                          "registry tag mid-stream (no TAG = re-load the "
                          "serving version) and report zero dropped "
                          "in-flight requests")
+    ap.add_argument("--canary", default=None, metavar="TAG",
+                    help="mixed-mesh mode: canary this registry tag on "
+                         "every bucket mid-stream (--canary-fraction of "
+                         "admissions), then report the per-tag stats and "
+                         "promote — or the auto-rollback, if the canary "
+                         "regressed")
+    ap.add_argument("--canary-fraction", type=float, default=0.25)
     args = ap.parse_args()
 
     from repro.configs.cronet import get_cronet_config
@@ -192,6 +204,8 @@ def main():
         label = "engine"
     if args.swap and not args.meshes:
         sys.exit("error: --swap needs the gateway (--meshes AxB,...)")
+    if args.canary and not args.meshes:
+        sys.exit("error: --canary needs the gateway (--meshes AxB,...)")
     deadline = args.deadline if args.deadline > 0 else None
 
     rejected = []
@@ -225,6 +239,38 @@ def main():
         print(f"== hot-swapped to {new_tag!r} in {time.time() - t0:.2f}s "
               f"with {pending_before} request(s) in flight ==")
 
+    def maybe_canary(futs):
+        """--canary: start a canary experiment mid-stream, on every
+        bucket, against the live backlog."""
+        if not args.canary:
+            return
+        for m in meshes:   # explicit targets: buckets may be unbuilt
+            service.canary(args.canary, fraction=args.canary_fraction,
+                           mesh=m)
+        print(f"== canary {args.canary!r} at "
+              f"{args.canary_fraction:.0%} of admissions on "
+              f"{len(meshes)} bucket(s) ==")
+
+    def finish_canary():
+        """Report the experiment outcome: promote a surviving canary,
+        or surface the auto-rollback that already fired."""
+        if not args.canary:
+            return
+        for ev in service.events:
+            if ev.kind == "rollback":
+                print(f"== canary {ev.tag!r} AUTO-ROLLED-BACK on "
+                      f"{ev.mesh[0]}x{ev.mesh[1]}: {ev.reason} ==")
+        live = service.canary_stats()
+        for key, info in live.items():
+            c, p = info["canary"], info["primary"]
+            print(f"== canary[{key}]: {info['routed_canary']} served "
+                  f"(acceptance {c['cronet_hit_rate']:.0%} vs primary "
+                  f"{p['cronet_hit_rate']:.0%}) ==")
+        if live:
+            tags = service.promote()
+            print(f"== promoted {tags} to serving; registry stamped "
+                  f"promoted_at ==")
+
     if args.arrival_rate > 0:
         print(f"== 3. stream at {args.arrival_rate:.2f} req/s onto the "
               f"{label} ({args.slots} slots/mesh, {args.backend} backend, "
@@ -248,19 +294,24 @@ def main():
             try_submit(futs, TopoRequest(uid=i, problem=prob,
                                          n_iter=args.iters),
                        deadline_s=deadline)
+            if args.canary and i == args.requests // 3:
+                maybe_canary(futs)
         maybe_swap(futs)
         done, shed = harvest(futs)
+        finish_canary()
         wall = time.time() - t0
     else:
         print(f"== 3. drain {args.requests} requests through the {label} "
               f"({args.slots} slots/mesh, {args.backend} backend) ==")
         t0 = time.time()
         futs = []
+        maybe_canary(futs)   # before the backlog: the split applies to it
         for i, p in enumerate(probs):
             try_submit(futs, TopoRequest(uid=i, problem=p,
                                          n_iter=args.iters))
         maybe_swap(futs)
         done, shed = harvest(futs)
+        finish_canary()
         wall = time.time() - t0
 
     for r in done:

@@ -22,6 +22,15 @@ Public API (everything else in this package is implementation detail):
     ``gateway.swap_model(tag)`` without dropping queued requests.
   * ``pool_stats`` — the shared metric definitions behind every
     ``throughput_stats()`` (engine-level, per-mesh, and aggregate).
+  * Fleet operations — ``ModelResolver`` (per-bucket checkpoint
+    resolution: mesh-specialized version if registered, else fleet
+    default), ``gateway.canary(tag, fraction, mesh=...)`` +
+    ``promote()``/``rollback()`` with auto-rollback on
+    acceptance/deadline regression (``TagStats`` per tag, typed
+    ``FleetEvent`` log), ``swap_model(tag, mesh=...)`` per-bucket
+    swaps, and pool elasticity (``idle_evict_s`` cold-bucket eviction
+    with lazy bitwise-equal rebuild, ``autoscale`` slot widths from
+    observed arrival rates).
 
 Quickstart (mixed-mesh serving)::
 
@@ -41,10 +50,12 @@ The LM-decode serving half (``server``, ``decode``) is deliberately NOT
 re-exported here: import those modules directly.
 """
 from repro.serve.gateway import TopoGateway
-from repro.serve.registry import ModelRecord, ModelRegistry, NoModelError
+from repro.serve.registry import (ModelRecord, ModelRegistry,
+                                  ModelResolver, NoModelError)
 from repro.serve.topo_service import TopoServingEngine
-from repro.serve.types import (EngineClosed, EngineState, GatewayOverloaded,
-                               OverloadPolicy, QueueFull, RequestShed,
+from repro.serve.types import (EngineClosed, EngineState, FleetEvent,
+                               GatewayOverloaded, OverloadPolicy,
+                               QueueFull, RequestShed, TagStats,
                                TopoFuture, TopoRequest, pool_stats)
 
 __all__ = [
@@ -52,6 +63,7 @@ __all__ = [
     "TopoServingEngine",
     "ModelRegistry",
     "ModelRecord",
+    "ModelResolver",
     "NoModelError",
     "TopoRequest",
     "TopoFuture",
@@ -61,5 +73,7 @@ __all__ = [
     "RequestShed",
     "EngineState",
     "EngineClosed",
+    "FleetEvent",
+    "TagStats",
     "pool_stats",
 ]

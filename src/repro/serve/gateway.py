@@ -32,6 +32,42 @@ monitored structures, each with its own mesh, one stream of load events.
     contract (each density equal to a standalone single-mesh run) holds
     verbatim through the gateway.
 
+Fleet operations — the per-bucket model lifecycle under live traffic:
+
+  * PER-BUCKET MODEL RESOLUTION. A registry-backed gateway resolves
+    each new bucket's checkpoint through a ``registry.ModelResolver``:
+    an explicit per-bucket pin (``swap_model(tag, mesh=...)``) wins,
+    then the newest MESH-SPECIALIZED registry version for that mesh
+    (``register(..., mesh=...)`` — per-discretization fine-tunes, cf.
+    FE-CNN), then the fleet default. ``swap_model(tag)`` with no mesh
+    is the fleet rollout (moves every built bucket, clears pins, sets
+    the default future buckets inherit); with an EMPTY pool it records
+    the pending tag, applied on first bucket build. Completions and
+    ``pool_stats`` carry ``model_tag`` per bucket.
+  * CANARY ROUTING. ``canary(tag, fraction, mesh=...)`` deterministically
+    routes ``fraction`` of a bucket's admissions (a rollover
+    accumulator — exact to within one request, no RNG) to a canary
+    engine serving ``tag``, SHARING the bucket's in-flight depth budget
+    (the ready gate sums the pair). Per-tag ``TagStats`` accumulate on
+    both sides of the split; ``promote()`` graduates the canary into
+    the bucket's serving model (drain + swap, reusing the hot-swap
+    machinery — zero dropped requests) and auto-ROLLBACK fires when the
+    canary's CRONet acceptance rate or deadline hit rate regresses
+    beyond ``margin`` vs the concurrent primary traffic: routing
+    reverts instantly, the canary engine drains in the background, and
+    nothing in flight is dropped or mis-tagged (every completion's
+    ``model_tag`` equals its ``routed_tag``).
+  * POOL ELASTICITY. With ``idle_evict_s`` set, a bucket that has been
+    cold (no queued, in-flight, or arriving work) past the horizon is
+    EVICTED — engine shut down, stats retired into the gateway's
+    history — and lazily REBUILT on next sight of the mesh, bitwise
+    contract intact (the mesh-template and compiled-step caches make
+    the rebuild cheap). With ``autoscale=True`` a (re)built bucket's
+    slot width follows its observed arrival rate
+    (``scheduler.target_slots``), so hot meshes get wide engines and
+    cold ones the minimum width. Control-plane transitions land in
+    ``gateway.events`` as typed ``FleetEvent`` records.
+
 Lifecycle mirrors the engine's explicit state machine: NEW -> RUNNING
 (first submit) -> CLOSED (``shutdown()``, which drains the queue, then
 closes every engine); ``submit()`` on a closed gateway raises
@@ -39,17 +75,20 @@ closes every engine); ``submit()`` on a closed gateway raises
 """
 from __future__ import annotations
 
+import collections
+import contextlib
 import dataclasses
 import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from repro.configs.cronet import CRONetConfig
-from repro.serve.scheduler import BoundedEDFScheduler
+from repro.serve.registry import ModelResolver, NoModelError
+from repro.serve.scheduler import BoundedEDFScheduler, target_slots
 from repro.serve.topo_service import TopoServingEngine
-from repro.serve.types import (EngineClosed, EngineState, OverloadPolicy,
-                               RequestShed, TopoFuture, TopoRequest,
-                               pool_stats)
+from repro.serve.types import (EngineClosed, EngineState, FleetEvent,
+                               OverloadPolicy, RequestShed, TagStats,
+                               TopoFuture, TopoRequest, pool_stats)
 
 __all__ = ["TopoGateway"]
 
@@ -58,6 +97,56 @@ Mesh = Tuple[int, int]
 
 def _mesh_str(mesh: Mesh) -> str:
     return f"{mesh[0]}x{mesh[1]}"
+
+
+@dataclasses.dataclass
+class _Canary:
+    """One bucket's live canary experiment: the candidate model, the
+    deterministic traffic split, and the per-tag evidence the
+    promote/rollback decision is based on."""
+    mesh: Mesh
+    tag: Optional[str]
+    params: object
+    u_scale: Optional[float]
+    fraction: float
+    min_requests: int
+    margin: float
+    auto_rollback: bool
+    engine: Optional[object] = None      # lazily-built canary engine
+    active: bool = True                  # False: no new canary routes
+    acc: float = 0.0                     # fraction rollover accumulator
+    routed_canary: int = 0               # ground-truth routing counts
+    routed_primary: int = 0
+    canary_stats: TagStats = dataclasses.field(default_factory=TagStats)
+    primary_stats: TagStats = dataclasses.field(default_factory=TagStats)
+
+    def regression(self) -> Optional[str]:
+        """The auto-rollback decision: a human-readable reason when the
+        canary's acceptance or deadline metric has regressed beyond
+        ``margin`` vs the CONCURRENT primary traffic (same bucket, same
+        window), or None. Requires ``min_requests`` completions on BOTH
+        sides — a verdict needs evidence, not noise."""
+        c, p = self.canary_stats, self.primary_stats
+        if (c.completed < self.min_requests
+                or p.completed < self.min_requests):
+            return None
+        if c.cronet_hit_rate < p.cronet_hit_rate - self.margin:
+            return (f"CRONet hit rate regressed: canary "
+                    f"{c.cronet_hit_rate:.1%} < primary "
+                    f"{p.cronet_hit_rate:.1%} - margin {self.margin:g}")
+        if c.deadline_hit_rate < p.deadline_hit_rate - self.margin:
+            return (f"deadline hit rate regressed: canary "
+                    f"{c.deadline_hit_rate:.1%} < primary "
+                    f"{p.deadline_hit_rate:.1%} - margin {self.margin:g}")
+        return None
+
+    def describe(self) -> Dict:
+        return {"tag": self.tag, "fraction": self.fraction,
+                "active": self.active,
+                "routed_canary": self.routed_canary,
+                "routed_primary": self.routed_primary,
+                "canary": self.canary_stats.snapshot(),
+                "primary": self.primary_stats.snapshot()}
 
 
 class TopoGateway:
@@ -75,24 +164,45 @@ class TopoGateway:
         baseline the SHED policy is measured against).
     overload : ``OverloadPolicy`` or its string value — what a full
         queue does with the next submit.
-    engine_depth : max in-flight requests per engine before the
-        dispatcher stops forwarding to it (default ``2 * slots``: enough
-        to keep every slot fed plus a re-fill margin, small enough that
-        EDF ordering decisions stay at the gateway where all meshes are
-        visible).
+    engine_depth : max in-flight requests per BUCKET (a canaried
+        bucket's primary + canary engines share it) before the
+        dispatcher stops forwarding to it (default ``2 * slots`` of the
+        bucket's engine: enough to keep every slot fed plus a re-fill
+        margin, small enough that EDF ordering decisions stay at the
+        gateway where all meshes are visible).
     block_timeout : BLOCK policy only — seconds a full-queue submit may
         wait before raising ``QueueFull`` (``None`` = wait forever).
     engine_factory : override engine construction entirely,
         ``(nelx, nely) -> TopoServingEngine`` (tests inject slow or
-        pre-built engines through this).
+        pre-built engines through this). A factory-backed gateway skips
+        registry resolution and autoscaling for primary buckets — the
+        factory owns those decisions.
     registry, model_tag : resolve the served model from a
         ``serve.registry.ModelRegistry`` instead of passing params
         explicitly: ``cfg``/``params``/``u_scale`` may then be omitted
         (they come from the checkpoint record; ``model_tag=None`` means
-        latest). A registry-backed gateway can later
-        ``swap_model(tag)`` to hot-swap every bucket to another
-        version. ``TopoGateway.from_registry`` is the concise spelling.
+        latest). A registry-backed gateway can ``swap_model(tag)``
+        (fleet-wide or per bucket with ``mesh=``), run ``canary(...)``
+        experiments, and leases every tag it serves so
+        ``registry.prune()`` never deletes a live version.
+        ``TopoGateway.from_registry`` is the concise spelling.
+    idle_evict_s : cold-bucket horizon in seconds — a bucket idle (no
+        queued/in-flight/arriving work) longer than this is evicted and
+        lazily rebuilt on next sight. ``None`` (default) disables
+        eviction (the pool only grows, the pre-fleet behaviour).
+    autoscale, min_slots, max_slots, scale_rate : slot-width
+        autoscaling for (re)built buckets: width follows the bucket's
+        observed arrival rate via ``scheduler.target_slots(rate,
+        scale_rate, min_slots, max_slots)``. ``max_slots`` defaults to
+        ``slots``; with ``autoscale=False`` (default) every bucket gets
+        exactly ``slots``.
+    canary_slots : slot width for canary engines (default
+        ``min_slots`` — a canary serves a fraction of the bucket's
+        traffic and shares its depth budget, so it starts narrow).
     """
+
+    RETIRED_LIMIT = 4096       # completed requests kept from dead engines
+    EVENT_LIMIT = 256          # FleetEvent ring depth
 
     def __init__(self, cfg: Optional[CRONetConfig] = None, params=None,
                  u_scale: Optional[float] = None, *,
@@ -104,14 +214,25 @@ class TopoGateway:
                  engine_factory: Optional[
                      Callable[[int, int], TopoServingEngine]] = None,
                  registry=None, model_tag: Optional[str] = None,
+                 idle_evict_s: Optional[float] = None,
+                 autoscale: bool = False, min_slots: int = 2,
+                 max_slots: Optional[int] = None, scale_rate: float = 1.0,
+                 canary_slots: Optional[int] = None,
                  **engine_kwargs):
         self.registry = registry
         self.model_tag = model_tag
+        self._resolver: Optional[ModelResolver] = None
+        record = None
         if params is None and registry is not None:
             params, record = registry.load(model_tag)
             cfg = cfg if cfg is not None else record.cfg
             u_scale = u_scale if u_scale is not None else record.u_scale
             self.model_tag = record.tag
+        if registry is not None:
+            self._resolver = ModelResolver(registry,
+                                           default_tag=self.model_tag)
+            if record is not None:
+                self._resolver.prime(record.tag, params, record)
         if engine_factory is None and (cfg is None or params is None
                                        or u_scale is None):
             # a caller-supplied factory owns engine construction, so the
@@ -124,12 +245,20 @@ class TopoGateway:
         self.params = params
         self.u_scale = u_scale
         self.slots = slots
+        self._auto_depth = engine_depth is None
         self.engine_depth = (engine_depth if engine_depth is not None
                              else 2 * slots)
         if self.engine_depth < 1:
             raise ValueError(f"engine_depth must be >= 1, "
                              f"got {self.engine_depth}")
         self.block_timeout = block_timeout
+        self.idle_evict_s = idle_evict_s
+        self.autoscale = autoscale
+        self.min_slots = min_slots
+        self.max_slots = max_slots if max_slots is not None else slots
+        self.scale_rate = scale_rate
+        self.canary_slots = (canary_slots if canary_slots is not None
+                             else min_slots)
         self._engine_kwargs = dict(engine_kwargs)
         self._owns_engines = engine_factory is None
         self._engine_factory = engine_factory or self._default_factory
@@ -143,24 +272,185 @@ class TopoGateway:
         self._closed = False
         self._inflight = 0           # offered and not yet resolved/shed
         self._failure: Optional[BaseException] = None
-        self._swapping = False       # swap_model() gates forwarding
+        self._swapping = False       # control-plane ops gate forwarding
         self._dispatch_busy = False  # dispatcher holds a popped entry
+        self._maintaining = False    # dispatcher is inside _maintain()
         self._swap_count = 0
+        # ---- fleet-operations state (dispatcher-owned unless noted)
+        self._bucket_models: Dict[Mesh, Tuple] = {}   # pin: (tag, p, us)
+        self._bucket_tags: Dict[Mesh, Optional[str]] = {}
+        self._canaries: Dict[Mesh, _Canary] = {}
+        self._dissolving: List[_Canary] = []   # rolled back, draining
+        self._arrivals: Dict[Mesh, collections.deque] = {}  # submit times
+        self._last_seen: Dict[Mesh, float] = {}
+        self._evicted_meshes = set()
+        self._retired: collections.deque = collections.deque(
+            maxlen=self.RETIRED_LIMIT)
+        self._retired_preemptions = 0
+        self._retired_steps = 0
+        self._evictions = 0
+        self._rebuilds = 0
+        self._rollbacks = 0
+        self._promotions = 0
+        self._lease_counts: Dict[str, int] = {}
+        self.events: collections.deque = collections.deque(
+            maxlen=self.EVENT_LIMIT)
+        self._lease(self.model_tag)
 
     @classmethod
     def from_registry(cls, registry, tag: Optional[str] = None,
                       **kwargs) -> "TopoGateway":
         """Build a gateway serving a registry checkpoint (``tag=None``
-        = latest); the registry stays attached for ``swap_model``."""
+        = latest); the registry stays attached for ``swap_model`` /
+        ``canary`` and per-bucket resolution."""
         return cls(registry=registry, model_tag=tag, **kwargs)
+
+    # ------------------------------------------------------------ leases
+
+    def _lease(self, tag: Optional[str]):
+        """Acquire a live-version lease so ``registry.prune`` defers the
+        tag; no-op without a registry or for explicit-params models.
+        The registry read stays outside the queue lock; only the
+        refcount mirror is guarded (dispatcher and user threads both
+        lease)."""
+        if self.registry is None or not tag:
+            return
+        try:
+            self.registry.acquire(tag)
+        except NoModelError:
+            return   # explicit params under an unregistered tag
+        with self._queue.cond:
+            self._lease_counts[tag] = self._lease_counts.get(tag, 0) + 1
+
+    def _unlease(self, tag: Optional[str]):
+        if self.registry is None or not tag:
+            return
+        with self._queue.cond:
+            held = self._lease_counts.get(tag, 0) > 0
+            if held:
+                self._lease_counts[tag] -= 1
+                if not self._lease_counts[tag]:
+                    del self._lease_counts[tag]
+        if held:
+            self.registry.release(tag)
+
+    def _release_all_leases(self):
+        if self.registry is None:
+            return
+        with self._queue.cond:
+            held, self._lease_counts = dict(self._lease_counts), {}
+        for tag, n in held.items():
+            for _ in range(n):
+                self.registry.release(tag)
 
     # ------------------------------------------------------------ engines
 
+    @staticmethod
+    def _mesh_arg(mesh) -> Mesh:
+        """Normalize a mesh argument: ``(nelx, nely)`` or ``"AxB"``."""
+        if isinstance(mesh, str):
+            a, b = mesh.lower().split("x")
+            return (int(a), int(b))
+        return (int(mesh[0]), int(mesh[1]))
+
+    def _arch_compatible(self, other: CRONetConfig) -> bool:
+        """May a checkpoint trained under ``other`` serve through this
+        gateway's compiled steps? Mesh/name/dtype aside (those are
+        per-bucket), the architectures must match."""
+        want = dataclasses.replace(other, nelx=self.cfg.nelx,
+                                   nely=self.cfg.nely, name=self.cfg.name,
+                                   dtype=self.cfg.dtype)
+        return want == self.cfg
+
+    def _checkpoint_for(self, tag: Optional[str], params,
+                        u_scale: Optional[float]):
+        """Resolve a (tag, params, u_scale) triple for swap/canary: from
+        explicit arrays, or from the registry — failing fast (BEFORE any
+        bucket drains) on an architecture mismatch."""
+        if params is not None:
+            return tag, params, u_scale
+        if self.registry is None:
+            raise ValueError("swap_model/canary need explicit params "
+                             "when the gateway has no registry attached")
+        rec = (self.registry.get(tag) if tag is not None
+               else self.registry.latest())
+        if rec is None:
+            raise NoModelError(
+                f"registry {self.registry.root} is empty — train a "
+                f"surrogate and register() it first")
+        if not self._arch_compatible(rec.cfg):
+            raise ValueError(
+                f"checkpoint {rec.tag!r} was trained under an "
+                f"incompatible config ({rec.cfg.name}: e.g. "
+                f"hist_len={rec.cfg.hist_len} vs "
+                f"{self.cfg.hist_len}); build a new gateway for it")
+        params, rec = self._resolver.load(rec.tag)
+        return rec.tag, params, (u_scale if u_scale is not None
+                                 else rec.u_scale)
+
+    def _observed_rate(self, mesh: Mesh,
+                       now: Optional[float] = None) -> float:
+        """Observed arrival rate (requests/s) for a bucket over its
+        recent submit window; 0.0 with fewer than two arrivals. The
+        window stretches to ``now``, so a bucket that stopped arriving
+        decays toward 0 instead of remembering its last burst."""
+        d = self._arrivals.get(mesh)
+        if not d or len(d) < 2:
+            return 0.0
+        now = time.time() if now is None else now
+        return len(d) / max(now - d[0], 1e-9)
+
+    def _slots_for(self, mesh: Mesh) -> int:
+        if not self.autoscale:
+            return self.slots
+        return target_slots(self._observed_rate(mesh), self.scale_rate,
+                            self.min_slots, self.max_slots)
+
+    def _depth_for(self, mesh: Mesh) -> int:
+        """Per-bucket in-flight budget: follows the bucket engine's
+        actual slot width under the auto default (an autoscaled narrow
+        bucket should not queue 2x the FLEET width into its engine)."""
+        if self._auto_depth:
+            eng = self._engines.get(mesh)
+            if eng is not None:
+                return 2 * getattr(eng, "slots", self.slots)
+        return self.engine_depth
+
+    def _resolve_bucket_model(self, mesh: Mesh):
+        """(tag, params, u_scale) for a NEW primary engine of ``mesh``:
+        explicit per-bucket pin > mesh-specialized registry version
+        (architecture-compatible ones only) > fleet default."""
+        pin = self._bucket_models.get(mesh)
+        if pin is not None:
+            tag, params, u_scale = pin
+            if params is None:      # tag pinned before params were loaded
+                params, rec = self._resolver.load(tag)
+                u_scale = rec.u_scale if u_scale is None else u_scale
+                self._bucket_models[mesh] = (tag, params, u_scale)
+            if u_scale is None:
+                # an explicit-params pin without u_scale: the live swap
+                # kept the engine's old scale, so a rebuild must too —
+                # the engine ctor needs a real float
+                u_scale = self.u_scale
+            return tag, params, u_scale
+        if self._resolver is not None:
+            try:
+                rec = self._resolver.resolve(mesh)
+            except NoModelError:
+                rec = None
+            if (rec is not None and rec.tag != self.model_tag
+                    and self._arch_compatible(rec.cfg)):
+                params, rec = self._resolver.load(rec.tag)
+                return rec.tag, params, rec.u_scale
+        return self.model_tag, self.params, self.u_scale
+
     def _default_factory(self, nelx: int, nely: int) -> TopoServingEngine:
+        mesh = (nelx, nely)
+        tag, params, u_scale = self._resolve_bucket_model(mesh)
         cfg = dataclasses.replace(self.cfg, nelx=nelx, nely=nely)
-        return TopoServingEngine(cfg, self.params, self.u_scale,
-                                 slots=self.slots,
-                                 model_tag=self.model_tag,
+        return TopoServingEngine(cfg, params, u_scale,
+                                 slots=self._slots_for(mesh),
+                                 model_tag=tag,
                                  **self._engine_kwargs)
 
     def _engine_for(self, mesh: Mesh) -> TopoServingEngine:
@@ -174,12 +464,32 @@ class TopoGateway:
                     f"engine_factory built a {eng.cfg.nelx}x{eng.cfg.nely} "
                     f"engine for mesh {_mesh_str(mesh)}")
             self._engines[mesh] = eng
+            tag = getattr(eng, "model_tag", None)
+            self._bucket_tags[mesh] = tag
+            self._lease(tag)
+            if mesh in self._evicted_meshes:
+                # lazy rebuild after a cold eviction: same model (the
+                # bucket pin / resolver reproduces it), possibly a new
+                # autoscaled width — the bitwise contract is width-
+                # independent, so densities stay equal either way
+                self._evicted_meshes.discard(mesh)
+                self._rebuilds += 1
+                self._record_event(
+                    "rebuild", mesh, tag,
+                    details={"slots": getattr(eng, "slots", None)})
         return eng
 
     @property
     def engines(self) -> Dict[Mesh, TopoServingEngine]:
         """Live view of the per-mesh engine pool (read-only by contract)."""
         return self._engines
+
+    def _record_event(self, kind: str, mesh: Optional[Mesh],
+                      tag: Optional[str], reason: str = "",
+                      details: Optional[Dict] = None):
+        self.events.append(FleetEvent(kind=kind, mesh=mesh, tag=tag,
+                                      t=time.time(), reason=reason,
+                                      details=details or {}))
 
     # ---------------------------------------------------------- lifecycle
 
@@ -220,16 +530,30 @@ class TopoGateway:
                                             daemon=True)
             self._thread.start()
 
+    def _all_engines(self) -> List:
+        """Every engine the gateway currently owns a handle to: the
+        primary pool plus live/draining canary engines (snapshotted
+        under the queue lock — the dispatcher's maintenance pass
+        mutates these collections concurrently)."""
+        with self._queue.cond:
+            engines = list(self._engines.values())
+            for ctrl in (list(self._canaries.values())
+                         + list(self._dissolving)):
+                if ctrl.engine is not None:
+                    engines.append(ctrl.engine)
+        return engines
+
     def shutdown(self, wait: bool = True):
         """Terminal: stop accepting submissions (later ``submit()``
         raises ``EngineClosed``), let the dispatcher drain the admission
-        queue, then close the per-mesh engines. In-flight work
-        completes; BLOCKed submitters are woken with ``EngineClosed``.
-        With ``wait=False`` the drain happens asynchronously on the
-        dispatcher thread, which then closes the engines the gateway
-        built itself — engines from a caller-supplied
-        ``engine_factory`` are only closed by a ``wait=True`` shutdown
-        (the factory's owner may be sharing them)."""
+        queue, then close the per-mesh engines (canary engines
+        included). In-flight work completes; BLOCKed submitters are
+        woken with ``EngineClosed``. With ``wait=False`` the drain
+        happens asynchronously on the dispatcher thread, which then
+        closes the engines the gateway built itself — engines from a
+        caller-supplied ``engine_factory`` are only closed by a
+        ``wait=True`` shutdown (the factory's owner may be sharing
+        them)."""
         with self._lifecycle:
             if self._closed and self._thread is None:
                 return
@@ -242,8 +566,9 @@ class TopoGateway:
         if wait:
             if thread is not None:
                 thread.join()
-            for eng in self._engines.values():
+            for eng in self._all_engines():
                 eng.shutdown(wait=True)
+            self._release_all_leases()
             with self._lifecycle:
                 self._running = False
                 self._thread = None
@@ -256,85 +581,467 @@ class TopoGateway:
                 lambda: self._inflight == 0 or self._failure is not None,
                 timeout)
 
-    # --------------------------------------------------------- model swap
+    # ------------------------------------------------------ control gate
 
-    def swap_model(self, tag: Optional[str] = None, *, params=None,
-                   u_scale: Optional[float] = None,
-                   timeout: Optional[float] = None) -> str:
-        """Hot-swap every per-mesh bucket to another checkpoint without
-        dropping a single queued or in-flight request.
-
-        The new model comes from the attached registry (``tag``; None =
-        latest) or from explicit ``params``/``u_scale``. Sequence, per
-        the engines' stop()-restartable lifecycle:
-
-        1. gate the dispatcher: ``_ready`` goes False for everything, so
-           queued requests WAIT at the gateway (the bounded queue and
-           overload policy still apply to new submits);
-        2. wait out the entry the dispatcher may already hold
-           (``_dispatch_busy`` handshake), then ``drain()`` each bucket
-           — in-flight requests complete on the old model;
-        3. ``stop()`` + ``swap_params()`` each bucket (params re-upload
-           happens in the shard ``activate()`` on restart);
-        4. un-gate: buckets restart lazily as the backlog forwards.
-
-        Returns the new model tag. Raises ``TimeoutError`` if a bucket
-        does not drain within ``timeout``; buckets swapped before the
-        timeout keep the NEW model, the rest keep the old one, and
-        ``gateway.model_tag`` still names the old version — re-invoke
-        ``swap_model`` to finish the rollout (already-swapped buckets
-        just swap again)."""
-        if self._closed:
-            raise EngineClosed("gateway is shut down")
-        new_tag = tag
-        if params is None:
-            if self.registry is None:
-                raise ValueError("swap_model needs explicit params when "
-                                 "the gateway has no registry attached")
-            params, record = self.registry.load(tag)
-            # fail fast BEFORE draining: the buckets' compiled steps were
-            # built from self.cfg, so a checkpoint trained under a
-            # different architecture (mesh aside — that's per-bucket)
-            # would crash the shard tick loops after the swap
-            want = dataclasses.replace(record.cfg, nelx=self.cfg.nelx,
-                                       nely=self.cfg.nely,
-                                       name=self.cfg.name,
-                                       dtype=self.cfg.dtype)
-            if want != self.cfg:
-                raise ValueError(
-                    f"checkpoint {record.tag!r} was trained under an "
-                    f"incompatible config ({record.cfg.name}: e.g. "
-                    f"hist_len={record.cfg.hist_len} vs "
-                    f"{self.cfg.hist_len}); build a new gateway for it")
-            u_scale = record.u_scale if u_scale is None else u_scale
-            new_tag = record.tag
+    @contextlib.contextmanager
+    def _gate(self, timeout: Optional[float]):
+        """Quiesce the dispatcher for a control-plane operation (swap /
+        promote / rollback / forced evict): gate forwarding (``_ready``
+        goes False for everything — queued requests WAIT, none are
+        dropped; the bounded queue and overload policy still apply to
+        new submits), then wait out an entry the dispatcher may already
+        hold and any maintenance pass in progress."""
         with self._queue.cond:
             if self._swapping:
-                raise RuntimeError("a model swap is already in progress")
+                raise RuntimeError(
+                    "another control-plane operation (swap/promote/"
+                    "rollback/evict) is already in progress")
             self._swapping = True
             if not self._queue.cond.wait_for(
-                    lambda: not self._dispatch_busy, timeout):
+                    lambda: not (self._dispatch_busy or self._maintaining),
+                    timeout):
                 self._swapping = False
                 self._queue.cond.notify_all()
-                raise TimeoutError("dispatcher did not quiesce for swap")
+                raise TimeoutError("dispatcher did not quiesce")
         try:
-            for mesh, eng in list(self._engines.items()):
-                if not eng.drain(timeout):
-                    raise TimeoutError(
-                        f"bucket {_mesh_str(mesh)} did not drain within "
-                        f"{timeout}s; old model still serving")
-                eng.stop(wait=True)
-                eng.swap_params(params, u_scale=u_scale, model_tag=new_tag)
-            self.params = params
-            if u_scale is not None:
-                self.u_scale = u_scale
-            self.model_tag = new_tag
-            self._swap_count += 1
+            yield
         finally:
             with self._queue.cond:
                 self._swapping = False
                 self._queue.cond.notify_all()   # resume forwarding
+
+    # --------------------------------------------------------- model swap
+
+    def _swap_bucket(self, mesh: Mesh, eng, params,
+                     u_scale: Optional[float], new_tag: Optional[str],
+                     timeout: Optional[float]):
+        """Drain/stop/swap/restart one bucket (dispatcher quiesced by
+        the caller's gate; the engine restarts lazily on next forward)."""
+        if not eng.drain(timeout):
+            raise TimeoutError(
+                f"bucket {_mesh_str(mesh)} did not drain within "
+                f"{timeout}s; old model still serving")
+        eng.stop(wait=True)
+        eng.swap_params(params, u_scale=u_scale, model_tag=new_tag)
+        old = self._bucket_tags.get(mesh)
+        if old != new_tag:
+            self._unlease(old)
+            self._lease(new_tag)
+        self._bucket_tags[mesh] = new_tag
+
+    def swap_model(self, tag: Optional[str] = None, *, mesh=None,
+                   params=None, u_scale: Optional[float] = None,
+                   timeout: Optional[float] = None) -> str:
+        """Hot-swap bucket(s) to another checkpoint without dropping a
+        single queued or in-flight request.
+
+        The new model comes from the attached registry (``tag``; None =
+        latest) or from explicit ``params``/``u_scale``. With
+        ``mesh=None`` this is the FLEET rollout: every built bucket is
+        moved, per-bucket pins are cleared, and the new tag becomes the
+        fleet default future buckets inherit — on an EMPTY pool that is
+        the whole effect: the pending tag is recorded and applied on
+        first bucket build (nothing is silently ignored). With
+        ``mesh=(nelx, nely)`` (or ``"AxB"``) only that bucket swaps and
+        stays PINNED to the tag — built or not (an unbuilt bucket
+        applies the pin when first sighted). A bucket with an active
+        canary refuses to swap (``promote()`` or ``rollback()`` first).
+
+        Sequence per bucket, per the engines' stop()-restartable
+        lifecycle: gate the dispatcher, wait out the in-flight entry
+        handshake, ``drain()`` (in-flight requests complete on the old
+        model), ``stop()`` + ``swap_params()`` (params re-upload happens
+        in the shard ``activate()`` on restart), un-gate — buckets
+        restart lazily as the backlog forwards.
+
+        Returns the new model tag. Raises ``TimeoutError`` if a bucket
+        does not drain within ``timeout``; buckets swapped before the
+        timeout keep the NEW model, the rest keep the old one — re-invoke
+        ``swap_model`` to finish the rollout (already-swapped buckets
+        just swap again)."""
+        if self._closed:
+            raise EngineClosed("gateway is shut down")
+        new_tag, params, u_scale = self._checkpoint_for(tag, params,
+                                                        u_scale)
+        if mesh is not None:
+            mesh = self._mesh_arg(mesh)
+        with self._gate(timeout):
+            conflicted = ([mesh] if mesh in self._canaries
+                          else list(self._canaries) if mesh is None
+                          else [])
+            if conflicted:
+                raise RuntimeError(
+                    f"bucket(s) "
+                    f"{', '.join(_mesh_str(m) for m in conflicted)} have "
+                    f"an active canary; promote() or rollback() first")
+            targets = [mesh] if mesh is not None else list(self._engines)
+            for m in targets:
+                eng = self._engines.get(m)
+                if eng is None:
+                    continue       # unbuilt bucket: the pin below covers it
+                self._swap_bucket(m, eng, params, u_scale, new_tag,
+                                  timeout)
+            if mesh is None:
+                self.params = params
+                if u_scale is not None:
+                    self.u_scale = u_scale
+                old = self.model_tag
+                self.model_tag = new_tag
+                if self._resolver is not None:
+                    self._resolver.default_tag = new_tag
+                if old != new_tag:
+                    self._unlease(old)
+                    self._lease(new_tag)
+                self._bucket_models.clear()
+            else:
+                self._bucket_models[mesh] = (new_tag, params, u_scale)
+            self._swap_count += 1
+            self._record_event("swap", mesh, new_tag)
         return new_tag
+
+    # ------------------------------------------------------------- canary
+
+    def canary(self, tag: Optional[str] = None, *, fraction: float = 0.1,
+               mesh=None, params=None, u_scale: Optional[float] = None,
+               min_requests: int = 8, margin: float = 0.05,
+               auto_rollback: bool = True) -> List[Mesh]:
+        """Start routing ``fraction`` of a bucket's admissions to a
+        canary engine serving ``tag`` (from the registry, or explicit
+        ``params``/``u_scale``). ``mesh=None`` canaries every CURRENT
+        bucket (one controller each); ``mesh=(nelx, nely)`` targets one
+        bucket, built or not. Returns the canaried meshes.
+
+        The split is a deterministic rollover accumulator — over any
+        window of N routed admissions the canary count is within one of
+        ``fraction * N``. The canary engine shares the bucket's
+        in-flight depth budget and is built lazily on the first canary
+        route. Per-tag stats accumulate for both sides; with
+        ``auto_rollback`` (default) the canary is rolled back the
+        moment its CRONet acceptance rate or deadline hit rate falls
+        more than ``margin`` below the concurrent primary traffic
+        (``min_requests`` completions on each side first). End the
+        experiment with ``promote()`` or ``rollback()``."""
+        if self._closed:
+            raise EngineClosed("gateway is shut down")
+        if not (0.0 < fraction <= 1.0):
+            raise ValueError(f"fraction must be in (0, 1], got {fraction}")
+        new_tag, params, u_scale = self._checkpoint_for(tag, params,
+                                                        u_scale)
+        if new_tag is None:
+            # per-tag stats, completion stamping, and the rollback
+            # verdict all key on the tag — an anonymous canary would be
+            # unobservable (and unattributable) by design
+            raise ValueError("canary needs a tag (explicit-params "
+                             "canaries included)")
+        if mesh is not None:
+            meshes = [self._mesh_arg(mesh)]
+        else:
+            meshes = list(self._engines)
+            if not meshes:
+                raise RuntimeError(
+                    "no buckets to canary (pool is empty); pass "
+                    "mesh=(nelx, nely) to target a future bucket")
+        with self._queue.cond:
+            if self._swapping:
+                # a swap/promote/rollback/evict is mid-flight: installing
+                # a controller now would defeat its canary-conflict check
+                raise RuntimeError(
+                    "a control-plane operation (swap/promote/rollback/"
+                    "evict) is in progress; retry canary() after it")
+            taken = [m for m in meshes if m in self._canaries]
+            if taken:
+                raise RuntimeError(
+                    f"bucket(s) {', '.join(_mesh_str(m) for m in taken)} "
+                    f"already have an active canary")
+            for m in meshes:
+                self._canaries[m] = _Canary(
+                    mesh=m, tag=new_tag, params=params, u_scale=u_scale,
+                    fraction=fraction, min_requests=min_requests,
+                    margin=margin, auto_rollback=auto_rollback)
+                self._record_event("canary-start", m, new_tag,
+                                   details={"fraction": fraction,
+                                            "margin": margin})
+        # the version is LIVE from canary start (prune must defer it even
+        # before the canary engine first builds); the registry read in
+        # acquire() stays OUTSIDE the queue lock so a slow registry disk
+        # cannot stall admission/completion traffic
+        for m in meshes:
+            self._lease(new_tag)
+        return meshes
+
+    def _canary_engine_for(self, ctrl: _Canary):
+        """Lazily build the canary engine (dispatcher thread only); on
+        a dead or unbuildable canary engine the controller is rolled
+        back (traffic reverts to primary) and None is returned."""
+        ce = ctrl.engine
+        if ce is None:
+            try:
+                if self._owns_engines:
+                    cfg = dataclasses.replace(self.cfg,
+                                              nelx=ctrl.mesh[0],
+                                              nely=ctrl.mesh[1])
+                    ce = TopoServingEngine(
+                        cfg, ctrl.params,
+                        (ctrl.u_scale if ctrl.u_scale is not None
+                         else self.u_scale),
+                        slots=self.canary_slots, model_tag=ctrl.tag,
+                        **self._engine_kwargs)
+                else:
+                    ce = self._engine_factory(*ctrl.mesh)
+                    if ce is self._engines.get(ctrl.mesh):
+                        # a caching factory handed back the PRIMARY
+                        # engine: swapping its params would corrupt the
+                        # bucket, not canary it
+                        raise RuntimeError(
+                            "engine_factory returned the bucket's "
+                            "primary engine for the canary; canarying "
+                            "needs a factory that builds fresh engines")
+                    ce.swap_params(ctrl.params, u_scale=ctrl.u_scale,
+                                   model_tag=ctrl.tag)
+            except BaseException as exc:
+                self._auto_rollback(ctrl,
+                                    f"canary engine build failed: {exc!r}")
+                return None
+            ctrl.engine = ce
+        if getattr(ce, "_failure", None) is not None \
+                or getattr(ce, "_closed", False):
+            self._auto_rollback(ctrl, "canary engine died")
+            return None
+        return ce
+
+    def _auto_rollback(self, ctrl: _Canary, reason: str):
+        """Rollback decided off the dispatcher/completion path: revert
+        routing NOW, defer the canary engine's drain + close to the
+        dispatcher's maintenance pass (nothing in flight is dropped —
+        the canary engine finishes what it holds)."""
+        with self._queue.cond:
+            if not ctrl.active and self._canaries.get(ctrl.mesh) is not ctrl:
+                return   # already decided
+            ctrl.active = False
+            if self._canaries.get(ctrl.mesh) is ctrl:
+                del self._canaries[ctrl.mesh]
+            self._dissolving.append(ctrl)
+            self._rollbacks += 1
+            self._record_event("rollback", ctrl.mesh, ctrl.tag, reason,
+                               details=ctrl.describe())
+            self._queue.cond.notify_all()
+
+    def rollback(self, mesh=None, reason: str = "manual",
+                 timeout: Optional[float] = None) -> List[str]:
+        """End canary experiment(s) and revert all traffic to the
+        bucket's primary model. Synchronous: the canary engine drains
+        (its in-flight requests complete, correctly tagged) and is
+        closed before returning — zero dropped requests, reusing the
+        swap drain machinery. ``mesh=None`` rolls back every active
+        canary. Returns the rolled-back tags."""
+        tags = []
+        with self._gate(timeout):
+            meshes = ([self._mesh_arg(mesh)] if mesh is not None
+                      else list(self._canaries))
+            for m in meshes:
+                ctrl = self._canaries.get(m)
+                if ctrl is None:
+                    raise RuntimeError(
+                        f"no active canary on bucket {_mesh_str(m)} "
+                        f"(it may have auto-rolled back already — see "
+                        f"gateway.events)")
+                # drain FIRST: a timeout leaves the experiment intact
+                # (the gate blocks new routes while we wait)
+                if ctrl.engine is not None \
+                        and not ctrl.engine.drain(timeout):
+                    raise TimeoutError(
+                        f"canary engine {_mesh_str(m)} did not drain "
+                        f"within {timeout}s")
+                with self._queue.cond:
+                    if self._canaries.get(m) is not ctrl:
+                        continue   # auto-rollback fired during the
+                        #            drain: it already ended, honor it
+                    ctrl.active = False
+                    del self._canaries[m]
+                self._rollbacks += 1
+                self._record_event("rollback", m, ctrl.tag, reason,
+                                   details=ctrl.describe())
+                if ctrl.engine is not None:
+                    self._retire_engine(ctrl.engine)
+                    ctrl.engine.shutdown(wait=True)
+                self._unlease(ctrl.tag)
+                tags.append(ctrl.tag)
+        return tags
+
+    def promote(self, mesh=None,
+                timeout: Optional[float] = None) -> List[str]:
+        """Graduate canary experiment(s): the canary tag becomes the
+        bucket's serving model (pinned), via the same drain/stop/swap
+        machinery as ``swap_model`` — zero dropped requests. The canary
+        engine is drained and closed; the registry (when attached)
+        records ``promoted_at`` on the tag. ``mesh=None`` promotes
+        every active canary. Returns the promoted tags."""
+        tags = []
+        with self._gate(timeout):
+            meshes = ([self._mesh_arg(mesh)] if mesh is not None
+                      else list(self._canaries))
+            if not meshes:
+                raise RuntimeError("no active canary to promote")
+            for m in meshes:
+                ctrl = self._canaries.get(m)
+                if ctrl is None:
+                    raise RuntimeError(
+                        f"no active canary on bucket {_mesh_str(m)} "
+                        f"(it may have auto-rolled back already — see "
+                        f"gateway.events)")
+                # drain the canary side FIRST — a timeout at any drain
+                # leaves the experiment intact for a retry
+                if ctrl.engine is not None \
+                        and not ctrl.engine.drain(timeout):
+                    raise TimeoutError(
+                        f"canary engine {_mesh_str(m)} did not drain "
+                        f"within {timeout}s")
+                with self._queue.cond:
+                    if self._canaries.get(m) is not ctrl:
+                        continue   # auto-rollback fired during the
+                        #            drain: a regressed canary must NOT
+                        #            be promoted
+                    # freeze the verdict: completions during the primary
+                    # drain below must not auto-rollback a canary we are
+                    # committing to (evaluation requires active=True and
+                    # runs under this same lock)
+                    ctrl.active = False
+                u_scale = (ctrl.u_scale if ctrl.u_scale is not None
+                           else self.u_scale)
+                eng = self._engines.get(m)
+                if eng is not None:
+                    self._swap_bucket(m, eng, ctrl.params, u_scale,
+                                      ctrl.tag, timeout)
+                else:
+                    self._bucket_tags[m] = ctrl.tag
+                del self._canaries[m]
+                self._bucket_models[m] = (ctrl.tag, ctrl.params, u_scale)
+                if ctrl.engine is not None:
+                    self._retire_engine(ctrl.engine)
+                    ctrl.engine.shutdown(wait=True)
+                self._unlease(ctrl.tag)
+                if self.registry is not None and ctrl.tag:
+                    try:
+                        self.registry.promote(ctrl.tag)
+                    except NoModelError:
+                        pass   # explicit-params canary: nothing to stamp
+                self._promotions += 1
+                self._record_event("promote", m, ctrl.tag,
+                                   details=ctrl.describe())
+                tags.append(ctrl.tag)
+        return tags
+
+    def canary_stats(self, mesh=None) -> Dict:
+        """Snapshot of the active canary controller(s): routing counts
+        and per-tag stats, keyed by ``"AxB"`` (or the single bucket's
+        snapshot when ``mesh`` is given)."""
+        with self._queue.cond:
+            if mesh is not None:
+                ctrl = self._canaries.get(self._mesh_arg(mesh))
+                if ctrl is None:
+                    raise RuntimeError(
+                        f"no active canary on bucket {mesh}")
+                return ctrl.describe()
+            return {_mesh_str(m): c.describe()
+                    for m, c in self._canaries.items()}
+
+    # --------------------------------------------------------- elasticity
+
+    def _retire_engine(self, eng):
+        """Fold a dying engine's history into the gateway's retired
+        stats so eviction/rollback never loses completed-request
+        accounting (the soak test's stats-balance invariant). Gateway
+        state mutates under the queue lock — a concurrent
+        ``throughput_stats`` reader snapshots under the same lock."""
+        with eng._sched.cond:
+            completed = list(eng._completed)
+        preempt, steps = eng.preemptions, eng.total_steps
+        with self._queue.cond:
+            self._retired.extend(completed)
+            self._retired_preemptions += preempt
+            self._retired_steps += steps
+
+    def _evict(self, mesh: Mesh, eng, reason: str, wait: bool = False):
+        """Shut an idle bucket down and forget it (rebuilt lazily on
+        next sight). Caller guarantees idleness (no queued/in-flight
+        work for the mesh) and that no canary targets it."""
+        self._retire_engine(eng)
+        del self._engines[mesh]
+        tag = self._bucket_tags.pop(mesh, None)
+        self._unlease(tag)
+        self._evicted_meshes.add(mesh)
+        self._evictions += 1
+        eng.shutdown(wait=wait)
+        self._record_event("evict", mesh, tag, reason)
+
+    def _mesh_queued(self, mesh: Mesh) -> bool:
+        with self._queue.cond:
+            return any(e.payload[0].mesh == mesh
+                       for e in self._queue._heap)
+
+    def evict_bucket(self, mesh, timeout: Optional[float] = None) -> bool:
+        """Forced cold eviction of one bucket (the timer-driven path
+        uses ``idle_evict_s``): shut the engine down NOW and rebuild
+        lazily on next sight. Returns False when the bucket does not
+        exist; raises if it is not idle or has an active canary."""
+        mesh = self._mesh_arg(mesh)
+        with self._gate(timeout):
+            eng = self._engines.get(mesh)
+            if eng is None:
+                return False
+            if mesh in self._canaries:
+                raise RuntimeError(
+                    f"bucket {_mesh_str(mesh)} has an active canary; "
+                    f"promote() or rollback() first")
+            if eng.inflight or self._mesh_queued(mesh):
+                raise RuntimeError(
+                    f"bucket {_mesh_str(mesh)} is not idle")
+            self._evict(mesh, eng, reason="forced", wait=True)
+        return True
+
+    def _maintain(self):
+        """Dispatcher-thread housekeeping between forwards: finalize
+        rolled-back canaries once their engine drains, and evict
+        cold buckets past the idle horizon."""
+        if self._dissolving:
+            # swap the list out and merge the survivors back under the
+            # lock: _on_request_done appends rolled-back controllers
+            # concurrently, and a plain reassign would drop them (leaked
+            # tick-loop threads + a never-released lease)
+            with self._queue.cond:
+                pending, self._dissolving = self._dissolving, []
+            keep = []
+            for ctrl in pending:
+                ce = ctrl.engine
+                if ce is None:
+                    self._unlease(ctrl.tag)   # never built: lease only
+                elif (ce.inflight == 0
+                      or getattr(ce, "_failure", None) is not None
+                      or getattr(ce, "_closed", False)):
+                    self._retire_engine(ce)
+                    ce.shutdown(wait=False)
+                    self._unlease(ctrl.tag)
+                else:
+                    keep.append(ctrl)
+            if keep:
+                with self._queue.cond:
+                    self._dissolving.extend(keep)
+        if self.idle_evict_s is not None:
+            now = time.time()
+            for mesh, eng in list(self._engines.items()):
+                if mesh in self._canaries or eng.inflight:
+                    continue
+                seen = self._last_seen.get(mesh, now)
+                if now - seen < self.idle_evict_s:
+                    continue
+                if self._mesh_queued(mesh):
+                    continue
+                self._evict(mesh, eng,
+                            reason=f"idle > {self.idle_evict_s:g}s")
+
+    def _needs_maintenance(self) -> bool:
+        return bool(self._dissolving) or (
+            self.idle_evict_s is not None and bool(self._engines))
 
     # ---------------------------------------------------------- streaming
 
@@ -368,8 +1075,16 @@ class TopoGateway:
                         if req.deadline_s is not None else None)
         fut = TopoFuture(req)
         fut.add_done_callback(self._on_request_done)
+        mesh = req.mesh
         with self._queue.cond:
             self._inflight += 1
+            # elasticity signals: per-bucket arrival history (the
+            # autoscaler's input) and cold-horizon freshness
+            d = self._arrivals.get(mesh)
+            if d is None:
+                d = self._arrivals[mesh] = collections.deque(maxlen=32)
+            d.append(now)
+            self._last_seen[mesh] = now
         try:
             entry, shed = self._queue.offer(
                 (req, fut), req.deadline, now, priority=req.priority,
@@ -398,8 +1113,40 @@ class TopoGateway:
         return fut
 
     def _on_request_done(self, fut: TopoFuture):
+        req = fut.request
         with self._queue.cond:
             self._inflight -= 1
+            try:
+                mesh = req.mesh
+            except Exception:
+                mesh = None
+            if mesh is not None:
+                self._last_seen[mesh] = time.time()
+                ctrl = self._canaries.get(mesh)
+                if (ctrl is not None and ctrl.active and req.done
+                        and fut.exception() is None):
+                    # canary tags are mandatory, so the attribution is
+                    # total: a completion either carries the canary's
+                    # tag or it served on the primary side (whose tag
+                    # may legitimately be None on an explicit-params
+                    # gateway — those completions still count)
+                    side = (ctrl.canary_stats
+                            if req.routed_tag == ctrl.tag
+                            else ctrl.primary_stats)
+                    side.record(req)
+                    if ctrl.auto_rollback:
+                        reason = ctrl.regression()
+                        if reason:
+                            # revert routing NOW (under the lock — the
+                            # next pop sees no controller); the engine
+                            # drains on the maintenance pass
+                            ctrl.active = False
+                            del self._canaries[mesh]
+                            self._dissolving.append(ctrl)
+                            self._rollbacks += 1
+                            self._record_event("rollback", mesh, ctrl.tag,
+                                               reason,
+                                               details=ctrl.describe())
             self._queue.cond.notify_all()   # wake drain() + dispatcher
 
     # --------------------------------------------------------- dispatcher
@@ -407,66 +1154,132 @@ class TopoGateway:
     def _ready(self, payload) -> bool:
         """May this queued request be forwarded right now? Yes if its
         mesh has no engine yet (first sight instantiates one), its
-        engine has in-flight depth to spare, or its engine is failed or
-        closed — forwarding to a dead engine raises at eng.submit and
-        fails THAT future, which is the only way those entries ever
-        resolve (gating them here would strand them in the queue and
-        hang drain()/shutdown()). Plain attribute reads only — called
-        under the queue lock, so no engine lock may be taken here.
-        During ``swap_model`` nothing is ready: queued requests wait at
-        the gateway (none are dropped) until the swap finishes."""
+        BUCKET — primary engine plus live canary engine, which share
+        the depth budget — has in-flight room to spare, or its engine
+        is failed or closed — forwarding to a dead engine raises at
+        eng.submit and fails THAT future, which is the only way those
+        entries ever resolve (gating them here would strand them in the
+        queue and hang drain()/shutdown()). Plain attribute reads only —
+        called under the queue lock, so no engine lock may be taken
+        here. During a control-plane gate (swap/promote/rollback/evict)
+        nothing is ready: queued requests wait at the gateway (none are
+        dropped) until the operation finishes."""
         if self._swapping:
             return False
-        eng = self._engines.get(payload[0].mesh)
+        mesh = payload[0].mesh
+        inflight = 0
+        alive = False
+        eng = self._engines.get(mesh)
+        if eng is not None:
+            if eng._failure is not None or eng._closed:
+                return True
+            inflight += eng.inflight
+            alive = True
+        ctrl = self._canaries.get(mesh)
+        if ctrl is not None and ctrl.engine is not None:
+            ce = ctrl.engine
+            if getattr(ce, "_failure", None) is None \
+                    and not getattr(ce, "_closed", False):
+                inflight += ce.inflight
+                alive = True
+        if not alive:
+            return True   # nothing built yet: first sight instantiates
+        return inflight < self._depth_for(mesh)
+
+    @staticmethod
+    def _bucket_key(payload):
+        """pop_ready group key: readiness is a property of the mesh
+        bucket, so a saturated bucket is tested once per scan."""
+        return payload[0].mesh
+
+    def _route(self, req: TopoRequest):
+        """Pick the engine for a popped request (dispatcher thread):
+        the bucket's canary engine for the controller's deterministic
+        fraction of admissions, the primary engine otherwise."""
+        mesh = req.mesh
+        ctrl = self._canaries.get(mesh)
+        eng = None
+        if ctrl is not None and ctrl.active:
+            ctrl.acc += ctrl.fraction
+            if ctrl.acc >= 1.0 - 1e-9:
+                ctrl.acc -= 1.0
+                eng = self._canary_engine_for(ctrl)
+                if eng is not None:
+                    ctrl.routed_canary += 1
+            if eng is None:
+                ctrl.routed_primary += 1
         if eng is None:
-            return True
-        return (eng._failure is not None or eng._closed
-                or eng.inflight < self.engine_depth)
+            eng = self._engine_for(mesh)
+        return eng
 
     def _dispatch_loop(self):
         """Single consumer of the shared queue: pop the highest-ranked
-        ready entry, route it to (or lazily build) its mesh engine, hand
-        over the front-door future. Engine backpressure is the ready
-        predicate; queue backpressure is the overload policy in
-        submit()."""
+        ready entry, route it to (or lazily build) its mesh engine —
+        canary split included — hand over the front-door future, then
+        run a maintenance pass (canary dissolution, cold eviction).
+        Engine backpressure is the ready predicate; queue backpressure
+        is the overload policy in submit()."""
         q = self._queue
         try:
             while True:
                 with q.cond:
-                    entry = q.pop_ready(self._ready)
+                    entry = q.pop_ready(self._ready, key=self._bucket_key)
                     if entry is None:
                         if self._stopping and len(q._heap) == 0:
                             break
-                        # woken by submit(), request completion, or
-                        # shutdown; the timeout only bounds engine-depth
-                        # polling when an engine is saturated
-                        q.cond.wait(timeout=0.05)
-                        continue
-                    # handshake with swap_model(): between this flag and
-                    # its clear, a popped entry is in flight to an engine
-                    # — a swap must not observe the pool "drained" while
-                    # the entry is still on its way
-                    self._dispatch_busy = True
-                req, fut = entry.payload
-                try:
-                    eng = self._engine_for(req.mesh)
-                    eng.submit(req, priority=req.priority, _future=fut)
-                except BaseException as exc:
-                    # a single bad request (or a failed engine) must not
-                    # take the gateway down: fail its future and move on
-                    fut._resolve(exc)
-                finally:
+                    else:
+                        # handshake with the control gate: between this
+                        # flag and its clear, a popped entry is in
+                        # flight to an engine — a swap must not observe
+                        # the pool "drained" while the entry is still on
+                        # its way
+                        self._dispatch_busy = True
+                if entry is not None:
+                    req, fut = entry.payload
+                    try:
+                        eng = self._route(req)
+                        req.routed_tag = getattr(eng, "model_tag", None)
+                        eng.submit(req, priority=req.priority,
+                                   _future=fut)
+                    except BaseException as exc:
+                        # a single bad request (or a failed engine) must
+                        # not take the gateway down: fail its future and
+                        # move on
+                        fut._resolve(exc)
+                    finally:
+                        with q.cond:
+                            self._dispatch_busy = False
+                            q.cond.notify_all()
+                if self._needs_maintenance():
                     with q.cond:
-                        self._dispatch_busy = False
-                        q.cond.notify_all()
+                        if self._swapping:   # gate holds the pool still
+                            run = False
+                        else:
+                            run = self._maintaining = True
+                    if run:
+                        try:
+                            self._maintain()
+                        finally:
+                            with q.cond:
+                                self._maintaining = False
+                                q.cond.notify_all()
+                if entry is None:
+                    with q.cond:
+                        # woken by submit(), request completion, or
+                        # shutdown; the timeout bounds engine-depth
+                        # polling and the eviction clock
+                        if not (self._stopping and len(q._heap) == 0):
+                            q.cond.wait(timeout=0.05)
             # normal exit (shutdown drained the queue): an async
             # shutdown(wait=False) has nobody left to close the engine
             # pool, so the dispatcher does it for the engines the
             # gateway built itself (a caller-supplied factory owns its
             # engines' lifecycle; shutdown(wait=True) closes those too)
             if self._closed and self._owns_engines:
-                for eng in self._engines.values():
+                for eng in self._all_engines():
                     eng.shutdown(wait=False)
+            if self._closed:
+                self._release_all_leases()
         except BaseException as exc:   # dispatcher died: fail every waiter
             with q.cond:
                 self._failure = exc
@@ -485,32 +1298,58 @@ class TopoGateway:
     def throughput_stats(self, requests: Optional[List[TopoRequest]] = None,
                          wall_s: Optional[float] = None,
                          per_mesh: bool = False) -> Dict:
-        """Aggregate serving stats across every per-mesh engine (or over
-        an explicit request pool), plus gateway-level counters: ``shed``
-        and ``rejected`` admissions, ``pending`` queue depth, ``engines``
-        in the pool. With ``per_mesh=True`` the dict gains a
-        ``"per_mesh"`` sub-dict keyed by ``"<nelx>x<nely>"`` with each
-        engine's own ``throughput_stats()``."""
-        engines = dict(self._engines)
+        """Aggregate serving stats across every engine — primary pool,
+        canary engines, and the retired history of evicted/dissolved
+        ones — or over an explicit request pool, plus gateway-level
+        counters: ``shed`` and ``rejected`` admissions, ``pending``
+        queue depth, ``engines`` in the pool, fleet-ops counters
+        (``evictions``/``rebuilds``/``canaries``/``rollbacks``/
+        ``promotions``) and the live ``bucket_tags`` map. With
+        ``per_mesh=True`` the dict gains a ``"per_mesh"`` sub-dict keyed
+        by ``"<nelx>x<nely>"`` with each engine's own
+        ``throughput_stats()``."""
+        # ONE lock acquisition for the whole snapshot: an engine is
+        # either still in the pool snapshot or already folded into the
+        # retired history — two separate acquisitions would let a
+        # maintenance pass between them drop its whole history
+        with self._queue.cond:
+            engines = dict(self._engines)
+            all_engines = list(engines.values())
+            for ctrl in (list(self._canaries.values())
+                         + list(self._dissolving)):
+                if ctrl.engine is not None:
+                    all_engines.append(ctrl.engine)
+            retired = list(self._retired)
+            retired_preempt = self._retired_preemptions
+            retired_steps = self._retired_steps
         if requests is None:
             pool: List[TopoRequest] = []
-            for eng in engines.values():
+            for eng in all_engines:
                 with eng._sched.cond:
                     pool.extend(eng._completed)
+            pool.extend(retired)
         else:
             pool = requests
         stats: Dict = pool_stats(pool, wall_s)
         stats.update({
-            "preemptions": float(sum(e.preemptions
-                                     for e in engines.values())),
-            "total_steps": float(sum(e.total_steps
-                                     for e in engines.values())),
+            "preemptions": float(sum(e.preemptions for e in all_engines)
+                                 + retired_preempt),
+            "total_steps": float(sum(e.total_steps for e in all_engines)
+                                 + retired_steps),
             "shed": float(self._queue.shed_count),
             "rejected": float(self._queue.rejected),
             "pending": float(len(self._queue)),
             "engines": float(len(engines)),
             "model_tag": self.model_tag,
             "model_swaps": float(self._swap_count),
+            "evictions": float(self._evictions),
+            "rebuilds": float(self._rebuilds),
+            "canaries": float(len(self._canaries)),
+            "rollbacks": float(self._rollbacks),
+            "promotions": float(self._promotions),
+            "bucket_tags": {_mesh_str(m): t
+                            for m, t in self._bucket_tags.items()
+                            if m in engines},
         })
         if per_mesh:
             stats["per_mesh"] = {

@@ -11,6 +11,24 @@ resolves params from here at engine build and hot-swaps between versions
 (``TopoGateway.swap_model``); ``prune`` reclaims old versions while
 ``pin`` protects the ones serving may still swap back to.
 
+Fleet operations (the per-bucket model lifecycle) add three notions:
+
+  * MESH-SPECIALIZED versions — ``register(..., mesh=(nelx, nely))``
+    marks a checkpoint as fine-tuned for one discretization (cf.
+    FE-CNN-style per-discretization specialization). ``latest()``
+    deliberately skips specialized versions — a mesh-specific fine-tune
+    must never hijack the fleet default — while ``latest(mesh=...)``
+    returns the newest version specialized for that mesh (or ``None``).
+    ``ModelResolver`` packages the bucket-level lookup the gateway
+    uses: mesh-specialized version if registered, else fleet default.
+  * LEASES — a serving gateway ``acquire()``s every tag it is serving
+    or canarying and ``release()``s it on swap/evict/shutdown.
+    ``prune`` DEFERS leased versions (never deletes a live model, even
+    an unpinned one); they become reclaimable once released.
+  * PROMOTION metadata — ``promote(tag)`` stamps ``promoted_at`` when a
+    canary graduates to a bucket's serving model, so the index records
+    which versions ever carried production traffic.
+
 Layout::
 
     <root>/registry.json          index: versions + metadata (atomic)
@@ -21,6 +39,7 @@ remains the source of truth for array bytes (hash-verified on load).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import datetime
 import json
@@ -33,7 +52,9 @@ import jax
 from repro.checkpoint import manager as ckpt
 from repro.configs.cronet import CRONetConfig
 
-__all__ = ["ModelRecord", "ModelRegistry", "NoModelError"]
+__all__ = ["ModelRecord", "ModelRegistry", "ModelResolver", "NoModelError"]
+
+Mesh = Tuple[int, int]
 
 
 class NoModelError(LookupError):
@@ -65,6 +86,9 @@ class ModelRecord:
     load_cases: List[Dict]          # training distribution descriptors
     created_at: str
     pinned: bool = False
+    mesh: Optional[Mesh] = None     # (nelx, nely) this version is
+    #                                 specialized for; None = fleet-wide
+    promoted_at: Optional[str] = None   # set when a canary graduates
 
     def describe(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -84,6 +108,7 @@ class ModelRegistry:
         self.root = root
         self.ckpt_dir = os.path.join(root, "ckpts")
         self._lock = threading.RLock()
+        self._leases: Dict[str, int] = {}   # tag -> live refcount
 
     # ------------------------------------------------------------- index
 
@@ -103,6 +128,7 @@ class ModelRegistry:
 
     @staticmethod
     def _record(entry: Dict) -> ModelRecord:
+        mesh = entry.get("mesh")
         return ModelRecord(
             tag=entry["tag"], version=int(entry["version"]),
             cfg=cfg_from_dict(entry["cfg"]),
@@ -110,7 +136,9 @@ class ModelRegistry:
             metrics=entry.get("metrics") or {},
             load_cases=entry.get("load_cases") or [],
             created_at=entry.get("created_at", ""),
-            pinned=bool(entry.get("pinned", False)))
+            pinned=bool(entry.get("pinned", False)),
+            mesh=tuple(int(v) for v in mesh) if mesh else None,
+            promoted_at=entry.get("promoted_at"))
 
     # ------------------------------------------------------------ queries
 
@@ -131,9 +159,25 @@ class ModelRegistry:
             f"no model tagged {tag!r} in registry {self.root} "
             f"(have {self.tags() or 'none'})")
 
-    def latest(self) -> Optional[ModelRecord]:
-        """The most recently registered version, or None when empty."""
+    def latest(self, mesh: Optional[Mesh] = None) -> Optional[ModelRecord]:
+        """The most recently registered version, or None when empty.
+
+        Tie-breaking against mesh-specialized tags: with ``mesh=None``
+        only FLEET-WIDE versions are considered — registering a
+        mesh-specialized fine-tune must never change what the rest of
+        the fleet serves (falls back to the newest version overall only
+        when no fleet-wide version exists at all). With ``mesh=(nelx,
+        nely)`` the newest version specialized for exactly that mesh is
+        returned, or ``None`` — the caller (``ModelResolver``) owns the
+        fall-back to the fleet default."""
         recs = self.records()
+        if mesh is not None:
+            mesh = (int(mesh[0]), int(mesh[1]))
+            recs = [r for r in recs if r.mesh == mesh]
+            return recs[-1] if recs else None
+        fleet = [r for r in recs if r.mesh is None]
+        if fleet:
+            return fleet[-1]
         return recs[-1] if recs else None
 
     def __len__(self) -> int:
@@ -144,10 +188,15 @@ class ModelRegistry:
     def register(self, params, cfg: CRONetConfig, u_scale: float, *,
                  tag: Optional[str] = None, metrics: Optional[Dict] = None,
                  load_cases: Optional[Sequence[Dict]] = None,
-                 pin: bool = False) -> ModelRecord:
+                 pin: bool = False,
+                 mesh: Optional[Mesh] = None) -> ModelRecord:
         """Persist ``params`` as a new immutable version (checkpoint
         write first, index update second — a crash in between leaves an
-        orphan checkpoint, never a dangling index entry)."""
+        orphan checkpoint, never a dangling index entry). ``mesh``
+        marks the version as specialized for one ``(nelx, nely)``
+        discretization: it is resolved only for that mesh's bucket
+        (``latest(mesh=...)`` / ``ModelResolver``) and never becomes
+        the fleet default."""
         with self._lock:
             index = self._read_index()
             version = 1 + max((int(e["version"])
@@ -166,10 +215,28 @@ class ModelRegistry:
                      "load_cases": list(load_cases or []),
                      "created_at": datetime.datetime.now(
                          datetime.timezone.utc).isoformat(),
-                     "pinned": bool(pin)}
+                     "pinned": bool(pin),
+                     "mesh": ([int(mesh[0]), int(mesh[1])]
+                              if mesh is not None else None)}
             index["versions"].append(entry)
             self._write_index(index)
             return self._record(entry)
+
+    def promote(self, tag: str) -> ModelRecord:
+        """Stamp ``promoted_at`` on a version — called when a canary of
+        this version graduates to a bucket's serving model, so the
+        index records which checkpoints ever carried production
+        traffic. Idempotent (keeps the first promotion time)."""
+        with self._lock:
+            index = self._read_index()
+            for e in index["versions"]:
+                if e["tag"] == tag:
+                    if not e.get("promoted_at"):
+                        e["promoted_at"] = datetime.datetime.now(
+                            datetime.timezone.utc).isoformat()
+                        self._write_index(index)
+                    return self._record(e)
+        raise NoModelError(f"no model tagged {tag!r} in {self.root}")
 
     def pin(self, tag: str, pinned: bool = True) -> ModelRecord:
         """(Un)pin a version: pinned versions survive ``prune``."""
@@ -182,14 +249,44 @@ class ModelRegistry:
                     return self._record(e)
         raise NoModelError(f"no model tagged {tag!r} in {self.root}")
 
+    # ------------------------------------------------------------- leases
+
+    def acquire(self, tag: str) -> ModelRecord:
+        """Mark a version LIVE (being served or canaried): ``prune``
+        defers it until every acquirer has ``release``d. Refcounted —
+        a gateway serving a tag in three buckets acquires it three
+        times. Raises ``NoModelError`` for an unknown tag (a lease on
+        nothing would silently protect nothing)."""
+        rec = self.get(tag)
+        with self._lock:
+            self._leases[tag] = self._leases.get(tag, 0) + 1
+        return rec
+
+    def release(self, tag: str):
+        """Drop one live reference; unknown/over-released tags are
+        ignored (release runs on shutdown paths that must not raise)."""
+        with self._lock:
+            n = self._leases.get(tag, 0) - 1
+            if n > 0:
+                self._leases[tag] = n
+            else:
+                self._leases.pop(tag, None)
+
+    def leased(self) -> Dict[str, int]:
+        """Live tags and their refcounts (snapshot)."""
+        with self._lock:
+            return dict(self._leases)
+
     def prune(self, keep: int = 3) -> List[str]:
         """Drop all but the newest ``keep`` versions; pinned versions
-        are always kept (and don't count against ``keep``). Returns the
-        pruned tags."""
+        are always kept (and don't count against ``keep``), and LEASED
+        versions — currently served or canaried by some gateway — are
+        DEFERRED, never deleted out from under live traffic (they
+        become reclaimable once released). Returns the pruned tags."""
         with self._lock:
             index = self._read_index()
             pinned = [int(e["version"]) for e in index["versions"]
-                      if e.get("pinned")]
+                      if e.get("pinned") or self._leases.get(e["tag"])]
             removed = set(ckpt.prune_old(self.ckpt_dir, keep=keep,
                                          pinned=pinned))
             dropped = [e["tag"] for e in index["versions"]
@@ -222,3 +319,80 @@ class ModelRegistry:
         like = {"params": abstract_tree(specs)}
         tree, _ = ckpt.restore(self.ckpt_dir, like, step=record.version)
         return tree["params"], record
+
+
+# ------------------------------------------------------------- resolution
+
+
+class ModelResolver:
+    """Registry-driven per-bucket model resolution: which checkpoint
+    should serve mesh ``(nelx, nely)``?
+
+      1. the newest version SPECIALIZED for that mesh
+         (``register(..., mesh=...)``), if one is registered — the
+         FE-CNN-style per-discretization fine-tune wins for its mesh;
+      2. otherwise the fleet default: ``default_tag`` when given
+         (usually the gateway's currently-served version, so a fleet
+         rollout pins new buckets to it), else ``latest()``.
+
+    ``resolve`` returns metadata only; ``load`` materializes the params
+    through a small per-tag LRU cache (``cache_size`` param trees, the
+    working set of fleet default + specialized + canary versions) so a
+    pool rebuilding the same bucket (eviction / canary churn) does not
+    re-read the checkpoint from disk each time — while a long-lived
+    gateway cycling many rollouts does not pin every version it ever
+    served in memory."""
+
+    def __init__(self, registry: ModelRegistry,
+                 default_tag: Optional[str] = None,
+                 cache_size: int = 8):
+        self.registry = registry
+        self.default_tag = default_tag
+        self.cache_size = max(1, cache_size)
+        self._cache: "collections.OrderedDict[str, Tuple[object, ModelRecord]]" \
+            = collections.OrderedDict()
+        self._lock = threading.Lock()
+
+    def resolve(self, mesh: Optional[Mesh]) -> ModelRecord:
+        """Best record for the bucket (metadata only). Raises
+        ``NoModelError`` when neither a specialized version nor a fleet
+        default exists."""
+        rec = (self.registry.latest(mesh=mesh) if mesh is not None
+               else None)
+        if rec is not None:
+            return rec
+        if self.default_tag is not None:
+            return self.registry.get(self.default_tag)
+        rec = self.registry.latest()
+        if rec is None:
+            raise NoModelError(
+                f"registry {self.registry.root} is empty — train a "
+                f"surrogate and register() it first")
+        return rec
+
+    def _put(self, tag: str, params, record: ModelRecord):
+        self._cache[tag] = (params, record)
+        self._cache.move_to_end(tag)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    def prime(self, tag: str, params, record: ModelRecord):
+        """Seed the cache with already-materialized params (the gateway
+        loads its serving version at construction; resolving the same
+        tag for a bucket must not re-read the checkpoint)."""
+        with self._lock:
+            self._put(tag, params, record)
+
+    def load(self, tag: str) -> Tuple[object, ModelRecord]:
+        """Materialize a tag's params (LRU-cached per tag — records are
+        immutable, so an entry never goes stale; eviction only means a
+        future load re-reads the checkpoint from disk)."""
+        with self._lock:
+            hit = self._cache.get(tag)
+            if hit is not None:
+                self._cache.move_to_end(tag)
+                return hit
+        params, rec = self.registry.load(tag)
+        with self._lock:
+            self._put(tag, params, rec)
+        return params, rec

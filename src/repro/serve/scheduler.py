@@ -42,6 +42,12 @@ this owns the queues:
     original deadline and sequence number, so a parked request resumes
     exactly where EDF places it.
 
+  * ``target_slots`` — the pure slot-width autoscaling policy for the
+    gateway's pool elasticity: observed per-bucket arrival rate in,
+    engine batch width out (clamped, even, applied at bucket build /
+    post-eviction rebuild — the only points where a compiled step's
+    shape may change).
+
 Engine integration contract: the scheduler's condition variable
 (``cond``) is the single lock for queue state. ``push``/``pop``/``peek``
 take it internally (it is reentrant), and the engine's tick loop holds
@@ -52,6 +58,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 import threading
 from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
 
@@ -275,22 +282,41 @@ class BoundedEDFScheduler(EDFScheduler):
             return self.push(payload, deadline, now,
                              priority=priority), None
 
-    def pop_ready(self, ready: Callable[[Any], bool]) -> Optional[_Entry]:
+    def pop_ready(self, ready: Callable[[Any], bool],
+                  key: Optional[Callable[[Any], Any]] = None
+                  ) -> Optional[_Entry]:
         """Pop the highest-ranked entry whose payload satisfies
         ``ready`` (e.g. "its mesh engine has queue room"), skipping
         blocked ones so one saturated mesh cannot head-of-line block the
         rest. Skipped entries are popped into a side list and re-pushed:
         O(k log n) for k not-ready entries ahead of the hit — no full
         sort or re-heapify, which matters for the unbounded
-        (capacity=None) configuration under a deep backlog."""
+        (capacity=None) configuration under a deep backlog.
+
+        ``key`` declares that readiness is a property of a GROUP of
+        payloads (the gateway's mesh bucket), not of each payload: once
+        one entry of a group tests not-ready, every later entry of the
+        same group is skipped without re-evaluating ``ready``. Under a
+        deep single-bucket backlog this turns k predicate calls into
+        one — which matters now that the predicate sums the in-flight
+        depth of a canary PAIR of engines instead of reading one
+        counter. Entries whose group tested ready are still evaluated
+        individually (readiness may be consumed by the pop itself)."""
         with self.cond:
             skipped: List[_Entry] = []
             found = None
+            blocked_keys = set()
             while self._heap:
                 e = heapq.heappop(self._heap)
+                k = key(e.payload) if key is not None else None
+                if k is not None and k in blocked_keys:
+                    skipped.append(e)
+                    continue
                 if ready(e.payload):
                     found = e
                     break
+                if k is not None:
+                    blocked_keys.add(k)
                 skipped.append(e)
             for e in skipped:
                 heapq.heappush(self._heap, e)
@@ -298,3 +324,31 @@ class BoundedEDFScheduler(EDFScheduler):
                 self.popped += 1
                 self.cond.notify_all()
             return found
+
+
+# ------------------------------------------------------------- elasticity
+
+
+def target_slots(rate: float, base_rate: float, min_slots: int = 2,
+                 max_slots: int = 8) -> int:
+    """Slot width for an observed per-bucket arrival rate — the pure
+    policy half of the gateway's pool elasticity (applied when a bucket
+    is built or lazily rebuilt after a cold eviction; a live engine's
+    compiled step is shaped by its width, so resizing happens at the
+    rebuild boundary, never mid-flight).
+
+    ``base_rate`` is the arrival rate (requests/s) one ``min_slots``-wide
+    engine is provisioned for; the width grows proportionally with the
+    observed rate and is clamped to ``[min_slots, max_slots]``. Widths
+    are rounded up to even so the engine can always split into shards of
+    the minimum bitwise-invariant width (2). A cold bucket (rate 0, or
+    no estimate yet) gets ``min_slots``."""
+    if min_slots < 2:
+        raise ValueError(f"min_slots must be >= 2, got {min_slots}")
+    if max_slots < min_slots:
+        raise ValueError(f"max_slots {max_slots} < min_slots {min_slots}")
+    if rate <= 0.0 or base_rate <= 0.0:
+        return min_slots
+    width = min_slots * math.ceil(rate / base_rate)
+    width += width % 2
+    return max(min_slots, min(max_slots, width))

@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import threading
 import time
 from typing import Dict, List, Optional
@@ -83,6 +84,20 @@ class _Admission:
     @property
     def iters_left(self) -> int:
         return self.req.n_iter - self.iters_done
+
+
+@functools.lru_cache(maxsize=64)
+def _mesh_template(nelx: int, nely: int):
+    """Per-mesh slot constants (element DOF map, element stiffness,
+    penalization) — pure functions of the mesh, shared READ-ONLY by
+    every engine built for it. Cached at module level so a gateway
+    lazily REBUILDING a bucket after a cold eviction (pool elasticity)
+    pays neither the stencil assembly nor fresh device uploads: together
+    with the ``make_hybrid_step`` cache (same mesh + u_scale = the
+    already-compiled step), an engine rebuild is thread spawn + state
+    init, not a cold start."""
+    template = fea2d.mbb_problem(nelx, nely)
+    return template.edof, template.KE, template.penal, template.e_min
 
 
 def auto_shards(slots: int, device_count: Optional[int] = None) -> int:
@@ -273,9 +288,8 @@ class TopoServingEngine:
             backend)
         self.preempt = preempt
         self.tick_time_s = tick_time_s
-        template = fea2d.mbb_problem(cfg.nelx, cfg.nely)
-        self._edof, self._KE = template.edof, template.KE
-        self._penal, self._e_min = template.penal, template.e_min
+        (self._edof, self._KE,
+         self._penal, self._e_min) = _mesh_template(cfg.nelx, cfg.nely)
         self._shards = [_Shard(self, dev) for dev in self._devices]
         self._sched = EDFScheduler(starvation_horizon)
         self._threads: List[threading.Thread] = []

@@ -19,6 +19,10 @@ all three and import nothing from them.
   * ``pool_stats`` — the pure request-pool half of ``throughput_stats``,
     so the engine (one pool) and the gateway (per-mesh pools + an
     aggregate) report identical metrics.
+  * ``TagStats`` / ``FleetEvent`` — the fleet-operations floor: per-model-
+    tag serving counters (the acceptance/deadline metrics a canary is
+    judged on) and the typed control-plane event record the gateway
+    emits for canary start / promote / rollback / evict / rebuild.
 """
 from __future__ import annotations
 
@@ -107,6 +111,11 @@ class TopoRequest:
     deadline_met: Optional[bool] = None     # None when no deadline was set
     preemptions: int = 0                    # times this request was parked
     model_tag: Optional[str] = None         # registry tag of the serving model
+    # filled at routing time (gateway only): the tag of the engine the
+    # dispatcher forwarded this request to. A completed request must
+    # satisfy ``model_tag == routed_tag`` — the engine that served it is
+    # the engine it was routed to (the fleet tests' mis-tag invariant).
+    routed_tag: Optional[str] = None
 
     @property
     def mesh(self) -> tuple:
@@ -201,3 +210,68 @@ def pool_stats(pool: Sequence[TopoRequest],
         "cronet_hit_rate": (sum(r.cronet_iters for r in done)
                             / max(iters, 1)),
     }
+
+
+# --------------------------------------------------------------- fleet ops
+
+
+class TagStats:
+    """Per-model-tag serving counters — the running half of
+    ``pool_stats``, accumulated one completion at a time instead of over
+    a retained pool (a canary window must not depend on ring-buffer
+    retention). Metric definitions match ``pool_stats``:
+    ``cronet_hit_rate`` is iteration-weighted and ``deadline_hit_rate``
+    covers deadline-carrying completions only (1.0 when there were
+    none). Callers serialize access (the gateway records under its
+    queue lock)."""
+
+    def __init__(self):
+        self.completed = 0
+        self.cronet_iters = 0
+        self.fea_iters = 0
+        self.deadline_total = 0
+        self.deadline_hits = 0
+        self.latency_sum = 0.0
+
+    def record(self, req: TopoRequest):
+        self.completed += 1
+        self.cronet_iters += req.cronet_iters
+        self.fea_iters += req.fea_iters
+        self.latency_sum += req.latency_s   # engine latency, as pool_stats
+        if req.deadline is not None:
+            self.deadline_total += 1
+            self.deadline_hits += int(bool(req.deadline_met))
+
+    @property
+    def cronet_hit_rate(self) -> float:
+        return self.cronet_iters / max(self.cronet_iters
+                                       + self.fea_iters, 1)
+
+    @property
+    def deadline_hit_rate(self) -> float:
+        return (self.deadline_hits / self.deadline_total
+                if self.deadline_total else 1.0)
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "completed": float(self.completed),
+            "cronet_hit_rate": self.cronet_hit_rate,
+            "deadline_hit_rate": self.deadline_hit_rate,
+            "mean_latency_s": (self.latency_sum / self.completed
+                               if self.completed else 0.0),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetEvent:
+    """One control-plane transition in the gateway's fleet-operations
+    log: ``kind`` is ``canary-start`` / ``promote`` / ``rollback`` /
+    ``evict`` / ``rebuild`` / ``swap``. ``details`` carries the
+    kind-specific payload (e.g. the per-tag stats snapshots a rollback
+    decision was based on)."""
+    kind: str
+    mesh: Optional[tuple]
+    tag: Optional[str]
+    t: float
+    reason: str = ""
+    details: Dict = dataclasses.field(default_factory=dict)

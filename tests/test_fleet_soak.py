@@ -1,0 +1,123 @@
+"""Fleet-operations chaos/soak (slow tier, nightly): mixed-mesh Poisson
+traffic with canary swaps, forced rollbacks, fleet model swaps, and
+cold-mesh eviction all firing MID-STREAM for several cycles against real
+engines.
+
+The invariants this locks down (the fleet layer's "nothing leaks"
+contract):
+
+  * zero futures leak — every submit resolves (completed; the queue is
+    unbounded here so nothing is shed);
+  * zero mis-tags — every completion's ``model_tag`` is the tag of the
+    engine that served it (``routed_tag``);
+  * engine THREAD count returns to baseline after each eviction wave
+    (evicted engines' tick loops exit; only the dispatcher survives);
+  * stats totals balance across evictions/rollbacks/promotions — the
+    gateway's aggregate ``requests`` equals the number of completions,
+    retired engine history included.
+"""
+import dataclasses
+import random
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.common import materialize
+from repro.configs.cronet import get_cronet_config
+from repro.core import cronet
+from repro.fea import fea2d
+from repro.serve import ModelRegistry, TopoGateway, TopoRequest
+
+MESHES = [(12, 4), (10, 6)]
+
+
+def _serving_threads():
+    return [t for t in threading.enumerate()
+            if t.name.startswith(("topo-shard", "topo-gateway"))]
+
+
+def _wait(cond, timeout, what):
+    t0 = time.time()
+    while not cond():
+        assert time.time() - t0 < timeout, f"timed out waiting for {what}"
+        time.sleep(0.02)
+
+
+@pytest.mark.slow
+def test_fleet_soak_canary_rollback_eviction_cycles(tmp_path):
+    cfg = dataclasses.replace(get_cronet_config("small"),
+                              nelx=12, nely=4, hist_len=3)
+    params = materialize(cronet.param_specs(
+        dataclasses.replace(cfg, dtype="float32")), jax.random.key(0))
+    reg = ModelRegistry(str(tmp_path))
+    reg.register(params, cfg, 50.0, tag="prod")
+    reg.register(params, cfg, 50.0, tag="prod2")
+    n_cycles = 3
+    for c in range(n_cycles):
+        reg.register(params, cfg, 50.0, tag=f"cand-{c}")
+
+    pools = {m: [fea2d.point_load_problem(
+        m[0], m[1], load_node=(i % (m[0] - 1), 0),
+        load=(0.0, -1.0 - 0.1 * i)) for i in range(4)] for m in MESHES}
+    assert _serving_threads() == []
+    gw = TopoGateway.from_registry(reg, tag="prod", slots=2,
+                                   max_pending=None, idle_evict_s=0.6)
+    rng = random.Random(42)
+    futs = []
+    uid = 0
+    for cycle in range(n_cycles):
+        # -- Poisson-ish mixed-mesh arrivals, canary started mid-stream
+        cycle_futs = []
+        for i in range(12):
+            m = MESHES[rng.randrange(len(MESHES))]
+            f = gw.submit(
+                TopoRequest(uid=uid, problem=pools[m][rng.randrange(4)],
+                            n_iter=rng.randint(3, 6)),
+                deadline_s=rng.choice([None, 10.0, 60.0]),
+                priority=rng.choice([0, 0, 0, 1]))
+            cycle_futs.append(f)
+            uid += 1
+            if i == 4:
+                gw.canary(f"cand-{cycle}", fraction=0.4, mesh=(12, 4),
+                          auto_rollback=False)
+            time.sleep(rng.random() * 0.05)
+        # -- end the experiment mid-stream: promote on even cycles,
+        # forced rollback on odd ones (both drain, neither drops)
+        if cycle % 2 == 0:
+            assert gw.promote(mesh=(12, 4),
+                              timeout=600) == [f"cand-{cycle}"]
+        else:
+            assert gw.rollback(mesh=(12, 4),
+                               timeout=600) == [f"cand-{cycle}"]
+        for f in cycle_futs:
+            r = f.result(timeout=900)
+            assert r.done
+            assert r.model_tag == r.routed_tag, \
+                (r.uid, r.model_tag, r.routed_tag)
+        futs.extend(cycle_futs)
+        # -- cold horizon: every bucket evicts, tick-loop threads exit,
+        # only the dispatcher survives
+        _wait(lambda: len(gw.engines) == 0, 60,
+              f"cycle {cycle} eviction")
+        _wait(lambda: len(_serving_threads()) == 1, 60,
+              f"cycle {cycle} thread baseline")
+        # -- fleet swap on the (now empty) pool: pending-tag semantics,
+        # next cycle rebuilds on the swapped default
+        tag = "prod2" if cycle % 2 == 0 else "prod"
+        assert gw.swap_model(tag, timeout=600) == tag
+    # -- totals balance: nothing leaked, nothing double-counted
+    assert all(f.done() for f in futs)
+    assert all(f.exception() is None for f in futs)
+    stats = gw.throughput_stats()
+    assert stats["requests"] == float(len(futs)), stats
+    assert stats["evictions"] >= 2.0 * n_cycles     # both meshes, each cycle
+    assert stats["rebuilds"] >= 2.0 * (n_cycles - 1)
+    assert stats["promotions"] == float((n_cycles + 1) // 2)
+    assert stats["rollbacks"] == float(n_cycles // 2)
+    assert stats["shed"] == 0.0 and stats["rejected"] == 0.0
+    # leases balance: only the current fleet default stays live
+    gw.shutdown()
+    assert reg.leased() == {}, reg.leased()
+    assert _serving_threads() == []

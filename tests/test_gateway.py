@@ -1,15 +1,26 @@
 """Mesh-agnostic gateway tests (serve/gateway.py).
 
-Two layers:
+Three layers:
   * policy/routing mechanics against an injected in-memory fake engine
     (deterministic, device-free): lazy bucket creation, per-engine depth
     gating, cross-mesh rank ordering, all three overload policies at the
     front door, lifecycle, stats plumbing;
+  * fleet operations against fake engines: canary fraction routing +
+    promote / rollback / auto-rollback, shared bucket depth for canary
+    pairs, cold eviction + lazy rebuild, autoscaling inputs — capped by
+    a property-based test over RANDOM interleavings of
+    submit/canary/promote/rollback/evict asserting the invariants (no
+    request dropped, completions stamped with the tag that served them,
+    canary fraction honored within one request, accounting balanced
+    across evictions);
   * end-to-end against real engines: two meshes interleaved under one
     queue, each completed density BITWISE-equal to the corresponding
-    single-mesh engine run — the gateway's acceptance contract — plus a
-    slow-tier mixed-mesh Poisson stress.
+    single-mesh engine run — the gateway's acceptance contract — now
+    also through evict-then-rebuild and canary-promote cycles, plus
+    per-bucket registry resolution and the empty-pool swap regression;
+    and a slow-tier mixed-mesh Poisson stress.
 """
+import collections
 import dataclasses
 import random
 import threading
@@ -18,6 +29,7 @@ from types import SimpleNamespace
 
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.serve import (EngineClosed, EngineState, OverloadPolicy,
                          QueueFull, RequestShed, TopoGateway, TopoRequest)
@@ -40,18 +52,26 @@ def wait_until(cond, timeout=10.0, interval=0.005):
 class _FakeEngine:
     """In-memory stand-in honouring the engine interface the gateway
     touches: requests park in ``submitted`` until the test calls
-    ``complete()``, making depth gating and overload deterministic."""
+    ``complete()``, making depth gating and overload deterministic.
+    Completions are stamped with the fake's ``model_tag`` (the mis-tag
+    invariant needs the SERVING engine's identity on the result) and
+    with ``cronet_frac`` of their iterations on the NN path, so canary
+    acceptance regressions can be scripted."""
 
-    def __init__(self, nelx, nely):
+    def __init__(self, nelx, nely, model_tag=None, cronet_frac=0.0):
         self.cfg = SimpleNamespace(nelx=nelx, nely=nely)
         self._failure = None
         self.inflight = 0
         self.preemptions = 0
         self.total_steps = 0
+        self.slots = 2
+        self.model_tag = model_tag
+        self.cronet_frac = cronet_frac
         self._sched = SimpleNamespace(cond=threading.Condition())
         self._completed = []
         self.submitted = []          # (req, fut), forwarding order
         self._closed = False
+        self._stopped = False
         self._lock = threading.Lock()
 
     def submit(self, req, deadline_s=None, priority=0, _future=None):
@@ -69,12 +89,29 @@ class _FakeEngine:
         with self._lock:
             req, fut = self.submitted.pop(0)
             req.done = True
+            req.model_tag = self.model_tag
+            req.cronet_iters = int(round(self.cronet_frac * req.n_iter))
+            req.fea_iters = req.n_iter - req.cronet_iters
             req.deadline_met = (None if req.deadline is None
                                 else time.time() <= req.deadline)
             self._completed.append(req)
             self.inflight -= 1
+            self.total_steps += req.n_iter
         fut._resolve()
         return req
+
+    def drain(self, timeout=None):
+        t0 = time.time()
+        while self.inflight:
+            if timeout is not None and time.time() - t0 > timeout:
+                return False
+            time.sleep(0.002)
+        return True
+
+    def swap_params(self, params, u_scale=None, model_tag=None):
+        self.model_tag = model_tag
+        if isinstance(params, dict) and "cronet_frac" in params:
+            self.cronet_frac = params["cronet_frac"]
 
     def throughput_stats(self, requests=None, wall_s=None):
         return {"requests": float(len(self._completed))}
@@ -83,7 +120,7 @@ class _FakeEngine:
         self._closed = True
 
     def stop(self, wait=True):
-        pass
+        self._stopped = True
 
 
 def _fake_gateway(**kw):
@@ -498,3 +535,498 @@ def test_mixed_mesh_poisson_stress(trained):
     leaked = [t for t in threading.enumerate()
               if t.name.startswith(("topo-shard", "topo-gateway"))]
     assert leaked == [], f"leaked serving threads: {leaked}"
+
+
+# ------------------------------------------------- fleet ops: fake engines
+
+
+def _fleet_gateway(**kw):
+    """Fake-engine gateway that keeps EVERY engine ever built per mesh
+    (canary and rebuild paths legitimately build more than one)."""
+    built = collections.defaultdict(list)
+
+    def factory(nelx, nely):
+        e = _FakeEngine(nelx, nely, model_tag="prod", cronet_frac=0.5)
+        built[(nelx, nely)].append(e)
+        return e
+
+    cfg = SimpleNamespace(nelx=0, nely=0)
+    gw = TopoGateway(cfg, params=None, u_scale=U_SCALE,
+                     engine_factory=factory, **kw)
+    return gw, built
+
+
+def _complete_all(built, mesh=None):
+    for m, engs in list(built.items()):
+        if mesh is not None and m != mesh:
+            continue
+        for e in engs:
+            while e.submitted:
+                e.complete()
+
+
+def _pump(gw, built, timeout=10):
+    """Complete forwarded requests until the gateway drains."""
+    t0 = time.time()
+    while not gw.drain(timeout=0.05):
+        assert time.time() - t0 < timeout, "gateway did not drain"
+        _complete_all(built)
+
+
+def test_canary_fraction_routing_promote_and_tag_stamping():
+    gw, built = _fleet_gateway(max_pending=None)
+    futs = [gw.submit(_req(i, 12, 4)) for i in range(2)]
+    _pump(gw, built)
+    gw.canary("cand", fraction=0.25, mesh=(12, 4), params=object(),
+              auto_rollback=False)
+    futs += [gw.submit(_req(10 + i, 12, 4)) for i in range(8)]
+    _pump(gw, built)
+    # exactly 1/4 of the window reached the canary engine, in pop order
+    assert len(built[(12, 4)]) == 2
+    primary, canary = built[(12, 4)]
+    assert canary.model_tag == "cand"
+    assert len(canary._completed) == 2 and len(primary._completed) == 8
+    info = gw.canary_stats((12, 4))
+    assert info["routed_canary"] == 2 and info["routed_primary"] == 6
+    # zero mis-tagged: every completion carries its serving engine's tag
+    for f in futs:
+        r = f.result(timeout=5)
+        assert r.model_tag == r.routed_tag
+    # promote: primary swaps to the canary model, canary engine closes
+    assert gw.promote(mesh=(12, 4), timeout=10) == ["cand"]
+    assert primary.model_tag == "cand" and canary._closed
+    assert gw.throughput_stats()["promotions"] == 1.0
+    post = gw.submit(_req(99, 12, 4))
+    _pump(gw, built)
+    assert post.result(timeout=5).model_tag == "cand"
+    kinds = [e.kind for e in gw.events]
+    assert "canary-start" in kinds and "promote" in kinds
+    gw.shutdown()
+
+
+def test_canary_pair_shares_bucket_depth_budget():
+    """A canaried bucket's primary + canary engines share ONE in-flight
+    budget: fraction 0.5 at depth 2 must never hold more than 2 requests
+    across the pair."""
+    gw, built = _fleet_gateway(max_pending=None, engine_depth=2)
+    gw.submit(_req(0, 12, 4))
+    _pump(gw, built)
+    gw.canary("cand", fraction=0.5, mesh=(12, 4), params=object(),
+              auto_rollback=False)
+    futs = [gw.submit(_req(1 + i, 12, 4)) for i in range(6)]
+    assert wait_until(
+        lambda: sum(e.inflight for e in built[(12, 4)]) == 2)
+    time.sleep(0.1)   # dispatcher must NOT forward past the shared limit
+    assert sum(e.inflight for e in built[(12, 4)]) == 2
+    assert gw.inflight == 6
+    _pump(gw, built)
+    assert all(f.result(timeout=5).done for f in futs)
+    info = gw.canary_stats((12, 4))
+    total = info["routed_canary"] + info["routed_primary"]
+    assert total == 6 and abs(info["routed_canary"] - 3) <= 1
+    gw.shutdown()
+
+
+def test_manual_rollback_reverts_routing_with_zero_drops():
+    gw, built = _fleet_gateway(max_pending=None)
+    gw.submit(_req(0, 12, 4))
+    _pump(gw, built)
+    gw.canary("cand", fraction=1.0, mesh=(12, 4), params=object(),
+              auto_rollback=False)
+    futs = [gw.submit(_req(1 + i, 12, 4)) for i in range(3)]
+    _pump(gw, built)
+    canary = built[(12, 4)][1]
+    assert len(canary._completed) == 3      # fraction 1.0: all canary
+    assert gw.rollback(mesh=(12, 4), timeout=10) == ["cand"]
+    assert canary._closed
+    post = gw.submit(_req(50, 12, 4))
+    _pump(gw, built)
+    assert post.result(timeout=5).routed_tag == "prod"
+    assert all(f.result(timeout=5).done for f in futs)   # zero dropped
+    stats = gw.throughput_stats()
+    assert stats["rollbacks"] == 1.0 and stats["canaries"] == 0.0
+    assert stats["requests"] == 5.0         # canary history retired, kept
+    gw.shutdown()
+
+
+def test_auto_rollback_fires_on_acceptance_regression():
+    """The fleet safety property: a canary whose CRONet acceptance rate
+    regresses vs concurrent primary traffic is rolled back WITHOUT any
+    operator call — routing reverts, the canary engine dissolves in the
+    background, nothing is dropped or mis-tagged."""
+    gw, built = _fleet_gateway(max_pending=None)
+    gw.submit(_req(0, 12, 4))
+    _pump(gw, built)
+    # scripted regression: canary completions carry 0% acceptance vs the
+    # primary fakes' 50%
+    gw.canary("bad", fraction=0.5, mesh=(12, 4),
+              params={"cronet_frac": 0.0}, min_requests=2, margin=0.0,
+              auto_rollback=True)
+    futs = [gw.submit(_req(1 + i, 12, 4)) for i in range(8)]
+    _pump(gw, built)
+    assert wait_until(
+        lambda: gw.throughput_stats()["rollbacks"] == 1.0), \
+        "auto-rollback never fired"
+    events = [e for e in gw.events if e.kind == "rollback"]
+    assert len(events) == 1
+    assert "CRONet hit rate regressed" in events[0].reason
+    assert events[0].tag == "bad"
+    # the canary engine dissolves once drained (maintenance pass)
+    canary = built[(12, 4)][1]
+    assert wait_until(lambda: canary._closed), "canary engine leaked"
+    # all traffic reverts to primary; nothing dropped or mis-tagged
+    post = [gw.submit(_req(100 + i, 12, 4)) for i in range(3)]
+    _pump(gw, built)
+    for f in futs + post:
+        r = f.result(timeout=5)
+        assert r.model_tag == r.routed_tag
+    assert all(f.result().routed_tag == "prod" for f in post)
+    assert gw.throughput_stats()["canaries"] == 0.0
+    gw.shutdown()
+
+
+def test_auto_rollback_works_when_primary_has_no_tag():
+    """Explicit-params gateways serve with model_tag=None primaries; the
+    canary verdict must still attribute both sides of the split
+    (regression: a routed_tag guard once made auto-rollback silently
+    inert for every non-registry gateway), and an anonymous canary is
+    refused outright — attribution keys on the tag."""
+    built = collections.defaultdict(list)
+
+    def factory(nelx, nely):
+        e = _FakeEngine(nelx, nely, model_tag=None, cronet_frac=0.5)
+        built[(nelx, nely)].append(e)
+        return e
+
+    cfg = SimpleNamespace(nelx=0, nely=0)
+    gw = TopoGateway(cfg, params=None, u_scale=U_SCALE,
+                     engine_factory=factory, max_pending=None)
+    gw.submit(_req(0, 12, 4))
+    _pump(gw, built)
+    with pytest.raises(ValueError, match="canary needs a tag"):
+        gw.canary(None, fraction=0.5, mesh=(12, 4), params=object())
+    gw.canary("bad", fraction=0.5, mesh=(12, 4),
+              params={"cronet_frac": 0.0}, min_requests=2, margin=0.0,
+              auto_rollback=True)
+    futs = [gw.submit(_req(1 + i, 12, 4)) for i in range(8)]
+    _pump(gw, built)
+    assert wait_until(lambda: gw.throughput_stats()["rollbacks"] == 1.0), \
+        "auto-rollback inert on a tag-less primary"
+    for f in futs:
+        assert f.result(timeout=5).done
+    gw.shutdown()
+
+
+def test_canary_blocks_swap_and_forced_evict():
+    gw, built = _fleet_gateway(max_pending=None)
+    gw.submit(_req(0, 12, 4))
+    _pump(gw, built)
+    gw.canary("cand", fraction=0.5, mesh=(12, 4), params=object(),
+              auto_rollback=False)
+    with pytest.raises(RuntimeError, match="active canary"):
+        gw.swap_model("x", params=object())
+    with pytest.raises(RuntimeError, match="active canary"):
+        gw.swap_model("x", params=object(), mesh=(12, 4))
+    with pytest.raises(RuntimeError, match="active canary"):
+        gw.evict_bucket((12, 4))
+    gw.rollback(mesh=(12, 4), timeout=10)
+    assert gw.swap_model("x", params=object()) == "x"    # now unblocked
+    gw.shutdown()
+
+
+def test_idle_bucket_evicts_after_cold_horizon_and_rebuilds_lazily():
+    gw, built = _fleet_gateway(max_pending=None, idle_evict_s=0.2)
+    cold = gw.submit(_req(0, 12, 4))
+    warm = gw.submit(_req(1, 10, 6))
+    _pump(gw, built)
+    assert cold.result(timeout=5).done and warm.result(timeout=5).done
+    # keep (10, 6) warm while (12, 4) goes cold past the horizon
+    t0 = time.time()
+    while (12, 4) in gw.engines:
+        assert time.time() - t0 < 10, "cold bucket never evicted"
+        f = gw.submit(_req(100, 10, 6))
+        while not f.done():
+            _complete_all(built)
+            time.sleep(0.005)
+        time.sleep(0.03)
+    assert built[(12, 4)][0]._closed
+    assert (10, 6) in gw.engines, "warm bucket must survive"
+    # lazy rebuild on next sight, new engine instance, request served
+    back = gw.submit(_req(200, 12, 4))
+    _pump(gw, built)
+    assert back.result(timeout=5).done
+    assert len(built[(12, 4)]) == 2
+    stats = gw.throughput_stats()
+    assert stats["evictions"] >= 1.0 and stats["rebuilds"] >= 1.0
+    kinds = [e.kind for e in gw.events]
+    assert "evict" in kinds and "rebuild" in kinds
+    gw.shutdown()
+
+
+def test_autoscale_slot_width_follows_observed_arrival_rate():
+    """The autoscaler's gateway-side half: per-bucket arrival windows in,
+    ``scheduler.target_slots`` width out (the pure policy is unit-tested
+    in test_scheduler.py)."""
+    gw, built = _fleet_gateway(max_pending=None, autoscale=True,
+                               min_slots=2, max_slots=8, scale_rate=1.0)
+    now = time.time()
+    # cold bucket: no history -> floor width
+    assert gw._slots_for((12, 4)) == 2
+    # scripted arrival windows (the deque submit() maintains)
+    gw._arrivals[(12, 4)] = collections.deque(
+        [now - 1.0 + 0.1 * i for i in range(10)], maxlen=32)   # ~10 req/s
+    gw._arrivals[(10, 6)] = collections.deque(
+        [now - 8.0, now - 0.1], maxlen=32)                     # ~0.25 req/s
+    assert gw._slots_for((12, 4)) == 8      # hot mesh: clamped to max
+    assert gw._slots_for((10, 6)) == 2      # trickle: floor
+    # the observed rate DECAYS once arrivals stop: same window, later now
+    rate_now = gw._observed_rate((12, 4))
+    assert gw._observed_rate((12, 4), now=now + 60.0) < rate_now / 10
+    gw.shutdown()
+
+
+# ------------------------------------- fleet ops: property-based invariants
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10**9))
+def test_fleet_ops_random_interleavings_preserve_invariants(seed):
+    """Random interleavings of submit / complete / canary / promote /
+    rollback / evict against a fake-engine gateway. Invariants:
+
+      1. no request is ever dropped — every future resolves;
+      2. every completion is stamped with the tag of the engine that
+         actually served it (``model_tag == routed_tag``);
+      3. the canary fraction is honored within ONE request at every
+         window snapshot (deterministic rollover accumulator);
+      4. completed-request accounting balances across evictions,
+         rebuilds, and canary dissolutions (retired history included).
+    """
+    rng = random.Random(seed)
+    gw, built = _fleet_gateway(max_pending=None)
+    meshes = [(12, 4), (10, 6), (8, 4)]
+    futs, windows = [], []
+    uid = 0
+
+    def settle(op, timeout=10):
+        """Drive a control-plane op that needs quiescence, completing
+        forwarded work until it goes through."""
+        t0 = time.time()
+        while True:
+            try:
+                return op()
+            except TimeoutError:
+                assert time.time() - t0 < timeout
+                _complete_all(built)
+
+    for _ in range(40):
+        op = rng.randrange(6)
+        mesh = meshes[rng.randrange(len(meshes))]
+        if op <= 2:                                   # submit (weighted)
+            futs.append(gw.submit(
+                _req(uid, *mesh, n_iter=4),
+                deadline_s=rng.choice([None, 30.0])))
+            uid += 1
+        elif op == 3:                                 # make progress
+            _complete_all(built,
+                          mesh if rng.random() < 0.5 else None)
+        elif op == 4:                                 # canary lifecycle
+            if mesh not in gw._canaries:
+                gw.canary(f"cand-{uid}",
+                          fraction=rng.choice([0.25, 0.5, 1.0]),
+                          mesh=mesh, params=object(),
+                          auto_rollback=False)
+            else:
+                windows.append(gw.canary_stats(mesh))
+                end = gw.promote if rng.random() < 0.5 else gw.rollback
+                settle(lambda: end(mesh=mesh, timeout=0.2))
+        else:                                         # forced eviction
+            _complete_all(built, mesh)
+            try:
+                gw.evict_bucket(mesh, timeout=0.2)
+            except (RuntimeError, TimeoutError):
+                pass   # busy / queued / canaried: legitimately refused
+    for m in list(gw._canaries):
+        windows.append(gw.canary_stats(m))
+        settle(lambda m=m: gw.rollback(mesh=m, timeout=0.2))
+    t0 = time.time()
+    while not gw.drain(timeout=0.05):
+        assert time.time() - t0 < 15, "requests leaked"
+        _complete_all(built)
+    # 1. nothing dropped (unbounded queue: nothing shed either)
+    assert all(f.done() for f in futs)
+    assert all(f.exception() is None for f in futs)
+    done = [f.request for f in futs]
+    assert all(r.done for r in done)
+    # 2. zero mis-tagged
+    for r in done:
+        assert r.model_tag == r.routed_tag, \
+            (r.uid, r.model_tag, r.routed_tag)
+    # 3. canary fraction honored within one request per window
+    for w in windows:
+        total = w["routed_canary"] + w["routed_primary"]
+        assert abs(w["routed_canary"] - w["fraction"] * total) <= 1.0, w
+    # 4. accounting balances (retired history included)
+    assert gw.throughput_stats()["requests"] == float(len(done))
+    gw.shutdown()
+
+
+# ---------------------------------------- fleet ops: real-engine contracts
+
+
+def _other_params(cfg, key):
+    import jax
+
+    from repro.common import materialize
+    from repro.core import cronet
+
+    return materialize(cronet.param_specs(
+        dataclasses.replace(cfg, dtype="float32")), jax.random.key(key))
+
+
+def test_evicted_bucket_rebuilds_bitwise_equal_to_dedicated_engine(trained):
+    """THE elasticity contract: a bucket evicted and lazily rebuilt
+    serves densities bitwise-equal to a never-evicted dedicated
+    engine — eviction reclaims memory/threads, never numerics."""
+    from repro.serve import TopoServingEngine
+
+    cfg, params = trained
+    probs = _mesh_problems(2, 12, 4)
+    gw = TopoGateway(cfg, params, U_SCALE, slots=2, max_pending=32)
+    first = [f.result(timeout=600) for f in
+             [gw.submit(TopoRequest(uid=i, problem=p, n_iter=5))
+              for i, p in enumerate(probs)]]
+    assert gw.drain(timeout=60)
+    assert gw.evict_bucket((12, 4), timeout=60)
+    assert not gw.engines
+    again = [f.result(timeout=600) for f in
+             [gw.submit(TopoRequest(uid=10 + i, problem=p, n_iter=5))
+              for i, p in enumerate(probs)]]
+    stats = gw.throughput_stats()
+    assert stats["evictions"] == 1.0 and stats["rebuilds"] == 1.0
+    assert stats["requests"] == 4.0      # retired history still counted
+    kinds = [e.kind for e in gw.events]
+    assert "evict" in kinds and "rebuild" in kinds
+    gw.shutdown()
+    eng = TopoServingEngine(cfg, params, U_SCALE, slots=2)
+    refs = eng.run([TopoRequest(uid=20 + i, problem=p, n_iter=5)
+                    for i, p in enumerate(probs)])
+    eng.shutdown()
+    for r1, r2, ref in zip(first, again, refs):
+        np.testing.assert_array_equal(r1.density, ref.density)
+        np.testing.assert_array_equal(r2.density, ref.density,
+                                      err_msg="rebuilt bucket diverged")
+
+
+def test_swap_model_on_empty_pool_applies_on_first_bucket_build(
+        trained, tmp_path):
+    """Regression: swap_model before ANY bucket exists must record the
+    pending tag and serve it from the first build — not silently
+    no-op."""
+    from repro.serve import ModelRegistry, TopoServingEngine
+
+    cfg, params = trained
+    params_b = _other_params(cfg, 1)
+    reg = ModelRegistry(str(tmp_path))
+    reg.register(params, cfg, U_SCALE, tag="a")
+    reg.register(params_b, cfg, U_SCALE, tag="b")
+    gw = TopoGateway.from_registry(reg, tag="a", slots=2)
+    assert gw.swap_model("b") == "b"     # pool is empty: nothing built
+    assert gw.model_tag == "b" and not gw.engines
+    prob = _mesh_problems(1, 12, 4)[0]
+    req = gw.submit(TopoRequest(uid=0, problem=prob,
+                                n_iter=4)).result(timeout=600)
+    assert req.model_tag == "b" and req.routed_tag == "b"
+    assert gw.throughput_stats()["bucket_tags"] == {"12x4": "b"}
+    gw.shutdown()
+    eng = TopoServingEngine(cfg, params_b, U_SCALE, slots=2)
+    ref = eng.run([TopoRequest(uid=0, problem=prob, n_iter=4)])[0]
+    eng.shutdown()
+    np.testing.assert_array_equal(req.density, ref.density,
+                                  err_msg="pending swap served stale "
+                                          "params")
+
+
+def test_mesh_specialized_resolution_and_per_bucket_swap(trained,
+                                                         tmp_path):
+    """Per-bucket model lifecycle end to end: a mesh-specialized
+    registry version wins for ITS bucket only, and swap_model(mesh=...)
+    moves one bucket while the rest of the fleet keeps serving the
+    default."""
+    from repro.serve import ModelRegistry, TopoServingEngine
+
+    cfg, params = trained
+    params_b = _other_params(cfg, 2)
+    reg = ModelRegistry(str(tmp_path))
+    reg.register(params, cfg, U_SCALE, tag="fleet")
+    reg.register(params_b, cfg, U_SCALE, tag="spec", mesh=(10, 6))
+    reg.register(params_b, cfg, U_SCALE, tag="fleet2")
+    gw = TopoGateway.from_registry(reg, tag="fleet", slots=2)
+    probs = {m: _mesh_problems(1, *m)[0] for m in MESHES}
+    r1 = gw.submit(TopoRequest(uid=0, problem=probs[(12, 4)],
+                               n_iter=4)).result(timeout=600)
+    r2 = gw.submit(TopoRequest(uid=1, problem=probs[(10, 6)],
+                               n_iter=4)).result(timeout=600)
+    assert r1.model_tag == "fleet"       # fleet default
+    assert r2.model_tag == "spec"        # specialized version won
+    assert gw.throughput_stats()["bucket_tags"] == {
+        "12x4": "fleet", "10x6": "spec"}
+    # the specialized bucket really serves the specialized params
+    eng = TopoServingEngine(
+        dataclasses.replace(cfg, nelx=10, nely=6), params_b, U_SCALE,
+        slots=2)
+    ref = eng.run([TopoRequest(uid=1, problem=probs[(10, 6)],
+                               n_iter=4)])[0]
+    eng.shutdown()
+    np.testing.assert_array_equal(r2.density, ref.density)
+    # per-bucket swap: only the targeted bucket moves
+    assert gw.swap_model("fleet2", mesh=(12, 4), timeout=60) == "fleet2"
+    r3 = gw.submit(TopoRequest(uid=2, problem=probs[(12, 4)],
+                               n_iter=4)).result(timeout=600)
+    r4 = gw.submit(TopoRequest(uid=3, problem=probs[(10, 6)],
+                               n_iter=4)).result(timeout=600)
+    assert r3.model_tag == "fleet2" and r4.model_tag == "spec"
+    assert gw.model_tag == "fleet"       # fleet default untouched
+    gw.shutdown()
+
+
+def test_canary_promote_with_real_engines_serves_bitwise(trained,
+                                                         tmp_path):
+    """A canary engine is a REAL engine under the bitwise contract: its
+    completions equal a dedicated run of the canary params, and promote
+    hands the bucket over with zero dropped futures."""
+    from repro.serve import ModelRegistry, TopoServingEngine
+
+    cfg, params = trained
+    params_b = _other_params(cfg, 3)
+    reg = ModelRegistry(str(tmp_path))
+    reg.register(params, cfg, U_SCALE, tag="prod")
+    reg.register(params_b, cfg, U_SCALE, tag="cand")
+    gw = TopoGateway.from_registry(reg, tag="prod", slots=2)
+    probs = _mesh_problems(4, 12, 4)
+    warm = gw.submit(TopoRequest(uid=-1, problem=probs[0], n_iter=2))
+    warm.result(timeout=600)
+    gw.canary("cand", fraction=0.5, mesh=(12, 4), auto_rollback=False)
+    futs = [gw.submit(TopoRequest(uid=i, problem=p, n_iter=4))
+            for i, p in enumerate(probs)]
+    done = [f.result(timeout=600) for f in futs]
+    assert {r.model_tag for r in done} == {"prod", "cand"}
+    assert all(r.model_tag == r.routed_tag for r in done)
+    info = gw.canary_stats((12, 4))
+    assert info["routed_canary"] == 2 and info["routed_primary"] == 2
+    assert gw.promote(mesh=(12, 4), timeout=120) == ["cand"]
+    assert reg.get("cand").promoted_at, "promotion not recorded"
+    post = gw.submit(TopoRequest(uid=9, problem=probs[0], n_iter=4))
+    assert post.result(timeout=600).model_tag == "cand"
+    gw.shutdown()
+    # canary-served completions are bitwise-equal to dedicated runs of
+    # the canary params
+    eng = TopoServingEngine(cfg, params_b, U_SCALE, slots=2)
+    for r in done:
+        if r.model_tag != "cand":
+            continue
+        ref = eng.run([TopoRequest(uid=r.uid, problem=r.problem,
+                                   n_iter=r.n_iter)])[0]
+        np.testing.assert_array_equal(r.density, ref.density,
+                                      err_msg=f"uid {r.uid}")
+    eng.shutdown()

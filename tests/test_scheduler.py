@@ -238,6 +238,57 @@ def test_pop_ready_skips_blocked_entries_in_rank_order():
     assert s.pop_ready(lambda p: True).payload == ("meshA", 1)
 
 
+def test_pop_ready_key_evaluates_each_blocked_bucket_once():
+    """Bucket-aware gating for canary pairs: readiness is per GROUP, so
+    a blocked bucket's predicate runs once per scan, not once per queued
+    entry — and the outcome is identical to the un-keyed scan."""
+    s = BoundedEDFScheduler(capacity=16)
+    for i in range(5):
+        s.offer(("meshA", i), deadline=float(i), now=0.0)
+    s.offer(("meshB", 9), deadline=99.0, now=0.0)
+    calls = []
+
+    def ready(p):
+        calls.append(p[0])
+        return p[0] != "meshA"
+
+    e = s.pop_ready(ready, key=lambda p: p[0])
+    assert e.payload == ("meshB", 9)
+    assert calls == ["meshA", "meshB"]      # 5 meshA entries, ONE call
+    # a ready group is still evaluated per entry (a pop may consume the
+    # readiness), and rank order within the group is preserved
+    calls.clear()
+    assert s.pop_ready(ready, key=lambda p: p[0]) is None
+    assert calls == ["meshA"]
+    assert len(s) == 5
+    assert s.pop_ready(lambda p: True,
+                       key=lambda p: p[0]).payload == ("meshA", 0)
+
+
+# ----------------------------------------------------------- target_slots
+
+
+def test_target_slots_scales_with_rate_and_clamps():
+    from repro.serve.scheduler import target_slots
+
+    # no signal -> floor width
+    assert target_slots(0.0, 1.0, 2, 8) == 2
+    assert target_slots(-1.0, 1.0, 2, 8) == 2
+    # proportional growth, rounded up to even (shardable widths)
+    assert target_slots(0.5, 1.0, 2, 8) == 2
+    assert target_slots(1.0, 1.0, 2, 8) == 2
+    assert target_slots(2.0, 1.0, 2, 8) == 4
+    assert target_slots(2.5, 1.0, 2, 8) == 6    # ceil(2.5) = 3 -> even 6
+    assert target_slots(3.0, 1.0, 2, 8) == 6
+    # clamped at the ceiling; base_rate rescales the whole curve
+    assert target_slots(100.0, 1.0, 2, 8) == 8
+    assert target_slots(100.0, 50.0, 2, 8) == 4
+    with pytest.raises(ValueError, match="min_slots"):
+        target_slots(1.0, 1.0, 1, 8)
+    with pytest.raises(ValueError, match="max_slots"):
+        target_slots(1.0, 1.0, 4, 2)
+
+
 # --------------------------------------------------------- preempt_victim
 
 _SPI = 1.0  # seconds per iteration, fixed for readability

@@ -176,6 +176,79 @@ def test_registry_prune_respects_pins(tmp_path, tiny_params):
     assert reg.prune(keep=2) == ["m1"]
 
 
+def test_registry_latest_tie_breaks_mesh_specialized_tags(tmp_path,
+                                                          tiny_params):
+    """A mesh-specialized fine-tune must never hijack the fleet default:
+    latest() skips specialized versions; latest(mesh=...) finds exactly
+    its mesh's newest specialization."""
+    from repro.serve import ModelResolver
+
+    cfg = _tiny_cfg()
+    reg = ModelRegistry(str(tmp_path))
+    reg.register(tiny_params, cfg, 1.0, tag="fleet1")
+    reg.register(tiny_params, cfg, 2.0, tag="spec-a", mesh=(12, 4))
+    assert reg.latest().tag == "fleet1"       # specialized did not win
+    assert reg.latest(mesh=(12, 4)).tag == "spec-a"
+    assert reg.latest(mesh=(10, 6)) is None
+    reg.register(tiny_params, cfg, 3.0, tag="spec-b", mesh=(12, 4))
+    reg.register(tiny_params, cfg, 4.0, tag="fleet2")
+    assert reg.latest().tag == "fleet2"
+    assert reg.latest(mesh=(12, 4)).tag == "spec-b"   # newest of ITS mesh
+    assert reg.get("spec-a").mesh == (12, 4)          # json round-trips
+    # the resolver packages the bucket lookup: specialized > default
+    res = ModelResolver(reg, default_tag="fleet1")
+    assert res.resolve((12, 4)).tag == "spec-b"
+    assert res.resolve((10, 6)).tag == "fleet1"
+    res.default_tag = None
+    assert res.resolve((10, 6)).tag == "fleet2"       # falls to latest()
+
+
+def test_registry_prune_defers_served_and_canaried_versions(tmp_path,
+                                                            tiny_params):
+    """prune() must never delete a LIVE version: tags leased by a
+    serving gateway (its fleet default at construction, a canary from
+    the moment the experiment starts) are deferred until released —
+    even unpinned ones — and become reclaimable afterwards."""
+    cfg = _tiny_cfg()
+    reg = ModelRegistry(str(tmp_path))
+    for i in range(4):
+        reg.register(tiny_params, cfg, float(i), tag=f"m{i}")
+    reg.acquire("m1")                             # direct lease
+    dropped = reg.prune(keep=1)
+    assert set(dropped) == {"m0", "m2"}           # m1 live, m3 newest
+    reg.load("m1")                                # still restorable
+    # a gateway leases its serving tag for its whole lifetime, and a
+    # canaried tag from canary() on — no engine has to exist yet
+    gw = TopoGateway.from_registry(reg, tag="m1",
+                                   engine_factory=lambda x, y: None)
+    gw.canary("m3", fraction=0.5, mesh=(12, 4), auto_rollback=False)
+    assert reg.leased() == {"m1": 2, "m3": 1}
+    assert reg.prune(keep=0) == []                # everything live
+    gw.rollback(mesh=(12, 4), timeout=10)         # canary lease released
+    assert reg.leased() == {"m1": 2}
+    assert reg.prune(keep=0) == ["m3"]            # m1 still deferred
+    gw.shutdown()                                 # gateway lease released
+    assert reg.leased() == {"m1": 1}
+    reg.release("m1")
+    assert reg.leased() == {}
+    assert reg.prune(keep=0) == ["m1"]
+    with pytest.raises(NoModelError):
+        reg.load("m1")
+
+
+def test_registry_promote_stamps_promotion_metadata(tmp_path,
+                                                    tiny_params):
+    cfg = _tiny_cfg()
+    reg = ModelRegistry(str(tmp_path))
+    reg.register(tiny_params, cfg, 1.0, tag="a")
+    assert reg.get("a").promoted_at is None
+    first = reg.promote("a").promoted_at
+    assert first
+    assert reg.promote("a").promoted_at == first   # idempotent
+    with pytest.raises(NoModelError):
+        reg.promote("ghost")
+
+
 # --------------------------------------- the trained-surrogate fixture
 
 
