@@ -58,6 +58,21 @@ push; ``--fleet --check`` is the nightly full-budget ladder.
 
     PYTHONPATH=src python -m benchmarks.topo_serving --fleet --smoke
 
+Ladder mode (--ladder) measures the elastic-width tentpole: one engine
+built at full width precompiles a LADDER of batch widths and dispatches
+every tick at the smallest rung covering live occupancy, so a
+trickle-phase request no longer pays full-width tick latency just
+because the engine was provisioned for bursts. ``--ladder --smoke``
+(push gate) asserts the structural contracts: compile count <= ladder
+size under width-varying arrivals, zero requests dropped or perturbed
+across mid-stream rung changes (every density bitwise-equal to its
+standalone run), and rung-4 serving bitwise-equal to a DEDICATED
+fixed-width-4 engine. ``--ladder --check`` (nightly) additionally
+serves the same bursty trace through a fixed-full-width baseline and
+asserts the ladder's p99 end-to-end latency beats it.
+
+    PYTHONPATH=src python -m benchmarks.topo_serving --ladder --smoke
+
 Smoke mode (--smoke) is the push-gate CI entry: a tiny-mesh gateway run
 (two meshes, a handful of requests, deterministic shed/reject checks)
 plus the training-lifecycle smoke (multi-case dataset -> a few train
@@ -833,6 +848,174 @@ def bench_fleet(size: str = "small", n_iter: int = 20,
                 "mis_tagged": len(mis), "bitwise_rebuild": bitwise}
 
 
+def bench_ladder(size: str = "small", slots: int = 8, n_iter: int = 8,
+                 u_scale: float = 50.0, check: bool = False,
+                 verbose: bool = True):
+    """Elastic-width ladder leg (--ladder): structural contracts always
+    (asserted — this is a CI gate, not a report), latency claim with
+    ``check``.
+
+    Always asserted:
+      * serving a width-varying arrival trace retraces the compiled
+        step at most ``len(rungs)`` times (the whole ladder precompiles
+        at first activation; rung changes are cache hits);
+      * every request survives every mid-stream rung change — exact
+        iteration counts and densities bitwise-equal to standalone
+        ``run_hybrid`` runs;
+      * requests served at rung 4 are bitwise-equal to the same
+        requests on a DEDICATED fixed-width-4 engine (the rung is a
+        latency decision, never a numerics decision).
+
+    With ``check``: the same bursty trace (trickle phases + bursts of
+    4, all below the full provisioned width of 8) is replayed through a
+    fixed-full-width baseline engine — the pre-ladder configuration,
+    provisioned for the burst and paying width-8 ticks for everything —
+    and the ladder's p99 end-to-end latency must beat it."""
+    import jax
+
+    from repro.common import materialize
+    from repro.configs.cronet import get_cronet_config
+    from repro.core import cronet
+    from repro.fea import fea2d, hybrid
+    from repro.serve.topo_service import TopoRequest, TopoServingEngine
+
+    cfg = dataclasses.replace(get_cronet_config(size),
+                              nelx=12, nely=4, hist_len=3)
+    params = materialize(cronet.param_specs(
+        dataclasses.replace(cfg, dtype="float32")), jax.random.key(0))
+    pool = [fea2d.point_load_problem(
+        cfg.nelx, cfg.nely, load_node=(i % (cfg.nelx - 1), 0),
+        load=(0.0, -1.0 - 0.1 * i)) for i in range(8)]
+    refs = {}
+
+    def ref(pi):
+        if pi not in refs:
+            refs[pi] = hybrid.run_hybrid(
+                cfg, params, u_scale=u_scale, n_iter=n_iter,
+                precision="fp32", problem=pool[pi],
+                compute_metrics=False).density
+        return refs[pi]
+
+    # shards=1 keeps the full rung span on one device: under the CLI's
+    # forced multi-device host the engine would otherwise split into
+    # narrow shards and the fixed-width baseline would no longer pay
+    # full-width ticks
+    eng = TopoServingEngine(cfg, params, u_scale=u_scale, slots=slots,
+                            precision="fp32", ladder=(2, 4, 8, 16),
+                            shards=1)
+    # first activation precompiles the whole ladder (steps + rung
+    # transitions); everything the width-varying trace does afterwards
+    # must be a cache hit. Calibrate the trace gaps from a full-length
+    # request at the narrow rung.
+    eng.run([TopoRequest(uid=-1, problem=pool[0], n_iter=2)])
+    warm = eng.run([TopoRequest(uid=-2, problem=pool[0], n_iter=n_iter)])
+    t_one = max(warm[0].latency_s, 1e-3)
+    traces0 = eng.step.trace_count[0]
+
+    # bursty trace: trickle (gaps comfortably above the narrow-rung
+    # service time), a 4-wide burst, more trickle, another burst —
+    # bursts stay BELOW the provisioned width 8, which is the ladder's
+    # case: provision for the worst burst, pay only for occupancy
+    n_trickle = 12 if check else 5
+    gap, burst_gap = 1.5 * t_one, 3.0 * t_one
+    arrivals, picks = [], []
+    t = 0.0
+    for phase in range(2):
+        for _ in range(n_trickle):
+            arrivals.append(t)
+            picks.append(len(picks) % len(pool))
+            t += gap
+        for _ in range(4):
+            arrivals.append(t)
+            picks.append(len(picks) % len(pool))
+        t += burst_gap
+
+    def serve(engine, uid0):
+        reqs = [TopoRequest(uid=uid0 + i, problem=pool[pi], n_iter=n_iter)
+                for i, pi in enumerate(picks)]
+        t0 = time.monotonic()
+        futs = []
+        for req, at in zip(reqs, arrivals):
+            lag = t0 + at - time.monotonic()
+            if lag > 0:
+                time.sleep(lag)
+            futs.append(engine.submit(req))
+        for f in futs:
+            f.result(timeout=3600)
+        return reqs, [r.queue_wait_s + r.latency_s for r in reqs]
+
+    reqs, e2e = serve(eng, uid0=0)
+    traced = eng.step.trace_count[0] - traces0
+    assert eng.drain(timeout=60)
+    lstats = eng.throughput_stats()["ladder"]
+
+    # structural contracts (always asserted)
+    assert traced <= len(eng.rungs), (
+        f"width-varying trace retraced {traced}x > ladder size "
+        f"{len(eng.rungs)}")
+    assert lstats["rung_changes"] >= 2, lstats
+    assert sum(v > 0 for v in lstats["rung_steps"].values()) >= 2, (
+        f"trace never left one rung: {lstats}")
+    for req, pi in zip(reqs, picks):
+        assert req.done and req.fea_iters + req.cronet_iters == n_iter, (
+            f"uid {req.uid} dropped/perturbed across a rung change")
+        assert np.array_equal(req.density, ref(pi)), (
+            f"uid {req.uid} (problem {pi}) diverged from standalone run")
+
+    # rung-4 serving == dedicated width-4 engine, bitwise (quiesced:
+    # exactly 3 live lanes -> rung 4 on the ladder engine)
+    lad4 = eng.run([TopoRequest(uid=100 + k, problem=pool[k],
+                                n_iter=n_iter) for k in range(3)])
+    eng.shutdown()
+    ded = TopoServingEngine(cfg, params, u_scale=u_scale, slots=4,
+                            precision="fp32", shards=1)
+    ded4 = ded.run([TopoRequest(uid=100 + k, problem=pool[k],
+                                n_iter=n_iter) for k in range(3)])
+    ded.shutdown()
+    assert all(np.array_equal(a.density, b.density)
+               for a, b in zip(lad4, ded4)), (
+        "rung-4 serving diverged from a dedicated width-4 engine")
+
+    p50, p99 = np.percentile(e2e, 50), np.percentile(e2e, 99)
+    if verbose:
+        print(f"mesh {cfg.nelx}x{cfg.nely}, {len(picks)} requests x "
+              f"{n_iter} iters, width {slots} ladder {lstats['rungs']}")
+        print(f"  compiles        : {traced} (<= {len(lstats['rungs'])} "
+              f"rungs), {lstats['rung_changes']:.0f} rung changes, "
+              f"{lstats['migrations']:.0f} lane migrations")
+        print(f"  rung steps      : "
+              + ", ".join(f"w{k}: {v:.0f}"
+                          for k, v in lstats["rung_steps"].items()))
+        print(f"  ladder          : p50/p99 {p50:.2f}/{p99:.2f}s")
+
+    out = {"traced": float(traced),
+           "rung_changes": lstats["rung_changes"],
+           "p50_ladder_s": float(p50), "p99_ladder_s": float(p99)}
+    if check:
+        # pre-ladder baseline: same width-8 provisioning, no ladder —
+        # every tick pays full width regardless of occupancy
+        fixed = TopoServingEngine(cfg, params, u_scale=u_scale,
+                                  slots=slots, precision="fp32",
+                                  shards=1)
+        fixed.run([TopoRequest(uid=-3, problem=pool[0], n_iter=2)])
+        _, e2e_f = serve(fixed, uid0=200)
+        fixed.shutdown()
+        p50_f, p99_f = (np.percentile(e2e_f, 50),
+                        np.percentile(e2e_f, 99))
+        if verbose:
+            print(f"  fixed width {slots} : p50/p99 {p50_f:.2f}/"
+                  f"{p99_f:.2f}s")
+            print(f"  p99 speedup     : {p99_f / max(p99, 1e-9):.2f}x")
+        assert p99 < p99_f, (
+            f"ladder p99 {p99:.2f}s did not beat the fixed-width "
+            f"baseline {p99_f:.2f}s on the bursty trace")
+        out.update({"p50_fixed_s": float(p50_f),
+                    "p99_fixed_s": float(p99_f)})
+    print("ladder: compile bound + zero-drop rung changes + fixed-width "
+          "bitwise equality OK")
+    return out
+
+
 def train_smoke():
     """Push-gate training-lifecycle smoke: a tiny-mesh multi-load-case
     dataset (trajectories batched through fea2d.solve_b), a few train
@@ -1015,6 +1198,12 @@ def main():
                     help="measure the mesh-agnostic gateway under "
                          "sustained mixed-mesh overload: bounded queue "
                          "with shed-latest-deadline vs unbounded baseline")
+    ap.add_argument("--ladder", action="store_true",
+                    help="elastic-width ladder leg: compile bound + "
+                         "zero-drop rung changes + fixed-width bitwise "
+                         "equality (always asserted). With --smoke: "
+                         "push-gate budget; with --check: nightly "
+                         "budget plus the p99-beats-fixed-width claim")
     ap.add_argument("--smoke", action="store_true",
                     help="fast push-gate CI check: tiny-mesh gateway "
                          "serving + deterministic overload-policy checks "
@@ -1040,7 +1229,11 @@ def main():
     ap.add_argument("--loose-mult", type=float, default=4.0,
                     help="loose deadline as a multiple of ideal latency")
     args = ap.parse_args()
-    if args.fleet:
+    if args.ladder:
+        bench_ladder(size=args.size, slots=args.slots,
+                     n_iter=args.iters if args.check else 8,
+                     check=args.check)
+    elif args.fleet:
         bench_fleet(size=args.size, check=args.check or args.smoke,
                     train_cases=24 if args.check else 12,
                     train_steps=1000 if args.check else 600)

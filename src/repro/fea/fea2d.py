@@ -11,7 +11,7 @@ inside the optimization loop (paper §II-A).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +48,11 @@ class Problem(NamedTuple):
     fixed_x_mask: jnp.ndarray  # (ndof,) bookkeeping for the load volume
     penal: float = 3.0
     e_min: float = 1e-9
+    # shape-class padding: 1.0 on active elements, 0.0 on the passive
+    # border rows/cols pad_problem adds. None (the default) means every
+    # element is active — the pre-shape-class layout, and the path every
+    # existing caller stays on.
+    elem_mask: Optional[jnp.ndarray] = None   # (nely, nelx) or None
 
 
 def _edof_matrix(nelx: int, nely: int) -> np.ndarray:
@@ -109,8 +114,12 @@ def point_load_problem(nelx: int, nely: int, load_node=(0, 0),
 
 
 def stiffness_apply(prob: Problem, x_phys: jnp.ndarray, u: jnp.ndarray):
-    """Matrix-free K(x) @ u with SIMP interpolation E = Emin + x^p (1-Emin)."""
+    """Matrix-free K(x) @ u with SIMP interpolation E = Emin + x^p (1-Emin).
+    Passive elements (elem_mask == 0, shape-class padding) carry exactly
+    zero stiffness, so the padded border is fully decoupled."""
     e = prob.e_min + (x_phys.reshape(-1) ** prob.penal) * (1 - prob.e_min)
+    if prob.elem_mask is not None:
+        e = e * prob.elem_mask.reshape(-1)
     ue = u[prob.edof]                              # (ne, 8)
     fe = jnp.einsum("e,ij,ej->ei", e, prob.KE, ue)  # (ne, 8)
     out = jnp.zeros_like(u).at[prob.edof.reshape(-1)].add(fe.reshape(-1))
@@ -123,6 +132,8 @@ def solve(prob: Problem, x_phys: jnp.ndarray, tol: float = 1e-6,
     f = prob.f * prob.free_mask
     # diagonal of K for Jacobi preconditioner
     e = prob.e_min + (x_phys.reshape(-1) ** prob.penal) * (1 - prob.e_min)
+    if prob.elem_mask is not None:
+        e = e * prob.elem_mask.reshape(-1)
     diag_e = jnp.einsum("e,i->ei", e, jnp.diag(prob.KE))
     diag = jnp.zeros_like(f).at[prob.edof.reshape(-1)].add(diag_e.reshape(-1))
     diag = jnp.where(diag > 0, diag, 1.0)
@@ -162,9 +173,17 @@ def compliance_and_sens(prob: Problem, x_phys: jnp.ndarray, u: jnp.ndarray):
     ce = jnp.einsum("ei,ij,ej->e", ue, prob.KE, ue)       # (ne,)
     xf = x_phys.reshape(-1)
     e = prob.e_min + xf ** prob.penal * (1 - prob.e_min)
+    if prob.elem_mask is not None:
+        # passive padding: zero energy AND zero sensitivity — border
+        # elements touch active nodes, so ce alone is not zero there
+        m = prob.elem_mask.reshape(-1)
+        e = e * m
+        ce_s = ce * m
+    else:
+        ce_s = ce
     c = tree_sum(e * ce)    # batch-invariant: serving slots report the
     # exact compliance a standalone run reports
-    dc = -prob.penal * xf ** (prob.penal - 1) * (1 - prob.e_min) * ce
+    dc = -prob.penal * xf ** (prob.penal - 1) * (1 - prob.e_min) * ce_s
     return c, dc.reshape(x_phys.shape)
 
 
@@ -227,6 +246,71 @@ def tree_norm(a, axis: int = -1):
     return jnp.sqrt(tree_sum(a * a, axis=axis))
 
 
+def pad_problem(prob: Problem, nelx: int, nely: int) -> Problem:
+    """Embed ``prob`` into a larger canonical ``(nelx, nely)`` mesh with
+    a PASSIVE border — the mesh shape-class mechanism: the gateway pads
+    nearby discretizations onto one canonical mesh so its compile cache
+    grows with the number of shape classes, not the fleet.
+
+    The padding is inert by construction: padded elements carry an
+    ``elem_mask`` of 0.0 (exactly zero stiffness, energy, and
+    sensitivity — see ``_e_grid``/``compliance_and_sens_b``), padded
+    dofs are fixed (zero load, zero displacement), the filter normalizes
+    over active neighbours only, and the OC update freezes padded
+    densities at 0 with the volume constraint taken over active
+    elements (fea/simp.py). An exact-fit mesh returns the problem with
+    an all-ones mask attached (the same physics, compiled through the
+    masked step family), so one shape-class engine serves padded and
+    exact-fit requests uniformly.
+
+    Note the result is a DIFFERENT discretization of the same load
+    case: densities served on a shape class are bitwise-reproducible
+    against any engine of that class (the serving contract), not
+    against the original unpadded mesh. ``crop_density`` maps the
+    padded design back to the original mesh's layout.
+    """
+    ox, oy = prob.nelx, prob.nely
+    if nelx < ox or nely < oy:
+        raise ValueError(f"cannot pad {ox}x{oy} onto smaller shape "
+                         f"class {nelx}x{nely}")
+    # element grid is [ex, ey]; the density-layout (nely, nelx) shape is
+    # the same C-order buffer reinterpreted (flat el = ex*nely + ey,
+    # matching _e_grid's reshape-not-transpose convention)
+    mask_g = np.zeros((nelx, nely), np.float32)
+    mask_g[:ox, :oy] = 1.0
+    elem_mask = jnp.asarray(mask_g.reshape(nely, nelx))
+    if (nelx, nely) == (ox, oy):
+        return prob._replace(elem_mask=elem_mask)
+
+    def embed(vec, fill):
+        g = np.full((nelx + 1, nely + 1, 2), fill, np.float64)
+        g[:ox + 1, :oy + 1] = np.asarray(vec).reshape(ox + 1, oy + 1, 2)
+        return jnp.asarray(g.reshape(-1))
+
+    return Problem(
+        nelx=nelx, nely=nely, edof=jnp.asarray(_edof_matrix(nelx, nely)),
+        free_mask=embed(prob.free_mask, 0.0),   # padded dofs are fixed
+        f=embed(prob.f, 0.0),
+        KE=prob.KE, volfrac=prob.volfrac,
+        # padding reads as supported in the TrunkNet load volume — it IS
+        # a fully-constrained region of the padded problem
+        fixed_x_mask=embed(prob.fixed_x_mask, 1.0),
+        penal=prob.penal, e_min=prob.e_min, elem_mask=elem_mask)
+
+
+def crop_density(x, orig_nelx: int, orig_nely: int) -> np.ndarray:
+    """Crop a padded-mesh density field back to the original mesh's
+    density layout (the design-field inverse of ``pad_problem``)."""
+    nely, nelx = x.shape
+    if (nelx, nely) == (orig_nelx, orig_nely):
+        return np.asarray(x)
+    if nelx < orig_nelx or nely < orig_nely:
+        raise ValueError(f"density {nelx}x{nely} smaller than original "
+                         f"mesh {orig_nelx}x{orig_nely}")
+    g = np.asarray(x).reshape(nelx, nely)[:orig_nelx, :orig_nely]
+    return g.reshape(orig_nely, orig_nelx)
+
+
 def idle_problem(nelx: int, nely: int, volfrac: float = 0.5) -> Problem:
     """Zero-load, fully-fixed padding problem for empty serving slots: the
     masked batched CG treats it as converged in zero iterations, so it
@@ -252,6 +336,9 @@ class BatchProblem(NamedTuple):
     volfrac: jnp.ndarray       # (B,)
     penal: float = 3.0
     e_min: float = 1e-9
+    # per-slot active-element masks for shape-class padding; None keeps
+    # the pre-shape-class pytree shape (and compiled-step signatures)
+    elem_mask: Optional[jnp.ndarray] = None   # (B, nely, nelx) or None
 
     @property
     def batch(self) -> int:
@@ -259,7 +346,11 @@ class BatchProblem(NamedTuple):
 
 
 def stack_problems(probs) -> BatchProblem:
-    """Stack same-mesh Problems into a BatchProblem (slot order preserved)."""
+    """Stack same-mesh Problems into a BatchProblem (slot order preserved).
+    If ANY problem carries an elem_mask, every slot gets one (all-ones
+    for mask-less problems — the same physics, every masking op reduces
+    to a multiply by 1.0; the batch compiles via the masked step
+    family)."""
     p0 = probs[0]
     for p in probs[1:]:
         if (p.nelx, p.nely) != (p0.nelx, p0.nely):
@@ -267,13 +358,19 @@ def stack_problems(probs) -> BatchProblem:
                              f"got {p.nelx}x{p.nely} vs {p0.nelx}x{p0.nely}")
         if p.penal != p0.penal or p.e_min != p0.e_min:
             raise ValueError("SIMP penalty/e_min must match across a batch")
+    elem_mask = None
+    if any(p.elem_mask is not None for p in probs):
+        ones = jnp.ones((p0.nely, p0.nelx), jnp.float32)
+        elem_mask = jnp.stack([ones if p.elem_mask is None
+                               else jnp.asarray(p.elem_mask, jnp.float32)
+                               for p in probs])
     return BatchProblem(
         nelx=p0.nelx, nely=p0.nely, edof=p0.edof, KE=p0.KE,
         f=jnp.stack([p.f for p in probs]),
         free_mask=jnp.stack([p.free_mask for p in probs]),
         fixed_x_mask=jnp.stack([p.fixed_x_mask for p in probs]),
         volfrac=jnp.asarray([p.volfrac for p in probs]),
-        penal=p0.penal, e_min=p0.e_min,
+        penal=p0.penal, e_min=p0.e_min, elem_mask=elem_mask,
     )
 
 
@@ -287,7 +384,10 @@ def _ke_apply(KE, ue):
 
 
 def _simp_e(bp: BatchProblem, X):
-    return bp.e_min + (X.reshape(X.shape[0], -1) ** bp.penal) * (1 - bp.e_min)
+    e = bp.e_min + (X.reshape(X.shape[0], -1) ** bp.penal) * (1 - bp.e_min)
+    if bp.elem_mask is not None:
+        e = e * bp.elem_mask.reshape(X.shape[0], -1)
+    return e
 
 
 def _ue_slices(Ug):
@@ -320,9 +420,13 @@ def _assemble(fe):
 def _e_grid(bp: BatchProblem, X):
     """SIMP stiffness per element on the (nelx, nely) element grid, using
     the same flat element indexing as the single-problem path (reshape,
-    not transpose — matches stiffness_apply's x_phys.reshape(-1))."""
+    not transpose — matches stiffness_apply's x_phys.reshape(-1)).
+    Passive padding elements (elem_mask == 0) get exactly zero stiffness."""
     B, nely, nelx = X.shape
-    return bp.e_min + (X.reshape(B, nelx, nely) ** bp.penal) * (1 - bp.e_min)
+    e = bp.e_min + (X.reshape(B, nelx, nely) ** bp.penal) * (1 - bp.e_min)
+    if bp.elem_mask is not None:
+        e = e * bp.elem_mask.reshape(B, nelx, nely)
+    return e
 
 
 def stiffness_apply_b(bp: BatchProblem, X, U):
@@ -342,6 +446,10 @@ def compliance_and_sens_b(bp: BatchProblem, X, U):
     e = _simp_e(bp, X)
     c = tree_sum(e * ce, axis=-1)
     xf = X.reshape(B, -1)
+    if bp.elem_mask is not None:
+        # border padding elements share nodes with active ones, so their
+        # raw ce is nonzero — the sensitivity must be masked explicitly
+        ce = ce * bp.elem_mask.reshape(B, -1)
     dc = -bp.penal * xf ** (bp.penal - 1) * (1 - bp.e_min) * ce
     return c, dc.reshape(X.shape)
 

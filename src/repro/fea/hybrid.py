@@ -60,13 +60,17 @@ class HybridState(NamedTuple):
 
 
 def init_state(cfg: CRONetConfig, bp: fea2d.BatchProblem) -> HybridState:
-    """Fresh state for every slot: uniform volfrac density, cold history."""
+    """Fresh state for every slot: uniform volfrac density, cold history.
+    On a shape-padded batch the passive border starts (and stays) at 0."""
     B = bp.batch
+    x0 = jnp.broadcast_to(bp.volfrac[:, None, None],
+                          (B, bp.nely, bp.nelx)).astype(jnp.float32)
+    if bp.elem_mask is not None:
+        x0 = x0 * bp.elem_mask
     # each field gets its own buffer: the jitted step donates the state, and
     # aliased leaves would be donated twice
     return HybridState(
-        x=jnp.broadcast_to(bp.volfrac[:, None, None],
-                           (B, bp.nely, bp.nelx)).astype(jnp.float32),
+        x=x0,
         u=jnp.zeros_like(bp.f),
         hist=jnp.zeros((B, cfg.hist_len, bp.nely, bp.nelx), jnp.float32),
         it=jnp.zeros((B,), jnp.int32),
@@ -78,10 +82,14 @@ def init_state(cfg: CRONetConfig, bp: fea2d.BatchProblem) -> HybridState:
 
 
 def reset_slot(cfg: CRONetConfig, state: HybridState, i: int,
-               volfrac: float) -> HybridState:
-    """Re-initialize slot i in place (serving refill after completion)."""
+               volfrac: float, elem_mask=None) -> HybridState:
+    """Re-initialize slot i in place (serving refill after completion).
+    ``elem_mask`` (nely, nelx) zeroes the passive shape-class border."""
+    x0 = jnp.full(state.x.shape[1:], volfrac)
+    if elem_mask is not None:
+        x0 = x0 * elem_mask
     return HybridState(
-        x=state.x.at[i].set(jnp.full(state.x.shape[1:], volfrac)),
+        x=state.x.at[i].set(x0),
         u=state.u.at[i].set(0.0),
         hist=state.hist.at[i].set(0.0),
         it=state.it.at[i].set(0),
@@ -110,6 +118,39 @@ def restore_slot(state: HybridState, i: int,
     """Scatter a parked lane snapshot back into slot i (re-admission)."""
     return HybridState(*[leaf.at[i].set(jnp.asarray(v))
                          for leaf, v in zip(state, parked)])
+
+
+def move_slot(state: HybridState, src: int, dst: int) -> HybridState:
+    """Copy lane src's snapshot over lane dst (ladder compaction before a
+    width shrink). Same exactness argument as park/restore: a lane
+    gather/scatter is bitwise, and every batched op is slot-invariant, so
+    the moved trajectory continues exactly. src's old lane is left behind
+    as garbage — the caller reseeds or slices it away."""
+    return HybridState(*[leaf.at[dst].set(leaf[src]) for leaf in state])
+
+
+def resize_state(state: HybridState, new_b: int) -> HybridState:
+    """Re-width the stacked state to ``new_b`` lanes (per-tick ladder rung
+    change). Shrinking slices off the tail — callers compact live lanes
+    below ``new_b`` first (move_slot). Growing appends idle lanes shaped
+    like ``init_state`` output (x=0.5, cold history, err=inf); they are
+    reseeded via reset/restore before any request lands on them."""
+    B = state.x.shape[0]
+    if new_b == B:
+        return state
+    if new_b < B:
+        return HybridState(*[leaf[:new_b] for leaf in state])
+    n = new_b - B
+
+    def pad(leaf, fill):
+        extra = jnp.full((n,) + leaf.shape[1:], fill, leaf.dtype)
+        return jnp.concatenate([leaf, extra], axis=0)
+
+    return HybridState(
+        x=pad(state.x, 0.5), u=pad(state.u, 0.0), hist=pad(state.hist, 0.0),
+        it=pad(state.it, 0), err=pad(state.err, jnp.inf),
+        n_cronet=pad(state.n_cronet, 0), n_fea=pad(state.n_fea, 0),
+        compliance=pad(state.compliance, 0.0))
 
 
 def _oracle_forward(cfg: CRONetConfig):
@@ -154,6 +195,7 @@ def make_hybrid_step(cfg: CRONetConfig, u_scale: float,
     forward = {"oracle": _oracle_forward,
                "megakernel": _megakernel_forward}[backend](cfg)
     filt_b = simp.make_filter_b(cfg.nelx, cfg.nely, rmin)
+    filt_mask_b = simp.make_filter_b(cfg.nelx, cfg.nely, rmin, masked=True)
 
     trace_count = [0]  # bumped per retrace; see .trace_count below
 
@@ -191,10 +233,17 @@ def make_hybrid_step(cfg: CRONetConfig, u_scale: float,
         u = jnp.where(use_cronet[:, None], u_pred, u_fea)
 
         c, dc = fea2d.compliance_and_sens_b(bp, state.x, u)
-        dc_f = filt_b(state.x, dc)
+        # elem_mask=None is an EMPTY pytree subtree, so this branches at
+        # trace time — the unmasked path lowers to exactly the pre-ladder
+        # graph (bitwise contract with historical runs)
+        if bp.elem_mask is None:
+            dc_f = filt_b(state.x, dc)
+        else:
+            dc_f = filt_mask_b(state.x, dc, bp.elem_mask)
         hist = jnp.roll(state.hist, -1, axis=1).at[:, -1].set(state.x)
         dv = jnp.ones_like(state.x) / (cfg.nelx * cfg.nely)
-        x = simp.oc_update_b(state.x, dc_f, dv[0], bp.volfrac)
+        x = simp.oc_update_b(state.x, dc_f, dv[0], bp.volfrac,
+                             mask=bp.elem_mask)
         return HybridState(
             x=x, u=u, hist=hist, it=state.it + 1, err=err,
             n_cronet=state.n_cronet + use_cronet.astype(jnp.int32),

@@ -17,34 +17,57 @@ from repro.fea import fea2d
 
 
 def make_filter(nelx: int, nely: int, rmin: float = 1.5):
-    """Sensitivity filter weights as a small static convolution kernel."""
+    """Sensitivity filter weights as a small static convolution kernel.
+
+    The returned ``apply(x, dc, mask=None)`` accepts an optional
+    active-element mask (shape-class padding): the weight normalization
+    then counts active neighbours only (``conv(mask)`` instead of
+    ``conv(ones)``) and the filtered sensitivity is zeroed on passive
+    elements. ``mask=None`` is the exact pre-mask code path. An
+    all-ones mask is mathematically the same filter but NOT bitwise
+    (``conv(ones_like(x))`` is constant-folded at compile time while
+    ``conv(mask)`` is evaluated at runtime — last-ulp differences);
+    bitwise contracts therefore hold WITHIN a masked or unmasked
+    serving path, never across the two."""
     r = int(np.ceil(rmin)) - 1
     ks = 2 * r + 1
     wy, wx = np.meshgrid(np.arange(-r, r + 1), np.arange(-r, r + 1), indexing="ij")
     w = np.maximum(0.0, rmin - np.sqrt(wx ** 2 + wy ** 2))
     kernel = jnp.asarray(w[..., None, None])  # (ks, ks, 1, 1)
 
-    def apply(x, dc):
+    def conv(a):
+        return jax.lax.conv_general_dilated(
+            a[None, ..., None], kernel, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))[0, ..., 0]
+
+    def apply(x, dc, mask=None):
         """Classic sensitivity filter: dc~ = conv(w * x * dc) / (x * conv(w))."""
-        num = jax.lax.conv_general_dilated(
-            (x * dc)[None, ..., None], kernel, (1, 1), "SAME",
-            dimension_numbers=("NHWC", "HWIO", "NHWC"))[0, ..., 0]
-        den = jax.lax.conv_general_dilated(
-            jnp.ones_like(x)[None, ..., None], kernel, (1, 1), "SAME",
-            dimension_numbers=("NHWC", "HWIO", "NHWC"))[0, ..., 0]
-        return num / jnp.maximum(den * jnp.maximum(x, 1e-3), 1e-9)
+        num = conv(x * dc)
+        den = conv(jnp.ones_like(x) if mask is None else mask)
+        out = num / jnp.maximum(den * jnp.maximum(x, 1e-3), 1e-9)
+        return out if mask is None else out * mask
 
     return apply
 
 
-def oc_update(x, dc, dv, volfrac, move: float = 0.2):
-    """Optimality-criteria update with bisection on the Lagrange multiplier."""
+def oc_update(x, dc, dv, volfrac, move: float = 0.2, mask=None):
+    """Optimality-criteria update with bisection on the Lagrange multiplier.
+
+    With an active-element ``mask`` (shape-class padding) the passive
+    densities are frozen at 0 and the volume constraint is taken over
+    ACTIVE elements only — ``volfrac`` keeps its meaning on the original
+    mesh. ``mask=None`` is the exact pre-mask path (bitwise contracts
+    hold within a masked or unmasked serving path, not across them)."""
 
     def xnew(lmid):
         be = jnp.sqrt(jnp.maximum(-dc / (dv * lmid), 1e-30))
         xn = x * be
         xn = jnp.clip(xn, x - move, x + move)
-        return jnp.clip(xn, 0.001, 1.0)
+        xn = jnp.clip(xn, 0.001, 1.0)
+        return xn if mask is None else xn * mask
+
+    active = (float(x.size) if mask is None
+              else jnp.maximum(fea2d.tree_sum(mask.reshape(-1)), 1.0))
 
     def body(state, _):
         l1, l2 = state
@@ -52,7 +75,7 @@ def oc_update(x, dc, dv, volfrac, move: float = 0.2):
         # batch-invariant volume sum: the bisection COMPARES the mean, so a
         # last-ulp batch-width difference would fork the whole multiplier
         # search; tree_sum keeps serving slots bitwise-equal to solo runs
-        vol = fea2d.tree_sum(xnew(lmid).reshape(-1)) / x.size
+        vol = fea2d.tree_sum(xnew(lmid).reshape(-1)) / active
         too_much = vol > volfrac
         l1 = jnp.where(too_much, lmid, l1)
         l2 = jnp.where(too_much, l2, lmid)
@@ -63,17 +86,28 @@ def oc_update(x, dc, dv, volfrac, move: float = 0.2):
     return xnew(0.5 * (l1 + l2))
 
 
-def make_filter_b(nelx: int, nely: int, rmin: float = 1.5):
+def make_filter_b(nelx: int, nely: int, rmin: float = 1.5,
+                  masked: bool = False):
     """Batched sensitivity filter: (B, nely, nelx) densities/sensitivities.
     vmap of the single-problem filter — the conv is bitwise batch-invariant
-    on CPU, which the batched serving path relies on."""
-    return jax.vmap(make_filter(nelx, nely, rmin))
+    on CPU, which the batched serving path relies on. With ``masked=True``
+    the returned callable takes ``(X, DC, mask)`` with a per-slot
+    (B, nely, nelx) active-element mask (shape-class serving)."""
+    apply = make_filter(nelx, nely, rmin)
+    if masked:
+        return jax.vmap(lambda x, dc, m: apply(x, dc, m))
+    return jax.vmap(apply)
 
 
-def oc_update_b(X, DC, dv, volfrac, move: float = 0.2):
-    """Batched OC update; volfrac is per-slot (B,). X/DC: (B, nely, nelx)."""
-    return jax.vmap(lambda x, dc, vf: oc_update(x, dc, dv, vf, move))(
-        X, DC, volfrac)
+def oc_update_b(X, DC, dv, volfrac, move: float = 0.2, mask=None):
+    """Batched OC update; volfrac is per-slot (B,). X/DC: (B, nely, nelx).
+    ``mask`` (optional, per-slot (B, nely, nelx)) freezes passive
+    shape-class padding at density 0."""
+    if mask is None:
+        return jax.vmap(lambda x, dc, vf: oc_update(x, dc, dv, vf, move))(
+            X, DC, volfrac)
+    return jax.vmap(lambda x, dc, vf, m: oc_update(x, dc, dv, vf, move, m))(
+        X, DC, volfrac, mask)
 
 
 class SimpState(NamedTuple):

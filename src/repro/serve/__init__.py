@@ -30,7 +30,7 @@ Public API (everything else in this package is implementation detail):
     ``FleetEvent`` log), ``swap_model(tag, mesh=...)`` per-bucket
     swaps, and pool elasticity (``idle_evict_s`` cold-bucket eviction
     with lazy bitwise-equal rebuild, ``autoscale`` slot widths from
-    observed arrival rates).
+    observed arrival rates, and elastic width ladders — see below).
 
 Quickstart (mixed-mesh serving)::
 
@@ -45,6 +45,38 @@ Quickstart (mixed-mesh serving)::
     req = fut.result()            # req.density, req.deadline_met, ...
     stats = gw.throughput_stats(per_mesh=True)
     gw.shutdown()
+
+Elastic width ladders + shape classes (pool elasticity without
+rebuilds)::
+
+    gw = TopoGateway(cfg, params, u_scale,
+                     ladder=(2, 4, 8, 16),      # per-tick rung choice
+                     shape_classes=[(16, 8), (32, 8)],
+                     autoscale=True, max_slots=16)
+
+``ladder=`` makes slot width a PER-TICK choice instead of a rebuild
+event: every bucket engine is built at ``max_slots`` wide, precompiles
+the ladder of batch widths at activation, and each tick dispatches at
+the smallest rung covering live occupancy — a trickle-phase request
+stops paying full-width tick latency just because the engine was
+provisioned for bursts. A request served at rung W is bitwise-equal to
+the same request on a dedicated fixed-width-W engine; mid-stream rung
+changes drop nothing (live lanes compact via exact lane moves).
+
+``shape_classes=`` pads nearby meshes onto canonical shape classes
+with a passive border (zero stiffness, fixed dofs, masked filter/OC),
+so the compile cache grows with ``len(ladder) x len(shape_classes)``
+instead of the fleet's mesh count; densities are cropped back to the
+original mesh on completion. Padded serving is bitwise-reproducible
+against any engine of the same shape class (it is a different
+discretization than the exact mesh, so not bitwise vs an unpadded
+engine).
+
+With ``autoscale=True`` the maintenance pass additionally converts the
+observed per-bucket arrival rate into a live admission cap
+(``engine.set_target_slots``, snapped up to a rung, ``resize`` fleet
+events) instead of picking a build-time width — nothing is ever
+dropped or rebuilt when the target moves.
 
 The LM-decode serving half (``server``, ``decode``) is deliberately NOT
 re-exported here: import those modules directly.

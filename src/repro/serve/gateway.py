@@ -65,8 +65,16 @@ Fleet operations — the per-bucket model lifecycle under live traffic:
     the rebuild cheap). With ``autoscale=True`` a (re)built bucket's
     slot width follows its observed arrival rate
     (``scheduler.target_slots``), so hot meshes get wide engines and
-    cold ones the minimum width. Control-plane transitions land in
-    ``gateway.events`` as typed ``FleetEvent`` records.
+    cold ones the minimum width — and with ``ladder=`` set the width
+    follows the rate LIVE: buckets build wide, every maintenance pass
+    snaps ``target_slots`` onto a precompiled ladder rung via
+    ``engine.set_target_slots`` (a ``FleetEvent("resize")``), and the
+    engine dispatches each tick at the smallest rung covering its
+    occupancy. ``shape_classes=`` adds the same idea one level up:
+    nearby meshes are padded onto canonical shape classes ahead of
+    bucket lookup, bounding fleet compile cardinality at
+    ``len(ladder) x len(shape_classes)``. Control-plane transitions
+    land in ``gateway.events`` as typed ``FleetEvent`` records.
 
 Lifecycle mirrors the engine's explicit state machine: NEW -> RUNNING
 (first submit) -> CLOSED (``shutdown()``, which drains the queue, then
@@ -83,8 +91,10 @@ import time
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from repro.configs.cronet import CRONetConfig
+from repro.fea import fea2d
 from repro.serve.registry import ModelResolver, NoModelError
-from repro.serve.scheduler import BoundedEDFScheduler, target_slots
+from repro.serve.scheduler import (BoundedEDFScheduler, shape_class_for,
+                                   target_slots)
 from repro.serve.topo_service import TopoServingEngine
 from repro.serve.types import (EngineClosed, EngineState, FleetEvent,
                                OverloadPolicy, RequestShed, TagStats,
@@ -196,6 +206,21 @@ class TopoGateway:
         scale_rate, min_slots, max_slots)``. ``max_slots`` defaults to
         ``slots``; with ``autoscale=False`` (default) every bucket gets
         exactly ``slots``.
+    ladder : optional width ladder passed through to every gateway-built
+        engine (e.g. ``(2, 4, 8, 16)``): engines precompile the ladder
+        and dispatch each tick at the smallest rung >= occupancy. With
+        ``autoscale=True`` buckets are built WIDE (``max_slots``) and
+        scaled LIVE per maintenance pass (``engine.set_target_slots``,
+        recorded as ``FleetEvent("resize")``) — autoscale stops waiting
+        for a cold eviction to change a width.
+    shape_classes : optional canonical ``(nelx, nely)`` mesh classes.
+        A submitted mesh is padded (``fea2d.pad_problem``, passive
+        border masked out of the physics) onto the smallest class that
+        fits BEFORE bucketing, so nearby meshes share one engine and
+        the fleet compile cache grows with ``len(ladder) x
+        len(shape_classes)`` instead of with distinct request meshes.
+        Harvested densities are cropped back to the submitted mesh.
+        Meshes no class fits keep their own exact-mesh bucket.
     canary_slots : slot width for canary engines (default
         ``min_slots`` — a canary serves a fraction of the bucket's
         traffic and shares its depth budget, so it starts narrow).
@@ -218,6 +243,8 @@ class TopoGateway:
                  autoscale: bool = False, min_slots: int = 2,
                  max_slots: Optional[int] = None, scale_rate: float = 1.0,
                  canary_slots: Optional[int] = None,
+                 ladder: Optional[Tuple[int, ...]] = None,
+                 shape_classes: Optional[List] = None,
                  **engine_kwargs):
         self.registry = registry
         self.model_tag = model_tag
@@ -259,6 +286,12 @@ class TopoGateway:
         self.scale_rate = scale_rate
         self.canary_slots = (canary_slots if canary_slots is not None
                              else min_slots)
+        self.ladder = tuple(int(r) for r in ladder) if ladder else None
+        self.shape_classes = ([self._mesh_arg(c) for c in shape_classes]
+                              if shape_classes else None)
+        self._shape_class_set = (set(self.shape_classes)
+                                 if self.shape_classes else set())
+        self._rung_targets: Dict[Mesh, int] = {}  # last applied resize
         self._engine_kwargs = dict(engine_kwargs)
         self._owns_engines = engine_factory is None
         self._engine_factory = engine_factory or self._default_factory
@@ -391,16 +424,26 @@ class TopoGateway:
     def _observed_rate(self, mesh: Mesh,
                        now: Optional[float] = None) -> float:
         """Observed arrival rate (requests/s) for a bucket over its
-        recent submit window; 0.0 with fewer than two arrivals. The
-        window stretches to ``now``, so a bucket that stopped arriving
-        decays toward 0 instead of remembering its last burst."""
+        recent submit window; 0.0 with fewer than two arrivals.
+        N arrivals span N-1 inter-arrival intervals, so the estimator is
+        ``(N - 1) / (now - first)`` — ``len(d) / span`` would report two
+        arrivals 1 s apart as 2 req/s and bias every width decision
+        high. The numerator is frozen while the denominator stretches to
+        ``now`` (monotonic clock, like the stamps in ``d``), so a bucket
+        that stopped arriving decays toward 0 instead of remembering its
+        last burst."""
         d = self._arrivals.get(mesh)
         if not d or len(d) < 2:
             return 0.0
-        now = time.time() if now is None else now
-        return len(d) / max(now - d[0], 1e-9)
+        now = time.monotonic() if now is None else now
+        return (len(d) - 1) / max(now - d[0], 1e-9)
 
     def _slots_for(self, mesh: Mesh) -> int:
+        if self.ladder is not None and self.autoscale:
+            # ladder engines are built WIDE and scaled LIVE: the per-tick
+            # rung (occupancy) and the maintenance-pass admission cap
+            # (set_target_slots) do the narrowing, without a rebuild
+            return self.max_slots
         if not self.autoscale:
             return self.slots
         return target_slots(self._observed_rate(mesh), self.scale_rate,
@@ -451,6 +494,8 @@ class TopoGateway:
         return TopoServingEngine(cfg, params, u_scale,
                                  slots=self._slots_for(mesh),
                                  model_tag=tag,
+                                 ladder=self.ladder,
+                                 shape_padded=mesh in self._shape_class_set,
                                  **self._engine_kwargs)
 
     def _engine_for(self, mesh: Mesh) -> TopoServingEngine:
@@ -785,6 +830,8 @@ class TopoGateway:
                         (ctrl.u_scale if ctrl.u_scale is not None
                          else self.u_scale),
                         slots=self.canary_slots, model_tag=ctrl.tag,
+                        ladder=self.ladder,
+                        shape_padded=ctrl.mesh in self._shape_class_set,
                         **self._engine_kwargs)
                 else:
                     ce = self._engine_factory(*ctrl.mesh)
@@ -968,6 +1015,7 @@ class TopoGateway:
         self._retire_engine(eng)
         del self._engines[mesh]
         tag = self._bucket_tags.pop(mesh, None)
+        self._rung_targets.pop(mesh, None)
         self._unlease(tag)
         self._evicted_meshes.add(mesh)
         self._evictions += 1
@@ -1001,8 +1049,9 @@ class TopoGateway:
 
     def _maintain(self):
         """Dispatcher-thread housekeeping between forwards: finalize
-        rolled-back canaries once their engine drains, and evict
-        cold buckets past the idle horizon."""
+        rolled-back canaries once their engine drains, apply live
+        ladder-rung targets to autoscaled buckets, and evict cold
+        buckets past the idle horizon."""
         if self._dissolving:
             # swap the list out and merge the survivors back under the
             # lock: _on_request_done appends rolled-back controllers
@@ -1026,8 +1075,29 @@ class TopoGateway:
             if keep:
                 with self._queue.cond:
                     self._dissolving.extend(keep)
+        if self.autoscale and self.ladder is not None and self._owns_engines:
+            # LIVE width targets: ladder engines consume target_slots per
+            # tick (set_target_slots caps admissions at a rung), so
+            # autoscale acts here — every maintenance pass — instead of
+            # waiting for a cold eviction + rebuild to change a width
+            now_m = time.monotonic()
+            for mesh, eng in list(self._engines.items()):
+                if getattr(eng, "ladder", None) is None:
+                    continue
+                rate = self._observed_rate(mesh, now_m)
+                tgt = target_slots(rate, self.scale_rate, self.min_slots,
+                                   getattr(eng, "slots", self.max_slots))
+                applied = eng.set_target_slots(tgt)
+                if self._rung_targets.get(mesh) != applied:
+                    self._rung_targets[mesh] = applied
+                    self._record_event(
+                        "resize", mesh, self._bucket_tags.get(mesh),
+                        details={"target_slots": applied,
+                                 "rate": round(rate, 3)})
         if self.idle_evict_s is not None:
-            now = time.time()
+            # idle-eviction clock: monotonic, matching _last_seen — an
+            # NTP step must not fabricate (or mask) a cold horizon
+            now = time.monotonic()
             for mesh, eng in list(self._engines.items()):
                 if mesh in self._canaries or eng.inflight:
                     continue
@@ -1041,7 +1111,9 @@ class TopoGateway:
 
     def _needs_maintenance(self) -> bool:
         return bool(self._dissolving) or (
-            self.idle_evict_s is not None and bool(self._engines))
+            self.idle_evict_s is not None and bool(self._engines)) or (
+            self.autoscale and self.ladder is not None
+            and bool(self._engines))
 
     # ---------------------------------------------------------- streaming
 
@@ -1064,12 +1136,27 @@ class TopoGateway:
             raise ValueError(
                 f"request {req.uid} problem must expose positive integer "
                 f"nelx/nely (got {type(req.problem).__name__})") from None
+        if self.shape_classes is not None and req.orig_mesh is None:
+            # shape-class routing runs AHEAD of bucketing: pad the
+            # problem onto the smallest canonical class that fits (in
+            # the caller's thread — a malformed problem fails ITS
+            # submit) so every later hop — arrival window, queue key,
+            # engine — sees the class mesh. The engine crops the
+            # harvested density back to orig_mesh.
+            cls = shape_class_for(req.mesh, self.shape_classes)
+            if cls is not None:
+                orig = req.mesh
+                req.problem = fea2d.pad_problem(req.problem, *cls)
+                req.orig_mesh = orig
         self.start()   # no-op while the dispatcher is alive
         if deadline_s is not None:
             req.deadline_s = deadline_s
         if priority:
             req.priority = priority
-        now = time.time()
+        # monotonic stamps: deadline/arrival-rate/idle bookkeeping must
+        # not move when NTP steps the wall clock (completed_t and
+        # FleetEvent.t stay wall-clock for humans)
+        now = time.monotonic()
         req.submit_t = now
         req.deadline = (now + req.deadline_s
                         if req.deadline_s is not None else None)
@@ -1115,13 +1202,13 @@ class TopoGateway:
     def _on_request_done(self, fut: TopoFuture):
         req = fut.request
         with self._queue.cond:
+            # the in-flight decrement and the drain()/dispatcher wake-up
+            # are unconditional: whatever the bookkeeping below does, a
+            # resolved request must never be counted in flight forever
             self._inflight -= 1
             try:
                 mesh = req.mesh
-            except Exception:
-                mesh = None
-            if mesh is not None:
-                self._last_seen[mesh] = time.time()
+                self._last_seen[mesh] = time.monotonic()
                 ctrl = self._canaries.get(mesh)
                 if (ctrl is not None and ctrl.active and req.done
                         and fut.exception() is None):
@@ -1147,7 +1234,19 @@ class TopoGateway:
                             self._record_event("rollback", mesh, ctrl.tag,
                                                reason,
                                                details=ctrl.describe())
-            self._queue.cond.notify_all()   # wake drain() + dispatcher
+            except Exception as exc:
+                # a malformed completion (e.g. a problem object whose
+                # .mesh raises) used to be swallowed bare — which
+                # silently stalled canary stat accumulation AND, had the
+                # canary block thrown, would have propagated into the
+                # resolving engine thread. Record the typed event so the
+                # failure is observable in gateway.events
+                self._record_event(
+                    "callback-error", None,
+                    getattr(req, "routed_tag", None),
+                    reason=f"uid {getattr(req, 'uid', '?')}: {exc!r}")
+            finally:
+                self._queue.cond.notify_all()   # wake drain() + dispatcher
 
     # --------------------------------------------------------- dispatcher
 

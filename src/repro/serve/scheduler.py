@@ -42,11 +42,21 @@ this owns the queues:
     original deadline and sequence number, so a parked request resumes
     exactly where EDF places it.
 
-  * ``target_slots`` — the pure slot-width autoscaling policy for the
-    gateway's pool elasticity: observed per-bucket arrival rate in,
-    engine batch width out (clamped, even, applied at bucket build /
-    post-eviction rebuild — the only points where a compiled step's
-    shape may change).
+  * ``target_slots`` / ``ladder_rungs`` / ``rung_for`` — the pure
+    elasticity policies. ``target_slots`` maps an observed per-bucket
+    arrival rate to a slot width (clamped, even). On a ladder-less
+    engine it is applied at bucket build / post-eviction rebuild (the
+    only points where a compiled step's shape may change there); a
+    ladder engine instead consumes it LIVE — the gateway feeds it to
+    ``TopoServingEngine.set_target_slots`` each maintenance pass and
+    the engine snaps it to a precompiled rung (``rung_for``), so width
+    changes are a per-tick dispatch choice, never a rebuild.
+
+  * ``shape_class_for`` — the mesh shape-class routing policy: map a
+    request's exact ``(nelx, nely)`` onto the smallest canonical class
+    that contains it, so the gateway's compile cache grows with
+    ``len(ladder) x len(shape_classes)`` instead of with the fleet
+    (requests are padded with passive borders, ``fea2d.pad_problem``).
 
 Engine integration contract: the scheduler's condition variable
 (``cond``) is the single lock for queue state. ``push``/``pop``/``peek``
@@ -332,10 +342,12 @@ class BoundedEDFScheduler(EDFScheduler):
 def target_slots(rate: float, base_rate: float, min_slots: int = 2,
                  max_slots: int = 8) -> int:
     """Slot width for an observed per-bucket arrival rate — the pure
-    policy half of the gateway's pool elasticity (applied when a bucket
-    is built or lazily rebuilt after a cold eviction; a live engine's
-    compiled step is shaped by its width, so resizing happens at the
-    rebuild boundary, never mid-flight).
+    policy half of the gateway's pool elasticity. A ladder-less engine
+    applies it when a bucket is built or lazily rebuilt after a cold
+    eviction (its compiled step is shaped by one width, so resizing
+    happens at the rebuild boundary); a ladder engine consumes it live
+    as an admission cap snapped to a precompiled rung
+    (``TopoServingEngine.set_target_slots``).
 
     ``base_rate`` is the arrival rate (requests/s) one ``min_slots``-wide
     engine is provisioned for; the width grows proportionally with the
@@ -352,3 +364,54 @@ def target_slots(rate: float, base_rate: float, min_slots: int = 2,
     width = min_slots * math.ceil(rate / base_rate)
     width += width % 2
     return max(min_slots, min(max_slots, width))
+
+
+DEFAULT_LADDER = (2, 4, 8, 16)
+
+
+def ladder_rungs(max_width: int,
+                 ladder: Optional[Sequence[int]] = None,
+                 min_width: int = 2) -> Tuple[int, ...]:
+    """The sorted tuple of batch widths an engine shard precompiles.
+
+    ``ladder`` defaults to ``DEFAULT_LADDER`` (2/4/8/16) and is clamped
+    to ``[min_width, max_width]``; ``max_width`` (the shard's full
+    width) is always included so full occupancy stays dispatchable.
+    Widths below 2 are rejected — a unit batch dim lowers differently
+    under XLA and would break the bitwise slot-invariance contract.
+    """
+    if min_width < 2:
+        raise ValueError(f"min_width must be >= 2, got {min_width}")
+    if max_width < min_width:
+        raise ValueError(f"max_width {max_width} < min_width {min_width}")
+    if ladder is None:
+        ladder = DEFAULT_LADDER
+    rungs = {int(r) for r in ladder if min_width <= int(r) <= max_width}
+    rungs.add(max_width)
+    return tuple(sorted(rungs))
+
+
+def rung_for(occupancy: int, rungs: Sequence[int]) -> int:
+    """Smallest precompiled width >= live occupancy — the per-tick
+    dispatch width. Occupancy above the top rung clamps to it (the
+    admission loop never admits past the shard width, so that branch
+    only matters for out-of-range caps fed by ``set_target_slots``)."""
+    for r in rungs:
+        if r >= occupancy:
+            return r
+    return rungs[-1]
+
+
+def shape_class_for(mesh: Tuple[int, int],
+                    classes: Sequence[Tuple[int, int]]
+                    ) -> Optional[Tuple[int, int]]:
+    """The canonical shape class serving ``mesh``: the smallest-area
+    class with ``NELX >= nelx and NELY >= nely`` (ties break to the
+    lexicographically smallest class — deterministic routing). None
+    when no class contains the mesh; the gateway then serves the exact
+    mesh in its own bucket, as without shape classes."""
+    fits = [c for c in classes
+            if c[0] >= mesh[0] and c[1] >= mesh[1]]
+    if not fits:
+        return None
+    return min(fits, key=lambda c: (c[0] * c[1], c))

@@ -21,6 +21,20 @@ single compiled step — but admission is live:
     re-seeded, and the parked request re-enters the queue with its
     original rank, resuming bitwise-exactly on re-admission
     (fea/hybrid.restore_slot).
+  * With ``ladder=``, slot width becomes a PER-TICK rung choice instead
+    of a rebuild event: the engine precompiles a small sorted ladder of
+    batch widths at start (bounding its compile-cache cardinality at
+    ``len(ladder)``) and every tick dispatches at the smallest compiled
+    rung >= live occupancy — padding lanes are idle problems the masked
+    CG ``need`` mask skips. Rung changes migrate live lanes with the
+    same exact gather/scatter park/restore uses, so a mid-stream rung
+    change drops nothing and perturbs no trajectory.
+  * ``shape_padded=True`` marks an engine serving a canonical SHAPE
+    CLASS: requests arrive padded onto the class mesh
+    (fea2d.pad_problem) carrying a passive-border element mask, and
+    harvested densities are cropped back to ``req.orig_mesh``. Compile
+    cache across a fleet then grows with len(ladder) x len(shape
+    classes), not with the number of distinct request meshes.
   * Lifecycle is an explicit state machine (serve/types.EngineState):
     ``stop()`` is the restartable pause the ``run()`` drain shim cycles
     through; ``shutdown()`` is terminal — ``submit()`` afterwards raises
@@ -54,7 +68,7 @@ import dataclasses
 import functools
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -62,7 +76,8 @@ import numpy as np
 
 from repro.configs.cronet import CRONetConfig
 from repro.fea import fea2d, hybrid
-from repro.serve.scheduler import INF, EDFScheduler, SlotView, preempt_victim
+from repro.serve.scheduler import (INF, EDFScheduler, SlotView, ladder_rungs,
+                                   preempt_victim, rung_for)
 from repro.serve.types import (EngineClosed, EngineState, TopoFuture,
                                TopoRequest, pool_stats)
 
@@ -147,13 +162,23 @@ class _Shard:
         L = engine.shard_width
         ndof = 2 * (cfg.nelx + 1) * (cfg.nely + 1)
         # empty slots carry f == 0 so the masked CG treats them as
-        # converged in zero iterations
+        # converged in zero iterations. Host arrays stay FULL width L;
+        # _upload() slices [:width] for the current ladder rung.
         self.f = np.zeros((L, ndof), np.float32)
         self.free = np.zeros((L, ndof), np.float32)
         self.fixed_x = np.zeros((L, ndof), np.float32)
         self.volfrac = np.full((L,), 0.5, np.float32)
+        # per-slot passive-border masks (shape-class engines only)
+        self.elem = (np.ones((L, cfg.nely, cfg.nelx), np.float32)
+                     if engine.shape_padded else None)
         self.slot_adm: List[Optional[_Admission]] = [None] * L
         self.slot_iters = [0] * L
+        self.rungs = engine._rungs   # sorted widths, rungs[-1] == L
+        self.width = self.rungs[-1]  # currently-dispatched batch width
+        self.cap = L                 # live admission cap (set_target_slots)
+        self.rung_steps = {r: 0 for r in self.rungs}
+        self.rung_changes = 0
+        self.migrations = 0          # device lane moves from rung shrinks
         self.params = None          # device copy, refreshed by activate()
         self.bp = None
         self.load_vol = None
@@ -170,6 +195,8 @@ class _Shard:
         self.free[:] = 0.0
         self.fixed_x[:] = 0.0
         self.volfrac[:] = 0.5
+        if self.elem is not None:
+            self.elem[:] = 1.0
         self.slot_adm = [None] * L
         self.slot_iters = [0] * L
         self.steps = 0
@@ -178,46 +205,126 @@ class _Shard:
         # params are re-put per activation: a swap_params() between
         # activations (hot model swap) takes effect on the next start
         self.params = jax.device_put(e.params, self.device)
+        # precompile every ladder rung before serving traffic (no-op for
+        # ladder=None engines and on restarts)
+        e._warm_ladder(self.device, self.params)
+        # an idle shard starts on the smallest rung; occupancy pulls the
+        # width up through _set_width as admissions land
+        self.width = self.rungs[0]
         self.state = jax.device_put(
-            hybrid.init_state(e.cfg, fea2d.stack_problems(
-                [fea2d.idle_problem(e.cfg.nelx, e.cfg.nely)] * L)),
-            self.device)
+            hybrid.init_state(e.cfg, self._idle_bp(self.width)), self.device)
         self._upload()
+
+    def _idle_bp(self, width: int) -> fea2d.BatchProblem:
+        e = self.engine
+        idle = fea2d.idle_problem(e.cfg.nelx, e.cfg.nely)
+        if e.shape_padded:
+            # all-ones mask keeps the treedef identical to live traffic,
+            # so the warmed compile is the one real requests hit (the
+            # masked step is its own compiled family — bitwise contracts
+            # hold within it, not vs the unmasked step)
+            idle = idle._replace(elem_mask=jnp.ones(
+                (e.cfg.nely, e.cfg.nelx), jnp.float32))
+        return fea2d.stack_problems([idle] * width)
 
     def _upload(self):
         e = self.engine
+        w = self.width
         self.bp = jax.device_put(fea2d.BatchProblem(
             nelx=e.cfg.nelx, nely=e.cfg.nely, edof=e._edof, KE=e._KE,
-            f=jnp.asarray(self.f), free_mask=jnp.asarray(self.free),
-            fixed_x_mask=jnp.asarray(self.fixed_x),
-            volfrac=jnp.asarray(self.volfrac),
-            penal=e._penal, e_min=e._e_min), self.device)
+            f=jnp.asarray(self.f[:w]), free_mask=jnp.asarray(self.free[:w]),
+            fixed_x_mask=jnp.asarray(self.fixed_x[:w]),
+            volfrac=jnp.asarray(self.volfrac[:w]),
+            penal=e._penal, e_min=e._e_min,
+            elem_mask=(jnp.asarray(self.elem[:w])
+                       if self.elem is not None else None)), self.device)
         self.load_vol = fea2d.load_volume_b(self.bp)
 
     def fill(self, lane: int, adm: Optional[_Admission]):
-        """Write lane constants + seed lane state (reset for a fresh
-        request, exact restore for a parked one). Caller must _upload()
-        after a batch of fills."""
+        """Write lane HOST constants + bookkeeping for an admission (or
+        clear them). Device-state seeding is a separate step (``seed``)
+        because under ladder dispatch the lane's device state may not
+        exist yet — the tick picks its rung (and resizes the state)
+        after admissions land. Caller must _upload() afterwards."""
         if adm is None:
             self.f[lane] = 0.0
             self.free[lane] = 0.0
             self.fixed_x[lane] = 0.0
             self.volfrac[lane] = 0.5
+            if self.elem is not None:
+                self.elem[lane] = 1.0
         else:
             p = adm.req.problem
             self.f[lane] = np.asarray(p.f)
             self.free[lane] = np.asarray(p.free_mask)
             self.fixed_x[lane] = np.asarray(p.fixed_x_mask)
             self.volfrac[lane] = p.volfrac
+            if self.elem is not None:
+                self.elem[lane] = (np.asarray(p.elem_mask)
+                                   if p.elem_mask is not None else 1.0)
         self.slot_adm[lane] = adm
+
+    def seed(self, lane: int):
+        """Seed lane device state: exact restore for a parked admission,
+        fresh reset otherwise (also used to clear harvested lanes)."""
+        adm = self.slot_adm[lane]
         if adm is not None and adm.parked is not None:
             self.state = hybrid.restore_slot(self.state, lane, adm.parked)
             self.slot_iters[lane] = adm.iters_done
             adm.parked = None
         else:
+            mask = (jnp.asarray(self.elem[lane])
+                    if self.elem is not None and adm is not None else None)
             self.state = hybrid.reset_slot(
-                self.engine.cfg, self.state, lane, float(self.volfrac[lane]))
+                self.engine.cfg, self.state, lane, float(self.volfrac[lane]),
+                mask)
             self.slot_iters[lane] = 0
+
+    def move_lane(self, src: int, dst: int, live: bool):
+        """Relocate a lane's occupant to a lower index (rung-shrink
+        compaction). ``live=True`` also moves the device state (exact
+        lane copy); pending admissions have no device state yet and only
+        need their host constants + bookkeeping relabeled."""
+        self.f[dst] = self.f[src]
+        self.free[dst] = self.free[src]
+        self.fixed_x[dst] = self.fixed_x[src]
+        self.volfrac[dst] = self.volfrac[src]
+        if self.elem is not None:
+            self.elem[dst] = self.elem[src]
+        self.slot_adm[dst] = self.slot_adm[src]
+        self.slot_iters[dst] = self.slot_iters[src]
+        self.slot_adm[src] = None
+        self.slot_iters[src] = 0
+        self.f[src] = 0.0
+        self.free[src] = 0.0
+        self.fixed_x[src] = 0.0
+        self.volfrac[src] = 0.5
+        if self.elem is not None:
+            self.elem[src] = 1.0
+        if live:
+            self.state = hybrid.move_slot(self.state, src, dst)
+            self.migrations += 1
+
+    def _set_width(self, new_width: int, pending: List[int]) -> bool:
+        """Re-rung the shard to ``new_width``: compact occupied lanes
+        below the new width (device moves for live lanes, relabels for
+        ``pending`` not-yet-seeded ones — ``pending`` is updated in
+        place), then resize the device state. Returns True if the width
+        changed (caller must _upload)."""
+        if new_width == self.width:
+            return False
+        for src in range(len(self.slot_adm) - 1, new_width - 1, -1):
+            if self.slot_adm[src] is None:
+                continue
+            dst = next(i for i in range(new_width)
+                       if self.slot_adm[i] is None and i not in pending)
+            self.move_lane(src, dst, live=src not in pending)
+            if src in pending:
+                pending[pending.index(src)] = dst
+        self.state = hybrid.resize_state(self.state, new_width)
+        self.width = new_width
+        self.rung_changes += 1
+        return True
 
     def park(self, lane: int) -> _Admission:
         """Evict the lane's occupant: lane-gather its state to host and
@@ -259,6 +366,22 @@ class TopoServingEngine:
     mode on CPU — slow but exercises the on-chip path).
     shards: None = auto (one shard per available device while shard width
     stays >= 2); 1 = single compiled group (single-device behaviour).
+
+    ladder: optional sorted width ladder (e.g. (2, 4, 8, 16), clamped to
+    [2, shard_width]; shard_width is always a rung). When set, every
+    tick dispatches at the smallest rung >= live occupancy and the whole
+    ladder is precompiled at start, so the engine's compile count is
+    bounded by len(ladder) no matter how occupancy varies.
+    ``set_target_slots`` then caps live admissions per shard at a rung —
+    the gateway's autoscale lever, applied per tick instead of per
+    rebuild. ladder=None is the pre-ladder engine: one fixed width.
+
+    shape_padded: the engine serves a canonical shape CLASS — requests
+    arrive padded to (cfg.nelx, cfg.nely) by fea2d.pad_problem with a
+    passive-border ``elem_mask``, and harvested densities are cropped
+    back to ``req.orig_mesh``. The flag is explicit (not inferred from
+    traffic) so the ladder warmup compiles the masked step variant the
+    live requests will hit.
     """
 
     def __init__(self, cfg: CRONetConfig, params, u_scale: float,
@@ -269,12 +392,20 @@ class TopoServingEngine:
                  starvation_horizon: float = 60.0,
                  tick_time_s: Optional[float] = None,
                  completed_limit: int = 1024,
-                 model_tag: Optional[str] = None):
+                 model_tag: Optional[str] = None,
+                 ladder: Optional[Sequence[int]] = None,
+                 shape_padded: bool = False):
         self._devices = shard_devices(slots, shards)
         self.cfg = cfg
         self.slots = slots
         self.shards = len(self._devices)
         self.shard_width = slots // self.shards
+        self.ladder = tuple(int(r) for r in ladder) if ladder else None
+        self._rungs = (ladder_rungs(self.shard_width, self.ladder)
+                       if self.ladder is not None else (self.shard_width,))
+        self.shape_padded = shape_padded
+        self._warm_lock = threading.Lock()
+        self._warmed_devices: set = set()
         self.u_scale = u_scale
         self.precision = precision
         self.backend = backend
@@ -425,6 +556,64 @@ class TopoServingEngine:
                     self.backend)
             self.model_tag = model_tag
 
+    # ------------------------------------------------------------ ladder
+
+    @property
+    def rungs(self) -> tuple:
+        """Compiled per-shard width ladder (single entry for ladder=None)."""
+        return self._rungs
+
+    def _warm_ladder(self, device, params):
+        """Compile every ladder rung on ``device`` before traffic lands —
+        'compile-at-start of the whole ladder'. One idle step per rung;
+        the jit cache then serves every later rung change. Idempotent per
+        device (restarts skip it); no-op for ladder=None engines."""
+        if self.ladder is None:
+            return
+        with self._warm_lock:
+            if device in self._warmed_devices:
+                return
+            states = {}
+            for r in self._rungs:
+                bp = jax.device_put(self._shards[0]._idle_bp(r), device)
+                st = jax.device_put(hybrid.init_state(self.cfg, bp), device)
+                st = self.step(params, bp, fea2d.load_volume_b(bp), st)
+                jax.block_until_ready(st.it)
+                states[r] = st
+            # rung transitions dispatch un-jitted resize/compaction ops
+            # whose first use would otherwise compile INSIDE a serving
+            # tick (a multi-hundred-ms latency spike on the first burst);
+            # touch every rung pair and a lane move here instead
+            mask = (jnp.ones((self.cfg.nely, self.cfg.nelx), jnp.float32)
+                    if self.shape_padded else None)
+            for a in self._rungs:
+                for b in self._rungs:
+                    if a != b:
+                        jax.block_until_ready(
+                            hybrid.resize_state(states[a], b).it)
+                # first reset/compaction at a fresh width compiles the
+                # eager lane ops; per-lane residuals after this are
+                # dispatch-only
+                jax.block_until_ready(hybrid.reset_slot(
+                    self.cfg, states[a], 0, 0.5, elem_mask=mask).x)
+                jax.block_until_ready(hybrid.move_slot(states[a], 1, 0).it)
+            self._warmed_devices.add(device)
+
+    def set_target_slots(self, n: int) -> int:
+        """Live autoscale lever (ladder engines only): cap concurrent
+        occupancy at ``n`` total slots, snapped UP to a per-shard rung.
+        Takes effect at the next tick boundary — queued requests above
+        the cap simply wait; nothing is dropped or rebuilt. Returns the
+        applied total (== ``slots`` for ladder=None engines, which only
+        resize via rebuild)."""
+        if self.ladder is None:
+            return self.slots
+        per = max(2, -(-int(n) // self.shards))   # ceil-divide across shards
+        rung = rung_for(per, self._rungs)
+        for sh in self._shards:
+            sh.cap = rung
+        return rung * self.shards
+
     # --------------------------------------------------------- streaming
 
     def submit(self, req: TopoRequest,
@@ -449,7 +638,10 @@ class TopoServingEngine:
         if priority:
             req.priority = priority
         self.start()   # no-op while workers are alive; EngineClosed if shut
-        now = time.time()
+        # deadline/latency bookkeeping runs on the monotonic clock: an
+        # NTP step must not fabricate deadline misses (wall-clock is used
+        # only for the user-facing completed_t stamp at harvest)
+        now = time.monotonic()
         if _future is None:
             fut = TopoFuture(req)
             req.submit_t = now
@@ -488,11 +680,16 @@ class TopoServingEngine:
         adm = shard.slot_adm[lane]
         req = adm.req
         req.density = np.asarray(shard.state.x[lane])
+        if req.orig_mesh is not None:
+            # shape-class serving: crop the passive border back off so
+            # the caller sees the mesh they submitted
+            req.density = fea2d.crop_density(req.density, *req.orig_mesh)
         req.compliance = float(shard.state.compliance[lane])
         req.cronet_iters = int(shard.state.n_cronet[lane])
         req.fea_iters = int(shard.state.n_fea[lane])
         req.model_tag = self.model_tag
-        t_done = time.time()
+        t_done = time.monotonic()    # deadline math: monotonic, like submit
+        req.completed_t = time.time()  # user-facing wall-clock stamp
         req.latency_s = t_done - adm.first_admit_t
         req.deadline_met = (None if req.deadline is None
                             else t_done <= req.deadline)
@@ -521,15 +718,16 @@ class TopoServingEngine:
 
     def _shard_loop(self, shard: _Shard):
         """One shard's tick loop: harvest finished lanes, drain admissions
-        (EDF pops + at most one slack-safe preemption) between compiled
-        steps, dispatch the next step. No device sync except at harvest
-        and park."""
+        (EDF pops + at most one slack-safe preemption), pick the ladder
+        rung for the live occupancy (compact + resize when it changed),
+        seed the lanes touched this tick, dispatch the next compiled
+        step. No device sync except at harvest and park."""
         sched = self._sched
         L = self.shard_width
         try:
             shard.activate()
             while True:
-                now = time.time()
+                now = time.monotonic()
                 # -- harvest (single-writer lane bookkeeping, syncs device)
                 harvested = False
                 for i in range(L):
@@ -537,20 +735,27 @@ class TopoServingEngine:
                     if adm is not None and shard.slot_iters[i] >= adm.req.n_iter:
                         self._harvest_lane(shard, i, now)
                         harvested = True
-                # -- admissions: atomic vs concurrent submit()
+                # -- admissions: atomic vs concurrent submit(). fill()
+                # writes host constants only; device seeding waits until
+                # the tick's rung is settled (seeds list below)
                 dirty = harvested
-                admitted_lanes = []
+                seeds: List[int] = []     # admitted lanes awaiting device seed
+                cleared: List[int] = []   # harvested lanes left empty
+                cap = shard.cap
                 with sched.cond:
+                    occupied_n = sum(a is not None for a in shard.slot_adm)
                     for i in range(L):
                         if shard.slot_adm[i] is not None:
                             continue
-                        entry = sched.pop()
+                        entry = sched.pop() if occupied_n < cap else None
                         if entry is None:
                             if harvested:
                                 shard.fill(i, None)  # clear stale load
+                                cleared.append(i)
                             continue
                         self._admit_lane(shard, i, entry.payload, now)
-                        admitted_lanes.append(i)
+                        seeds.append(i)
+                        occupied_n += 1
                         dirty = True
                     # preemption: queue head about to miss, no free lane.
                     # Decide and pop the head under the lock; the actual
@@ -560,16 +765,19 @@ class TopoServingEngine:
                     # matters: a long-waiting deadline-less victim can
                     # outrank the head (starvation horizon), and popping
                     # after the push would hand the lane straight back to
-                    # the evictee.
+                    # the evictee. Preemption stays keyed to a TRULY full
+                    # shard: a rung cap below full width pauses admission
+                    # but never evicts (the cap is elasticity, not urgency).
                     victim = preempt_entry = None
                     head = sched.peek() if self.preempt else None
-                    if head is not None:
+                    if head is not None and all(a is not None
+                                                for a in shard.slot_adm):
                         views = [
                             None if a is None else SlotView(
                                 deadline=(a.req.deadline if a.req.deadline
                                           is not None else INF),
                                 iters_left=a.req.n_iter - shard.slot_iters[i],
-                                preemptible=i not in admitted_lanes)
+                                preemptible=i not in seeds)
                             for i, a in enumerate(shard.slot_adm)]
                         victim = preempt_victim(
                             head.deadline, head.payload.iters_left,
@@ -593,16 +801,33 @@ class TopoServingEngine:
                                priority=parked.req.priority)
                     self._admit_lane(shard, victim, preempt_entry.payload,
                                      now)
+                    seeds.append(victim)
                     dirty = True
+                # -- ladder rung: smallest compiled width >= occupancy.
+                # Live lanes above the new width migrate down via exact
+                # lane copies BEFORE the state is sliced, so a rung
+                # shrink never touches a trajectory; seeds (admitted this
+                # tick, no device state yet) are relabeled in place.
+                occ = sum(a is not None for a in shard.slot_adm)
+                if shard._set_width(rung_for(occ, shard.rungs), seeds):
+                    dirty = True
+                for i in seeds:
+                    shard.seed(i)
+                for i in cleared:     # reset harvested-but-idle lane state
+                    # (unless a rung shrink sliced it off or compacted a
+                    # live lane into it)
+                    if i < shard.width and shard.slot_adm[i] is None:
+                        shard.seed(i)
                 if dirty:
                     shard._upload()
                 # -- tick: one compiled step, admissions drain before the
                 # next one; dispatch is async
                 if shard.busy_t0 is None:
-                    shard.busy_t0 = time.time()
+                    shard.busy_t0 = time.monotonic()
                 shard.state = self.step(shard.params, shard.bp,
                                         shard.load_vol, shard.state)
                 shard.steps += 1
+                shard.rung_steps[shard.width] += 1
                 shard.steps_in_window += 1
                 for i in range(L):
                     if shard.slot_adm[i] is not None:
@@ -675,4 +900,20 @@ class TopoServingEngine:
             "total_steps": float(self.total_steps),
             "model_tag": self.model_tag,
         })
+        if self.ladder is not None:
+            rung_steps: Dict[int, int] = {r: 0 for r in self._rungs}
+            for sh in self._shards:
+                for r, c in sh.rung_steps.items():
+                    rung_steps[r] += c
+            stats["ladder"] = {
+                "rungs": list(self._rungs),
+                "widths": [sh.width for sh in self._shards],
+                "caps": [sh.cap for sh in self._shards],
+                "rung_steps": {str(r): float(c)
+                               for r, c in sorted(rung_steps.items())},
+                "rung_changes": float(sum(sh.rung_changes
+                                          for sh in self._shards)),
+                "migrations": float(sum(sh.migrations
+                                        for sh in self._shards)),
+            }
         return stats

@@ -98,10 +98,19 @@ class TopoRequest:
     deadline_s: Optional[float] = None      # freshness deadline, rel. submit
     priority: int = 0                       # higher = more urgent; outranks
     # filled on submit                      # deadline ordering entirely
+    # submit_t/deadline are MONOTONIC-clock stamps (time.monotonic()):
+    # deadline math must not move when NTP steps the wall clock. They are
+    # comparable to each other and to other monotonic stamps only —
+    # user-facing wall-clock time lives in completed_t / FleetEvent.t.
     submit_t: float = 0.0
-    deadline: Optional[float] = None        # absolute wall-clock deadline
+    deadline: Optional[float] = None        # absolute monotonic deadline
+    # filled at routing time (gateway shape-class dispatch): the original
+    # (nelx, nely) when ``problem`` was padded onto a canonical shape
+    # class — the engine crops the harvested density back to it.
+    orig_mesh: Optional[tuple] = None
     # filled on completion
     done: bool = False
+    completed_t: float = 0.0                # wall-clock (time.time()) stamp
     density: Optional[np.ndarray] = None    # (nely, nelx) final design
     compliance: float = 0.0                 # last-iteration compliance
     cronet_iters: int = 0
@@ -266,9 +275,13 @@ class TagStats:
 class FleetEvent:
     """One control-plane transition in the gateway's fleet-operations
     log: ``kind`` is ``canary-start`` / ``promote`` / ``rollback`` /
-    ``evict`` / ``rebuild`` / ``swap``. ``details`` carries the
+    ``evict`` / ``rebuild`` / ``swap`` / ``resize`` (a live ladder-rung
+    target change) / ``callback-error`` (a user done-callback raised;
+    recorded instead of silently swallowed so a broken callback cannot
+    invisibly stall canary stat accumulation). ``details`` carries the
     kind-specific payload (e.g. the per-tag stats snapshots a rollback
-    decision was based on)."""
+    decision was based on). ``t`` is a user-facing wall-clock stamp
+    (time.time()) — the one place wall-clock is kept on purpose."""
     kind: str
     mesh: Optional[tuple]
     tag: Optional[str]

@@ -86,6 +86,66 @@ def test_oc_update_volume_projection():
     assert abs(float(jnp.mean(xn)) - 0.5) < 0.02
 
 
+def test_pad_problem_passive_border_and_crop_roundtrip():
+    p = fea2d.point_load_problem(10, 4, load_node=(3, 0), load=(0.0, -1.2))
+    pp = fea2d.pad_problem(p, 12, 6)
+    assert (pp.nelx, pp.nely) == (12, 6)
+    m = np.asarray(pp.elem_mask)
+    assert m.shape == (6, 12) and m.sum() == 10 * 4
+    # mask follows the density-layout flat convention (el = ex*nely + ey)
+    g = m.reshape(12, 6)
+    assert g[:10, :4].all() and not g[10:, :].any() and not g[:, 4:].any()
+    # crop_density inverts the embedding on an arbitrary design field
+    rng = np.random.default_rng(0)
+    x_orig = rng.random((4, 10)).astype(np.float32)
+    buf = np.zeros((12, 6), np.float32)
+    buf[:10, :4] = x_orig.reshape(10, 4)
+    np.testing.assert_array_equal(
+        fea2d.crop_density(buf.reshape(6, 12), 10, 4), x_orig)
+    # exact fit: same problem back, just moved onto the masked family
+    same = fea2d.pad_problem(p, 10, 4)
+    assert np.asarray(same.elem_mask).all()
+    np.testing.assert_array_equal(np.asarray(same.f), np.asarray(p.f))
+    with pytest.raises(ValueError, match="smaller"):
+        fea2d.pad_problem(p, 8, 4)
+    with pytest.raises(ValueError, match="smaller"):
+        fea2d.crop_density(buf.reshape(6, 12), 14, 4)
+
+
+def test_padded_solve_matches_original_physics():
+    """The passive border is inert: solving the padded problem at the
+    embedded density gives the original compliance (padded elements have
+    zero stiffness and their dofs are fixed, so the active subsystem is
+    the original one)."""
+    p = fea2d.point_load_problem(10, 4, load_node=(3, 0), load=(0.0, -1.2))
+    pp = fea2d.pad_problem(p, 12, 6)
+    xo = jnp.full((4, 10), p.volfrac)
+    xp = jnp.asarray(np.asarray(pp.elem_mask) * p.volfrac)
+    uo, _ = fea2d.solve(p, xo)
+    up, _ = fea2d.solve(pp, xp)
+    co, dco = fea2d.compliance_and_sens(p, xo, uo)
+    cp, dcp = fea2d.compliance_and_sens(pp, xp, up)
+    assert np.isclose(float(co), float(cp), rtol=1e-4)
+    # sensitivities vanish identically on the passive border
+    assert not np.asarray(dcp)[np.asarray(pp.elem_mask) == 0.0].any()
+
+
+def test_masked_oc_update_freezes_passive_and_scales_volume():
+    """With a mask the OC update keeps passive densities at exactly 0 and
+    takes the volume constraint over ACTIVE elements only, so volfrac
+    keeps its meaning on the original (pre-padding) mesh."""
+    p = fea2d.point_load_problem(10, 4)
+    mask = fea2d.pad_problem(p, 12, 6).elem_mask
+    x = jnp.asarray(np.asarray(mask) * 0.5)
+    dc = -jnp.abs(jax.random.normal(jax.random.key(1), (6, 12))) * mask
+    dv = jnp.ones_like(x) / x.size
+    xn = simp.oc_update(x, dc, dv, 0.5, mask=mask)
+    m = np.asarray(mask)
+    assert not np.asarray(xn)[m == 0.0].any()
+    active_mean = float(np.asarray(xn)[m == 1.0].mean())
+    assert abs(active_mean - 0.5) < 0.02
+
+
 def test_load_volume_layout(prob):
     vol = fea2d.load_volume(prob)
     assert vol.shape == (4, prob.nely + 1, prob.nelx + 1, 1)

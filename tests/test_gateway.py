@@ -93,7 +93,7 @@ class _FakeEngine:
             req.cronet_iters = int(round(self.cronet_frac * req.n_iter))
             req.fea_iters = req.n_iter - req.cronet_iters
             req.deadline_met = (None if req.deadline is None
-                                else time.time() <= req.deadline)
+                                else time.monotonic() <= req.deadline)
             self._completed.append(req)
             self.inflight -= 1
             self.total_steps += req.n_iter
@@ -769,7 +769,7 @@ def test_autoscale_slot_width_follows_observed_arrival_rate():
     in test_scheduler.py)."""
     gw, built = _fleet_gateway(max_pending=None, autoscale=True,
                                min_slots=2, max_slots=8, scale_rate=1.0)
-    now = time.time()
+    now = time.monotonic()   # arrival stamps are monotonic-clock
     # cold bucket: no history -> floor width
     assert gw._slots_for((12, 4)) == 2
     # scripted arrival windows (the deque submit() maintains)

@@ -289,6 +289,52 @@ def test_target_slots_scales_with_rate_and_clamps():
         target_slots(1.0, 1.0, 4, 2)
 
 
+# ------------------------------------------------- width-ladder policies
+
+
+def test_ladder_rungs_clamps_and_always_includes_max_width():
+    from repro.serve.scheduler import DEFAULT_LADDER, ladder_rungs
+
+    assert DEFAULT_LADDER == (2, 4, 8, 16)
+    assert ladder_rungs(8) == (2, 4, 8)
+    assert ladder_rungs(16) == (2, 4, 8, 16)
+    # a max width off the ladder is appended, over-wide rungs dropped
+    assert ladder_rungs(6, (2, 4, 8, 16)) == (2, 4, 6)
+    # duplicates collapse; max_width == a rung stays a single entry
+    assert ladder_rungs(4, (2, 2, 4)) == (2, 4)
+    # degenerate ladder still serves full occupancy
+    assert ladder_rungs(8, ()) == (8,)
+    with pytest.raises(ValueError, match="min_width"):
+        ladder_rungs(8, min_width=1)
+    with pytest.raises(ValueError, match="max_width"):
+        ladder_rungs(1)
+
+
+def test_rung_for_picks_smallest_sufficient_width():
+    from repro.serve.scheduler import rung_for
+
+    rungs = (2, 4, 8)
+    assert rung_for(0, rungs) == 2      # idle shard stays at the floor
+    assert rung_for(2, rungs) == 2
+    assert rung_for(3, rungs) == 4
+    assert rung_for(4, rungs) == 4
+    assert rung_for(5, rungs) == 8
+    assert rung_for(99, rungs) == 8     # out-of-range caps clamp to top
+
+
+def test_shape_class_for_smallest_containing_class():
+    from repro.serve.scheduler import shape_class_for
+
+    classes = [(16, 8), (12, 4), (8, 8)]
+    assert shape_class_for((10, 4), classes) == (12, 4)
+    assert shape_class_for((12, 4), classes) == (12, 4)   # exact fit
+    assert shape_class_for((8, 6), classes) == (8, 8)
+    assert shape_class_for((13, 5), classes) == (16, 8)
+    assert shape_class_for((20, 4), classes) is None      # no container
+    # smallest AREA wins, ties break lexicographically (deterministic)
+    assert shape_class_for((4, 4), [(8, 8), (16, 4), (4, 16)]) == (4, 16)
+
+
 # --------------------------------------------------------- preempt_victim
 
 _SPI = 1.0  # seconds per iteration, fixed for readability

@@ -161,6 +161,93 @@ def test_live_admission_is_a_compiled_cache_hit():
     assert all(f.result().done for f in futs)
 
 
+# ------------------------------------------------- width-ladder contracts
+
+
+def test_ladder_rung_serving_bitwise_equals_dedicated_width():
+    """The tentpole ladder contract: a request served on a ladder engine
+    at rung W is bitwise-equal to the same request on a DEDICATED
+    fixed-width-W engine (and hence to its standalone run) — the rung
+    choice is a latency decision, never a numerics decision. Also pins
+    the compile bound: serving across every rung retraces at most
+    ``len(rungs)`` times."""
+    cfg, params, pool = _ctx()
+    eng = TopoServingEngine(cfg, params, u_scale=U_SCALE, slots=4,
+                            precision="fp32", ladder=(2, 4))
+    assert eng.rungs == (2, 4)
+    traces0 = eng.step.trace_count[0]
+
+    # occupancy 2 -> rung 2
+    futs = [eng.submit(TopoRequest(uid=k, problem=pool[k], n_iter=4))
+            for k in range(2)]
+    narrow = [f.result(timeout=300) for f in futs]
+    assert eng.drain(timeout=60)
+    # occupancy 4 -> rung 4
+    futs = [eng.submit(TopoRequest(uid=10 + k, problem=pool[k], n_iter=5))
+            for k in range(4)]
+    wide = [f.result(timeout=300) for f in futs]
+    assert eng.step.trace_count[0] - traces0 <= len(eng.rungs), \
+        "ladder serving retraced beyond the precompiled rungs"
+    stats = eng.throughput_stats()
+    eng.shutdown()
+    assert stats["ladder"]["rungs"] == [2, 4]
+    assert stats["ladder"]["rung_steps"]["2"] > 0
+    assert stats["ladder"]["rung_steps"]["4"] > 0
+
+    # dedicated fixed-width engines serving the SAME requests
+    ded2 = TopoServingEngine(cfg, params, u_scale=U_SCALE, slots=2,
+                             precision="fp32")
+    ref2 = ded2.run([TopoRequest(uid=k, problem=pool[k], n_iter=4)
+                     for k in range(2)])
+    ded2.shutdown()
+    ded4 = TopoServingEngine(cfg, params, u_scale=U_SCALE, slots=4,
+                             precision="fp32")
+    ref4 = ded4.run([TopoRequest(uid=10 + k, problem=pool[k], n_iter=5)
+                     for k in range(4)])
+    ded4.shutdown()
+    for got, want in zip(narrow + wide, ref2 + ref4):
+        np.testing.assert_array_equal(got.density, want.density,
+                                      err_msg=f"uid {got.uid}")
+        np.testing.assert_array_equal(
+            got.density,
+            _ref_density(got.uid % 10, got.fea_iters + got.cronet_iters),
+            err_msg=f"uid {got.uid} vs standalone")
+
+
+def test_midstream_rung_change_drops_nothing():
+    """A rung change mid-serve (grow on a burst, shrink with a live lane
+    compaction once the burst drains) must not drop, restart, or perturb
+    any in-flight request: every density stays bitwise-equal to its
+    standalone run and iteration counts are exact."""
+    cfg, params, pool = _ctx()
+    eng = TopoServingEngine(cfg, params, u_scale=U_SCALE, slots=4,
+                            precision="fp32", ladder=(2, 4))
+    # long occupant admits alone at rung 2 (lane 0)
+    f_long = eng.submit(TopoRequest(uid=0, problem=pool[0], n_iter=20))
+    t0 = time.time()
+    while eng._shards[0].slot_adm[0] is None:
+        assert time.time() - t0 < 60, "occupant never admitted"
+        time.sleep(0.005)
+    # burst fills lanes 1..3 -> grow to rung 4; the two short jobs finish
+    # first, leaving lanes 0 and 3 live -> shrink migrates lane 3 down
+    futs = [eng.submit(TopoRequest(uid=1 + k, problem=pool[1 + k],
+                                   n_iter=n))
+            for k, n in enumerate((3, 3, 8))]
+    reqs = [f.result(timeout=600) for f in futs] + [f_long.result(600)]
+    assert eng.drain(timeout=60)
+    stats = eng.throughput_stats()
+    eng.shutdown()
+    assert stats["ladder"]["rung_changes"] >= 2, stats["ladder"]
+    # the 8-iter job outlives the shorts in a lane >= the shrunk width,
+    # so the shrink must have compacted it down LIVE (exact lane move)
+    assert stats["ladder"]["migrations"] >= 1, stats["ladder"]
+    for req, (pi, ni) in zip(reqs, [(1, 3), (2, 3), (3, 8), (0, 20)]):
+        assert req.done and req.fea_iters + req.cronet_iters == ni
+        np.testing.assert_array_equal(
+            req.density, _ref_density(pi, ni),
+            err_msg=f"uid {req.uid} (problem {pi}, {ni} iters)")
+
+
 # ------------------------------------- deadline stats + future semantics
 
 

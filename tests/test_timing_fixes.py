@@ -1,0 +1,124 @@
+"""Regression tests for the scheduler/gateway timing bugfix sweep:
+
+  * deadline / idle-eviction / arrival bookkeeping runs on the MONOTONIC
+    clock, so an NTP wall-clock step (forward or backward) mid-serve can
+    neither fake a deadline miss nor stall idle eviction forever;
+  * ``_observed_rate`` is an interval estimator — N arrivals span N-1
+    inter-arrival gaps, so two arrivals 1 s apart read 1 req/s, not 2;
+  * a raising gateway done-callback is recorded as a typed
+    ``callback-error`` FleetEvent instead of being silently swallowed,
+    and never corrupts the in-flight accounting.
+
+Wall-clock jumps are simulated by monkeypatching ``time.time`` (what a
+stepping NTP daemon changes); ``time.monotonic`` is left real, exactly
+as on a real host.
+"""
+import collections
+import time
+
+import pytest
+from test_gateway import (_FakeEngine, _complete_all, _fake_gateway,
+                          _fleet_gateway, _pump, _req, wait_until)
+
+
+# ------------------------------------------------- monotonic-clock sweep
+
+
+def test_deadline_verdict_survives_forward_wall_clock_jump(monkeypatch):
+    """An NTP step of +1h mid-serve must not turn an on-time completion
+    into a deadline miss: deadline stamps and the verdict comparison are
+    monotonic-clock, wall-clock only ever reaches user-facing fields."""
+    gw, fakes = _fake_gateway(max_pending=None)
+    req = _req(0)
+    fut = gw.submit(req, deadline_s=30.0)
+    # submit stamps are monotonic: near time.monotonic(), nowhere near
+    # the wall epoch
+    assert abs(req.submit_t - time.monotonic()) < 5.0
+    assert abs(req.submit_t - time.time()) > 1e6
+    assert req.deadline == pytest.approx(req.submit_t + 30.0, abs=0.5)
+    assert wait_until(lambda: fakes.get((12, 4))
+                      and fakes[(12, 4)].submitted)
+    real = time.time
+    monkeypatch.setattr(time, "time", lambda: real() + 3600.0)
+    fakes[(12, 4)].complete()
+    assert fut.result(timeout=10).deadline_met is True
+    gw.shutdown()
+
+
+def test_idle_eviction_survives_backward_wall_clock_jump(monkeypatch):
+    """A backward NTP step must not freeze the cold-bucket horizon: the
+    idle clock is monotonic, so a bucket still evicts ``idle_evict_s``
+    of REAL time after its last request."""
+    gw, built = _fleet_gateway(max_pending=None, idle_evict_s=0.2)
+    cold = gw.submit(_req(0, 12, 4))
+    warm = gw.submit(_req(1, 10, 6))
+    _pump(gw, built)
+    assert cold.result(timeout=5).done and warm.result(timeout=5).done
+    # the wall clock steps back a day; pre-fix `time.time() - last_seen`
+    # goes hugely negative and the bucket never goes cold
+    real = time.time
+    monkeypatch.setattr(time, "time", lambda: real() - 86400.0)
+    t0 = time.monotonic()
+    while (12, 4) in gw.engines:
+        assert time.monotonic() - t0 < 10, \
+            "cold bucket never evicted after the wall clock stepped back"
+        f = gw.submit(_req(100, 10, 6))     # keep the other bucket warm
+        while not f.done():
+            _complete_all(built)
+            time.sleep(0.005)
+        time.sleep(0.03)
+    assert built[(12, 4)][0]._closed
+    assert (10, 6) in gw.engines, "warm bucket must survive"
+    gw.shutdown()
+
+
+# --------------------------------------------------- arrival-rate estimator
+
+
+def test_observed_rate_is_an_interval_estimator():
+    """N arrivals spanning (now - first) seconds hold N-1 inter-arrival
+    intervals: 4 arrivals 1 s apart are EXACTLY 1 req/s. The pre-fix
+    ``len(d) / span`` estimator read 4/3 req/s and biased every
+    autoscale width decision high."""
+    gw, _ = _fleet_gateway(max_pending=None)
+    now = time.monotonic()
+    gw._arrivals[(12, 4)] = collections.deque(
+        [now - 3.0, now - 2.0, now - 1.0, now], maxlen=32)
+    assert gw._observed_rate((12, 4), now=now) == pytest.approx(1.0)
+    # the numerator freezes while the span stretches: a bucket that
+    # stopped arriving decays instead of remembering its last burst
+    assert gw._observed_rate((12, 4), now=now + 7.0) == pytest.approx(0.3)
+    # fewer than two arrivals carry no interval -> no estimate
+    gw._arrivals[(10, 6)] = collections.deque([now], maxlen=32)
+    assert gw._observed_rate((10, 6), now=now) == 0.0
+    assert gw._observed_rate((8, 4), now=now) == 0.0
+    gw.shutdown()
+
+
+# ------------------------------------------------- done-callback failures
+
+
+def test_done_callback_failure_is_recorded_not_swallowed():
+    """A completion whose bookkeeping raises (here: a request whose
+    ``.mesh`` property blows up) must surface as a typed
+    ``callback-error`` FleetEvent — not vanish into a bare except — and
+    must never corrupt the in-flight accounting or stall the gateway."""
+    gw, fakes = _fake_gateway(max_pending=None)
+    req = _req(0)
+    fut = gw.submit(req)
+    assert wait_until(lambda: fakes.get((12, 4))
+                      and fakes[(12, 4)].submitted)
+    req.problem = None              # .mesh now raises AttributeError
+    fakes[(12, 4)].complete()
+    assert fut.result(timeout=10).done
+    assert gw.inflight == 0, "failed callback leaked an in-flight count"
+    errors = [e for e in gw.events if e.kind == "callback-error"]
+    assert len(errors) == 1
+    assert "uid 0" in errors[0].reason
+    assert "AttributeError" in errors[0].reason
+    # the gateway is still fully serviceable afterwards
+    ok = gw.submit(_req(1))
+    assert wait_until(lambda: fakes[(12, 4)].submitted)
+    fakes[(12, 4)].complete()
+    assert ok.result(timeout=10).done and gw.drain(timeout=5)
+    gw.shutdown()
