@@ -150,7 +150,10 @@ def solve(prob: Problem, x_phys: jnp.ndarray, tol: float = 1e-6,
 
     def cond(state):
         u, r, p, rz, it = state
-        return (jnp.linalg.norm(r) > tol * fnorm) & (it < max_iter)
+        # fnorm == 0 (zero load) is converged by definition: without the
+        # guard a stale u0 leaves r != 0 and the relative criterion can
+        # never be met, so the slot burns max_iter iterations
+        return (jnp.linalg.norm(r) > tol * fnorm) & (fnorm > 0) & (it < max_iter)
 
     def body(state):
         u, r, p, rz, it = state
@@ -461,7 +464,7 @@ def load_volume_b(bp: BatchProblem) -> jnp.ndarray:
 
 
 def solve_b(bp: BatchProblem, X, tol: float = 1e-6, max_iter: int = 2000,
-            U0=None, need=None):
+            U0=None, need=None, backend: str = "reference"):
     """Batched Jacobi-preconditioned CG with per-slot convergence masking.
 
     Same update recurrence as ``solve``: each slot performs the identical
@@ -469,11 +472,27 @@ def solve_b(bp: BatchProblem, X, tol: float = 1e-6, max_iter: int = 2000,
     while-loop body) once its own residual criterion is met — so results
     are bitwise slot-invariant, while the loop trip count is the max over
     the still-active slots. A slot with f == 0 (an empty serving slot)
-    converges in zero iterations. `need` (bool (B,)) marks slots whose
-    solution the caller will actually consume; the others are masked out
+    converges in zero iterations, even under a stale warm start (fnorm
+    == 0 means converged by definition — the relative criterion alone
+    could never be met). `need` (bool (B,)) marks slots whose solution
+    the caller will actually consume; the others are masked out
     immediately so they burn zero iterations (their U stays the warm
     start). Returns (U, per-slot iters).
+
+    ``backend`` selects the iteration engine: ``"reference"`` is this
+    pure-XLA loop; ``"fused"`` dispatches to kernels/cg_fused.py, which
+    runs the ENTIRE convergence loop inside one pallas_call — results
+    bitwise-equal to this path under jit (the serving tick's context;
+    see the cg_fused module docstring for why jit is the contract's
+    domain), one kernel launch per solve.
     """
+    if backend == "fused":
+        from repro.kernels import cg_fused
+        return cg_fused.solve_b_fused(bp, X, tol=tol, max_iter=max_iter,
+                                      U0=U0, need=need)
+    if backend != "reference":
+        raise ValueError(f"unknown CG backend {backend!r} "
+                         "(expected 'reference' or 'fused')")
     F = bp.f * bp.free_mask
     diag_e = _e_grid(bp, X)[..., None] * jnp.diag(bp.KE)[None, None, None, :]
     diag = _assemble(diag_e).reshape(X.shape[0], -1)
@@ -492,7 +511,11 @@ def solve_b(bp: BatchProblem, X, tol: float = 1e-6, max_iter: int = 2000,
     fnorm = tree_norm(F)
 
     def active_of(R, its):
-        return need & (tree_norm(R) > tol * fnorm) & (its < max_iter)
+        # the fnorm > 0 term makes zero-load slots converged by
+        # definition (see docstring) — without it a nonzero warm-start
+        # residual would keep an idle slot active for max_iter trips
+        return (need & (tree_norm(R) > tol * fnorm) & (fnorm > 0)
+                & (its < max_iter))
 
     def cond(state):
         U, R, P, RZ, its = state

@@ -163,8 +163,9 @@ def _megakernel_forward(cfg: CRONetConfig):
     from repro.kernels import cronet_pipeline
 
     def fwd(params, load_vol, hist):
-        return cronet_pipeline.cronet_fused(cfg, params, load_vol, hist,
-                                            interpret=True)
+        # interpret auto-detects the platform (CPU -> interpreter,
+        # accelerator -> real lowering); see repro.kernels.resolve_interpret
+        return cronet_pipeline.cronet_fused(cfg, params, load_vol, hist)
     return fwd
 
 
@@ -172,7 +173,8 @@ def _megakernel_forward(cfg: CRONetConfig):
 def make_hybrid_step(cfg: CRONetConfig, u_scale: float,
                      error_threshold: float = 0.05, verify_every: int = 3,
                      rmin: float = 1.5, precision: str = "bf16",
-                     backend: str = "oracle") -> Callable:
+                     backend: str = "oracle",
+                     fea_backend: str = "reference") -> Callable:
     """Build the jitted batched iteration:
 
         step(params, bp: BatchProblem, load_vol (B,4,H,W,1), state) -> state
@@ -190,6 +192,11 @@ def make_hybrid_step(cfg: CRONetConfig, u_scale: float,
     Cached per configuration so sequential B=1 callers and the B=slots
     serving engine share one compiled artifact family (jax.jit re-traces
     per batch width, not per call).
+
+    ``fea_backend`` selects the batched-CG engine for the FEA fallback:
+    ``"reference"`` (pure XLA) or ``"fused"`` (single-pallas_call
+    iteration, kernels/cg_fused.py) — bitwise-identical results, so the
+    choice is a pure deployment knob (fea2d.solve_b docstring).
     """
     dtype = _INPUT_DTYPE[precision]
     forward = {"oracle": _oracle_forward,
@@ -222,7 +229,7 @@ def make_hybrid_step(cfg: CRONetConfig, u_scale: float,
         u_fea = jax.lax.cond(
             jnp.any(need_fea),
             lambda: fea2d.solve_b(bp, state.x, U0=state.u,
-                                  need=need_fea)[0],
+                                  need=need_fea, backend=fea_backend)[0],
             lambda: state.u)
 
         # batch-invariant norms: err is COMPARED against the gate threshold,
@@ -241,9 +248,21 @@ def make_hybrid_step(cfg: CRONetConfig, u_scale: float,
         else:
             dc_f = filt_mask_b(state.x, dc, bp.elem_mask)
         hist = jnp.roll(state.hist, -1, axis=1).at[:, -1].set(state.x)
-        dv = jnp.ones_like(state.x) / (cfg.nelx * cfg.nely)
-        x = simp.oc_update_b(state.x, dc_f, dv[0], bp.volfrac,
-                             mask=bp.elem_mask)
+        if bp.elem_mask is None:
+            dv = jnp.ones_like(state.x) / (cfg.nelx * cfg.nely)
+            x = simp.oc_update_b(state.x, dc_f, dv[0], bp.volfrac)
+        else:
+            # the mean-over-ACTIVE-elements volume constraint has uniform
+            # gradient 1/active_count, which differs per slot under
+            # shape-class padding — a flat 1/(nelx*nely) would hand the
+            # bisection the padded mesh's gradient and shift the update
+            # away from what a dedicated (unpadded) engine computes
+            active = jnp.maximum(
+                fea2d.tree_sum(bp.elem_mask.reshape(state.x.shape[0], -1)),
+                1.0)
+            dv = jnp.ones_like(state.x) / active[:, None, None]
+            x = simp.oc_update_b(state.x, dc_f, dv, bp.volfrac,
+                                 mask=bp.elem_mask)
         return HybridState(
             x=x, u=u, hist=hist, it=state.it + 1, err=err,
             n_cronet=state.n_cronet + use_cronet.astype(jnp.int32),
@@ -274,7 +293,8 @@ def run_hybrid(cfg: CRONetConfig, params, u_scale: float,
                verify_every: int = 3, rmin: float = 1.5,
                reference: Optional[dict] = None, precision: str = "bf16",
                problem: Optional[fea2d.Problem] = None,
-               compute_metrics: bool = True, backend: str = "oracle"):
+               compute_metrics: bool = True, backend: str = "oracle",
+               fea_backend: str = "reference"):
     """Run the hybrid loop for one problem; returns HybridResult.
 
     A thin B=1 driver over the batched core (make_hybrid_step) — the same
@@ -293,7 +313,7 @@ def run_hybrid(cfg: CRONetConfig, params, u_scale: float,
     bp = fea2d.stack_problems([prob, fea2d.idle_problem(cfg.nelx, cfg.nely)])
     load_vol = fea2d.load_volume_b(bp)
     step = make_hybrid_step(cfg, u_scale, error_threshold, verify_every,
-                            rmin, precision, backend)
+                            rmin, precision, backend, fea_backend)
     state = init_state(cfg, bp)
     cs = []
     for _ in range(n_iter):

@@ -102,7 +102,19 @@ def make_filter_b(nelx: int, nely: int, rmin: float = 1.5,
 def oc_update_b(X, DC, dv, volfrac, move: float = 0.2, mask=None):
     """Batched OC update; volfrac is per-slot (B,). X/DC: (B, nely, nelx).
     ``mask`` (optional, per-slot (B, nely, nelx)) freezes passive
-    shape-class padding at density 0."""
+    shape-class padding at density 0. ``dv`` is either one shared
+    (nely, nelx) volume-gradient field or a per-slot (B, nely, nelx)
+    stack — shape-class batches need the latter, because the uniform
+    gradient of the mean-over-ACTIVE-elements constraint is
+    ``1/active_count``, which differs per slot under padding."""
+    if jnp.ndim(dv) == jnp.ndim(X):
+        if mask is None:
+            return jax.vmap(lambda x, dc, d, vf: oc_update(x, dc, d, vf,
+                                                           move))(
+                X, DC, dv, volfrac)
+        return jax.vmap(lambda x, dc, d, vf, m: oc_update(x, dc, d, vf,
+                                                          move, m))(
+            X, DC, dv, volfrac, mask)
     if mask is None:
         return jax.vmap(lambda x, dc, vf: oc_update(x, dc, dv, vf, move))(
             X, DC, volfrac)

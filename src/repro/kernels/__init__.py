@@ -1,3 +1,35 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Pallas kernel package.
+
+Every kernel entry point in this package takes an ``interpret`` keyword
+resolved through :func:`resolve_interpret`: ``None`` (the default)
+auto-detects the platform — the Pallas interpreter is used only when the
+active JAX backend is CPU (where Mosaic cannot compile), and real
+TPU/GPU lowering is used everywhere else. Tests and debugging pass an
+explicit ``True``/``False`` to override the detection.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve a kernel ``interpret`` override.
+
+    ``None`` means auto-detect: interpret only when the default JAX
+    backend is CPU (the interpreter is the CPU *fallback*, never the
+    default on a real accelerator — running the Pallas interpreter on a
+    TPU/GPU silently forfeits the on-chip execution the kernels exist
+    for). An explicit bool wins unconditionally (tests force interpret
+    mode on any platform; benchmarks force compiled mode).
+    """
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return bool(interpret)
+
+
+__all__ = ["resolve_interpret"]

@@ -1,0 +1,240 @@
+"""Fused batched Jacobi-PCG solve — the FEA fallback's megakernel.
+
+The serving hot path's last big HBM consumer: every CG iteration of the
+reference ``fea2d.solve_b`` bounces through dozens of XLA op boundaries
+(stencil taps, assembly pads, axpy updates, preconditioner divide, four
+fixed-tree reductions), each materializing a (B, ndof) intermediate.
+This module fuses the ENTIRE SOLVE — stencil ``stiffness_apply_b``, the
+axpy updates, Jacobi precondition, the fixed-tree
+``tree_dot``/``tree_norm`` reductions, the per-slot convergence freeze
+mask, and the convergence loop itself — into a single ``pallas_call``
+whose working set (density grid, Jacobi diagonal, free-dof mask, and
+the U/R/P krylov state) is VMEM-resident from the first iteration to
+the last: the TPU form of the paper's GMIO-only DRAM contract, applied
+to the solver instead of the network. One launch per solve; the host
+sees only the final displacement and iteration counts.
+
+Two structural wins ride along even on CPU (where the kernel runs
+through the Pallas interpreter and compiles to the same XLA backend as
+the reference):
+
+  * the convergence test runs ONCE per iteration on a carried (B,)
+    residual norm — the reference's while_loop evaluates
+    ``tree_norm(R)`` twice per trip ((B, ndof) reductions in both the
+    cond and the body's ``active_of``), and XLA cannot CSE across the
+    cond/body boundary;
+  * there is no per-iteration op-dispatch or buffer traffic at all —
+    the krylov recurrence runs start-to-finish inside one kernel.
+
+Bitwise contract: the kernel body reuses the exact reference ops
+(``fea2d._ue_slices``/``_ke_apply``/``_assemble``/``tree_*``) in the
+exact reference order on the same (B, ...) shapes, so UNDER JIT — the
+serving engine's tick, and any jitted caller — ``solve_b(...,
+backend="fused")`` is BITWISE-equal to the reference path across batch
+widths, warm starts, ``need`` masks, and ``elem_mask`` padding
+(tests/test_cg_fused.py sweeps all four). Jit is the contract's
+domain, not a caveat: two standalone eager programs are not
+bitwise-stable on CPU XLA even reference-vs-reference (an eager
+``solve_b`` and a jitted one make different FMA-contraction choices in
+``_ke_apply``), so the meaningful invariant is equality inside one
+compiled tick program — exactly what the engine runs.
+
+Two hard-won structural rules keep that contract (found by A/B-ing
+kernel variants against the reference):
+
+  * the SIMP stiffness grid ``e`` must be recomputed INSIDE the kernel
+    from the density X — handing the kernel a precomputed ``e`` as an
+    operand changes XLA's FMA clustering of the ``e * _ke_apply``
+    stencil and flips last-ulp bits (the Jacobi diagonal, by contrast,
+    is only used in a lone elementwise divide and is safe to pass in);
+  * the batch rides inside one grid step as a single slot-block:
+    splitting slots across grid steps would hand XLA per-slot (width-1)
+    shapes, and the reference's bitwise slot-invariance only holds at
+    widths >= 2 (unit batch dims lower through different
+    vectorization/FMA choices — the same reason ``run_hybrid`` pads
+    B=1 to 2).
+
+Like every kernel here, ``interpret=None`` auto-detects the platform
+(interpret only as the CPU fallback — ``repro.kernels.resolve_interpret``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.fea import fea2d
+from repro.kernels import resolve_interpret
+
+
+def _make_solve_kernel(nelx: int, nely: int, tol: float, max_iter: int,
+                       has_mask: bool):
+    def kernel(x_ref, pe_ref, diag_ref, free_ref, ke_ref, need_ref,
+               fnorm_ref, *rest):
+        if has_mask:
+            mask_ref = rest[0]
+            rest = rest[1:]
+        u_ref, r_ref, p_ref, rz_ref, rn_ref, uo_ref, itso_ref = rest
+        # whole slot-block in VMEM: the density grid, constants (diag,
+        # free, KE) and the krylov state; everything below stays
+        # on-chip until convergence
+        X = x_ref[...]                  # (B, nely, nelx) densities
+        penal, e_min = pe_ref[0], pe_ref[1]
+        diag = diag_ref[...]            # (B, ndof) Jacobi diagonal
+        free = free_ref[...]            # (B, ndof)
+        KE = ke_ref[...]                # (8, 8)
+        need = need_ref[...]            # (B,) float 0/1
+        fnorm = fnorm_ref[...]          # (B,)
+        B = fnorm.shape[0]
+
+        # SIMP stiffness grid, recomputed in-kernel exactly as
+        # fea2d._e_grid does (module docstring: feeding a precomputed e
+        # through the operand path perturbs FMA clustering downstream)
+        e = e_min + (X.reshape(B, nelx, nely) ** penal) * (1 - e_min)
+        if has_mask:
+            e = e * mask_ref[...].reshape(B, nelx, nely)
+
+        def active_of(rnorm, its):
+            # identical criterion (and fp compares) to the reference
+            # active_of, with rnorm carried instead of re-reduced; the
+            # fnorm > 0 term makes zero-load slots converged by
+            # definition (fea2d.solve_b docstring)
+            return ((need > 0) & (fnorm > 0) & (rnorm > tol * fnorm)
+                    & (its < max_iter))
+
+        def cond(state):
+            _, _, _, _, its, rnorm = state
+            # (B,) compares only — no (B, ndof) reduction in the cond
+            return jnp.any(active_of(rnorm, its))
+
+        def body(state):
+            U, R, P, RZ, its, rnorm = state
+            act = active_of(rnorm, its)
+
+            # stiffness stencil apply (reference stiffness_apply_b,
+            # inlined on the VMEM-resident e grid)
+            Ug = P.reshape(B, nelx + 1, nely + 1, 2)
+            fe = e[..., None] * fea2d._ke_apply(KE, fea2d._ue_slices(Ug))
+            KP = fea2d._assemble(fe).reshape(B, -1) * free
+
+            alpha = RZ / jnp.maximum(fea2d.tree_dot(P, KP), 1e-30)
+            U_n = U + alpha[:, None] * P
+            R_n = R - alpha[:, None] * KP
+            Z = R_n / diag * free       # Jacobi precondition, in-register
+            RZ_n = fea2d.tree_dot(R_n, Z)
+            P_n = Z + (RZ_n / jnp.maximum(RZ, 1e-30))[:, None] * P
+
+            m = act[:, None]
+            R_out = jnp.where(m, R_n, R)
+            # next trip's convergence test, while R is still in VMEM
+            return (jnp.where(m, U_n, U), R_out, jnp.where(m, P_n, P),
+                    jnp.where(act, RZ_n, RZ), its + act.astype(jnp.int32),
+                    fea2d.tree_norm(R_out))
+
+        state0 = (u_ref[...], r_ref[...], p_ref[...], rz_ref[...],
+                  jnp.zeros((B,), jnp.int32), rn_ref[...])
+        U, R, P, RZ, its, rn = jax.lax.while_loop(cond, body, state0)
+        uo_ref[...] = U
+        itso_ref[...] = its
+
+    return kernel
+
+
+@functools.lru_cache(maxsize=64)
+def _make_solve(B: int, nelx: int, nely: int, tol: float, max_iter: int,
+                has_mask: bool, interpret: bool):
+    """Build (and cache) the fused-solve pallas_call for one
+    (batch, mesh, tolerance) family — mirrors the make_hybrid_step cache
+    so serving engines share one compiled artifact per configuration."""
+    ndof = 2 * (nelx + 1) * (nely + 1)
+
+    def full(shape):
+        # one grid step carries the whole slot-block (see module
+        # docstring: per-slot width-1 blocks would break the bitwise
+        # slot-invariance contract the fused path must preserve)
+        return pl.BlockSpec(shape, lambda: (0,) * len(shape))
+
+    f32 = jnp.float32
+    kernel = _make_solve_kernel(nelx, nely, tol, max_iter, has_mask)
+    in_specs = [
+        full((B, nely, nelx)),          # X densities
+        full((2,)),                     # (penal, e_min)
+        full((B, ndof)),                # diag
+        full((B, ndof)),                # free_mask
+        full((8, 8)),                   # KE
+        full((B,)),                     # need
+        full((B,)),                     # fnorm
+    ]
+    if has_mask:
+        in_specs.append(full((B, nely, nelx)))   # elem_mask
+    in_specs += [
+        full((B, ndof)),                # U0
+        full((B, ndof)),                # R0
+        full((B, ndof)),                # P0
+        full((B,)),                     # RZ0
+        full((B,)),                     # rnorm0
+    ]
+    call = pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=in_specs,
+        out_specs=[full((B, ndof)), full((B,))],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, ndof), f32),   # U
+            jax.ShapeDtypeStruct((B,), jnp.int32),  # its
+        ],
+        interpret=interpret,
+    )
+    return call
+
+
+def solve_b_fused(bp: "fea2d.BatchProblem", X, tol: float = 1e-6,
+                  max_iter: int = 2000, U0=None, need=None, *,
+                  interpret: Optional[bool] = None):
+    """Batched Jacobi-PCG as ONE pallas_call: setup (loads, Jacobi
+    diagonal, initial residual) runs as regular XLA ops, then the whole
+    convergence loop executes inside a single kernel launch with the
+    krylov state VMEM-resident throughout. Drop-in for
+    ``fea2d.solve_b`` (same (U, iters) return, same per-slot
+    convergence semantics, bitwise-equal results under jit) — reached
+    via ``fea2d.solve_b(..., backend="fused")``.
+
+    A slot with ``fnorm == 0`` (zero load — an empty serving slot) is
+    converged by definition and burns zero iterations even when a stale
+    warm start leaves a nonzero residual.
+    """
+    # mesh dims from the density SHAPE (static), not bp fields — under
+    # jit the BatchProblem's int leaves are tracers
+    B, nely, nelx = X.shape
+    F = bp.f * bp.free_mask
+    # loop invariants, computed ONCE: SIMP stiffness grid (for the
+    # diagonal only — the kernel recomputes its own) + Jacobi diagonal
+    e = fea2d._e_grid(bp, X)
+    diag = fea2d._assemble(
+        e[..., None] * jnp.diag(bp.KE)[None, None, None, :]).reshape(B, -1)
+    diag = jnp.where(diag > 0, diag, 1.0)
+    if need is None:
+        need = jnp.ones((B,), bool)
+    needf = need.astype(jnp.float32)
+
+    U = jnp.zeros_like(F) if U0 is None else U0 * bp.free_mask
+    R = F - fea2d.stiffness_apply_b(bp, X, U)
+    Z = R / diag * bp.free_mask
+    RZ = fea2d.tree_dot(R, Z)
+    fnorm = fea2d.tree_norm(F)
+    rnorm = fea2d.tree_norm(R)
+    pe = jnp.stack([jnp.asarray(bp.penal, jnp.float32),
+                    jnp.asarray(bp.e_min, jnp.float32)])
+
+    has_mask = bp.elem_mask is not None
+    solve = _make_solve(B, nelx, nely, float(tol), int(max_iter),
+                        has_mask, resolve_interpret(interpret))
+    args = [X, pe, diag, bp.free_mask, bp.KE, needf, fnorm]
+    if has_mask:
+        args.append(bp.elem_mask)
+    args += [U, R, Z, RZ, rnorm]
+    U, its = solve(*args)
+    return U, its

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
+
 
 def _conv2d_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, fuse_silu: bool):
     x = x_ref[0]                                     # (H+kh-1, W+kw-1, Cin)
@@ -40,7 +42,7 @@ def _conv2d_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, fuse_silu: bool):
 
 
 def conv2d(x: jax.Array, w: jax.Array, *, fuse_silu: bool = False,
-           interpret: bool = True) -> jax.Array:
+           interpret: Optional[bool] = None) -> jax.Array:
     """x: (B, H, W, Cin); w: (kh, kw, Cin, Cout); SAME padding, no bias."""
     b, h, wd, cin = x.shape
     kh, kw, _, cout = w.shape
@@ -54,7 +56,7 @@ def conv2d(x: jax.Array, w: jax.Array, *, fuse_silu: bool = False,
         ],
         out_specs=pl.BlockSpec((1, h, wd, cout), lambda i: (i, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, wd, cout), x.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(xp, w)
 
 
@@ -78,7 +80,7 @@ def _conv3d_kernel(x_ref, w_ref, o_ref, *, kd: int, kh: int, kw: int,
 
 
 def conv3d(x: jax.Array, w: jax.Array, *, depth_padding: str = "same",
-           fuse_silu: bool = False, interpret: bool = True) -> jax.Array:
+           fuse_silu: bool = False, interpret: Optional[bool] = None) -> jax.Array:
     """x: (B, D, H, W, Cin); w: (kd, kh, kw, Cin, Cout). Spatial SAME;
     depth: 'same' (kd==1) or 'causal_same' (pad (0, kd-1)) — matches
     core.cronet.conv3d."""
@@ -97,5 +99,5 @@ def conv3d(x: jax.Array, w: jax.Array, *, depth_padding: str = "same",
         ],
         out_specs=pl.BlockSpec((1, d, h, wd, cout), lambda i: (i, 0, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, d, h, wd, cout), x.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(xp, w)

@@ -22,11 +22,13 @@ premise (419K-param net fits on-chip) holds with room to spare on TPU.
 from __future__ import annotations
 
 import functools
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.configs.cronet import CRONetConfig
@@ -138,7 +140,7 @@ def _make_kernel(cfg: CRONetConfig):
 
 
 def cronet_fused(cfg: CRONetConfig, params: Dict, load_vol: jax.Array,
-                 hist: jax.Array, *, interpret: bool = True) -> jax.Array:
+                 hist: jax.Array, *, interpret: Optional[bool] = None) -> jax.Array:
     """Fully-fused CRONet inference, batched over the Pallas grid.
 
     load_vol: (B, 4, ny+1, nx+1, 1); hist: (B, T, ny, nx, 1) -> (B, p).
@@ -172,6 +174,6 @@ def cronet_fused(cfg: CRONetConfig, params: Dict, load_vol: jax.Array,
             pltpu.VMEM((cfg.hist_len, cfg.nely, cfg.nelx, cfg.b_c2),
                        jnp.float32),                           # branch L3 stage
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(*batched, *weights)
     return out[0] if squeeze else out

@@ -18,9 +18,13 @@ from __future__ import annotations
 import functools
 import math
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
@@ -67,7 +71,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, block_q: int = 256,
-                    block_k: int = 256, interpret: bool = True) -> jax.Array:
+                    block_k: int = 256, interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D/Dv); returns (B, Sq, Hq, Dv).
 
     GQA: q-head groups fold into q rows per kv head, so the MXU sees
@@ -109,7 +113,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, dv), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(qf, kf, vf)
     o = (of.reshape(b, hkv, sq, g, dv).transpose(0, 2, 1, 3, 4)
          .reshape(b, sq, hq, dv))
@@ -117,7 +121,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def flash_attention_causal_gqa(q, k, v, *, block_q=256, block_k=256,
-                               interpret=True):
+                               interpret=None):
     """Causal GQA flash attention: loops the group dim with vmap-of-heads
     sharing KV (keeps causal masking exact for g > 1)."""
     b, sq, hq, d = q.shape

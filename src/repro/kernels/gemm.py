@@ -18,6 +18,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 
@@ -45,7 +47,7 @@ def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int,
 
 def gemm(x: jax.Array, w: jax.Array, *, activation: Optional[str] = None,
          bm: int = 128, bk: int = 128, bn: int = 128,
-         interpret: bool = True) -> jax.Array:
+         interpret: Optional[bool] = None) -> jax.Array:
     """x: (M, K) @ w: (K, N) -> (M, N), optional fused activation.
 
     Fully parameterized M/K/N (the paper's extension of GAMA): arbitrary
@@ -69,7 +71,7 @@ def gemm(x: jax.Array, w: jax.Array, *, activation: Optional[str] = None,
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(xp, wp)
     return out[:m, :n]
 

@@ -12,11 +12,13 @@ TPU adaptation notes:
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import resolve_interpret
 
 from repro.core.cronet import _adaptive_bounds
 
@@ -29,7 +31,7 @@ def _maxpool2d_kernel(x_ref, o_ref, *, k: int):
     o_ref[0] = jnp.max(xr, axis=(1, 3))
 
 
-def maxpool2d(x: jax.Array, k: int = 2, *, interpret: bool = True) -> jax.Array:
+def maxpool2d(x: jax.Array, k: int = 2, *, interpret: Optional[bool] = None) -> jax.Array:
     b, h, w, c = x.shape
     return pl.pallas_call(
         functools.partial(_maxpool2d_kernel, k=k),
@@ -37,7 +39,7 @@ def maxpool2d(x: jax.Array, k: int = 2, *, interpret: bool = True) -> jax.Array:
         in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
         out_specs=pl.BlockSpec((1, h // k, w // k, c), lambda i: (i, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h // k, w // k, c), x.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x)
 
 
@@ -54,7 +56,7 @@ def _aap2d_kernel(x_ref, o_ref, *, bounds):
 
 
 def adaptive_avg_pool2d(x: jax.Array, out_hw: Tuple[int, int], *,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: Optional[bool] = None) -> jax.Array:
     b, h, w, c = x.shape
     oh, ow = out_hw
     bounds = (_adaptive_bounds(h, oh), _adaptive_bounds(w, ow))
@@ -64,7 +66,7 @@ def adaptive_avg_pool2d(x: jax.Array, out_hw: Tuple[int, int], *,
         in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
         out_specs=pl.BlockSpec((1, oh, ow, c), lambda i: (i, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, oh, ow, c), x.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x)
 
 
@@ -85,7 +87,7 @@ def _aap3d_kernel(x_ref, o_ref, *, bounds):
 
 
 def adaptive_avg_pool3d(x: jax.Array, out_dhw: Tuple[int, int, int], *,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: Optional[bool] = None) -> jax.Array:
     b, d, h, w, c = x.shape
     od, oh, ow = out_dhw
     bounds = (_adaptive_bounds(d, od), _adaptive_bounds(h, oh),
@@ -96,5 +98,5 @@ def adaptive_avg_pool3d(x: jax.Array, out_dhw: Tuple[int, int, int], *,
         in_specs=[pl.BlockSpec((1, d, h, w, c), lambda i: (i, 0, 0, 0, 0))],
         out_specs=pl.BlockSpec((1, od, oh, ow, c), lambda i: (i, 0, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, od, oh, ow, c), x.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x)

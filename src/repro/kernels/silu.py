@@ -10,9 +10,13 @@ from __future__ import annotations
 
 import functools
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import resolve_interpret
 
 N_ENTRIES = 256
 LO, HI = -8.0, 8.0
@@ -32,7 +36,7 @@ def _silu_lut_kernel(x_ref, table_ref, o_ref):
     o_ref[...] = val.astype(o_ref.dtype)
 
 
-def silu_lut(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+def silu_lut(x: jax.Array, *, interpret: Optional[bool] = None) -> jax.Array:
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % 128
     fp = jnp.pad(flat, (0, pad))
@@ -42,7 +46,7 @@ def silu_lut(x: jax.Array, *, interpret: bool = True) -> jax.Array:
                   pl.BlockSpec((N_ENTRIES,), lambda: (0,))],
         out_specs=pl.BlockSpec(fp.shape, lambda: (0,)),
         out_shape=jax.ShapeDtypeStruct(fp.shape, x.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(fp, make_table())
     return out[: flat.shape[0]].reshape(x.shape)
 
@@ -51,7 +55,7 @@ def _silu_exact_kernel(x_ref, o_ref):
     o_ref[...] = jax.nn.silu(x_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 
-def silu_exact(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+def silu_exact(x: jax.Array, *, interpret: Optional[bool] = None) -> jax.Array:
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % 128
     fp = jnp.pad(flat, (0, pad))
@@ -60,6 +64,6 @@ def silu_exact(x: jax.Array, *, interpret: bool = True) -> jax.Array:
         in_specs=[pl.BlockSpec(fp.shape, lambda: (0,))],
         out_specs=pl.BlockSpec(fp.shape, lambda: (0,)),
         out_shape=jax.ShapeDtypeStruct(fp.shape, x.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(fp)
     return out[: flat.shape[0]].reshape(x.shape)

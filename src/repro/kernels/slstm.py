@@ -20,9 +20,13 @@ from __future__ import annotations
 
 import functools
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 
@@ -72,7 +76,7 @@ def _slstm_kernel(wx_ref, r_ref, o_ref, h_ref, c_ref, n_ref, m_ref, *,
 
 
 def slstm_fused(wx: jax.Array, r_zifo: jax.Array, *, time_block: int = 256,
-                batch_tile: int = 8, interpret: bool = True) -> jax.Array:
+                batch_tile: int = 8, interpret: Optional[bool] = None) -> jax.Array:
     """wx: (B, S, 4d) precomputed input projections ([z|i|f|o] layout);
     r_zifo: (nh, dh, 4*dh) block-diagonal recurrent weights.
     Returns hidden states (B, S, d). Zero initial state (training path)."""
@@ -99,5 +103,5 @@ def slstm_fused(wx: jax.Array, r_zifo: jax.Array, *, time_block: int = 256,
             pltpu.VMEM((bt, d), jnp.float32),   # n
             pltpu.VMEM((bt, d), jnp.float32),   # m
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(wx, r_zifo)

@@ -78,6 +78,32 @@ observed per-bucket arrival rate into a live admission cap
 events) instead of picking a build-time width — nothing is ever
 dropped or rebuilt when the target moves.
 
+Device-resident serving (``fea_backend=`` and backend auto-detection)::
+
+    gw = TopoGateway(cfg, params, u_scale,
+                     backend="megakernel",   # CRONet forward as one kernel
+                     fea_backend="fused")    # CG iteration as one kernel
+
+``fea_backend="fused"`` moves the batched-CG FEA fallback onto the
+fused-solve Pallas kernel (kernels/cg_fused.py): ONE kernel launch runs
+the entire Jacobi-PCG convergence loop with the krylov state
+VMEM-resident throughout, so a tick exchanges only admissions,
+park/restore, and completions with the host. Inside the compiled tick
+(the only place the engine ever runs it) densities are
+BITWISE-identical to ``fea_backend="reference"`` — the knob is pure
+deployment policy, switchable per engine or fleet-wide through the
+gateway, and never invalidates a bitwise serving contract.
+
+Every Pallas entry point (the megakernel forward, the fused CG, and the
+primitive kernels underneath) resolves ``interpret=None`` by platform
+auto-detection: real Mosaic lowering on TPU/GPU, the Pallas interpreter
+ONLY as the CPU fallback (``repro.kernels.resolve_interpret``). Tests
+and benchmarks can still force a mode with an explicit ``True``/``False``.
+On a CPU host the fused backend is the same XLA code path as the
+reference plus fewer per-iteration reductions — modestly faster, and
+bitwise-equal by construction (``benchmarks/topo_serving.py --device``
+measures both).
+
 The LM-decode serving half (``server``, ``decode``) is deliberately NOT
 re-exported here: import those modules directly.
 """

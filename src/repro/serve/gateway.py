@@ -169,7 +169,10 @@ class TopoGateway:
         ``(nelx, nely)`` is only a template — each engine is built with
         ``dataclasses.replace(cfg, nelx=..., nely=...)`` for its bucket.
     slots : batch slots per engine (every mesh bucket gets its own slot
-        group; engines also accept ``**engine_kwargs`` passthrough).
+        group; engines also accept ``**engine_kwargs`` passthrough —
+        e.g. ``TopoGateway(..., fea_backend="fused")`` puts every bucket
+        engine, canaries included, on the fused-CG device-resident tick;
+        see TopoServingEngine's ``fea_backend``).
     max_pending : admission queue capacity; ``None`` = unbounded (the
         baseline the SHED policy is measured against).
     overload : ``OverloadPolicy`` or its string value — what a full

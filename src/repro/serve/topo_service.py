@@ -362,8 +362,13 @@ class TopoServingEngine:
     bound.
 
     backend: "oracle" (core/cronet.py forward) or "megakernel"
-    (kernels/cronet_pipeline.py, batched over the Pallas grid, interpret
-    mode on CPU — slow but exercises the on-chip path).
+    (kernels/cronet_pipeline.py, batched over the Pallas grid; interpret
+    mode is auto-detected per platform — the interpreter only as CPU
+    fallback).
+    fea_backend: "reference" (pure-XLA batched CG) or "fused"
+    (kernels/cg_fused.py single-pallas_call iteration). Bitwise-identical
+    densities either way (fea2d.solve_b docstring), so the knob is pure
+    deployment policy; it threads through TopoGateway(**engine_kwargs).
     shards: None = auto (one shard per available device while shard width
     stays >= 2); 1 = single compiled group (single-device behaviour).
 
@@ -394,7 +399,8 @@ class TopoServingEngine:
                  completed_limit: int = 1024,
                  model_tag: Optional[str] = None,
                  ladder: Optional[Sequence[int]] = None,
-                 shape_padded: bool = False):
+                 shape_padded: bool = False,
+                 fea_backend: str = "reference"):
         self._devices = shard_devices(slots, shards)
         self.cfg = cfg
         self.slots = slots
@@ -409,6 +415,7 @@ class TopoServingEngine:
         self.u_scale = u_scale
         self.precision = precision
         self.backend = backend
+        self.fea_backend = fea_backend
         self.model_tag = model_tag
         self._error_threshold = error_threshold
         self._verify_every = verify_every
@@ -416,7 +423,7 @@ class TopoServingEngine:
         self.params = hybrid.cast_params(params, precision)
         self.step = hybrid.make_hybrid_step(
             cfg, u_scale, error_threshold, verify_every, rmin, precision,
-            backend)
+            backend, fea_backend)
         self.preempt = preempt
         self.tick_time_s = tick_time_s
         (self._edof, self._KE,
@@ -553,7 +560,7 @@ class TopoServingEngine:
                 self.step = hybrid.make_hybrid_step(
                     self.cfg, u_scale, self._error_threshold,
                     self._verify_every, self._rmin, self.precision,
-                    self.backend)
+                    self.backend, self.fea_backend)
             self.model_tag = model_tag
 
     # ------------------------------------------------------------ ladder
@@ -899,6 +906,7 @@ class TopoServingEngine:
             "batched_steps": float(self.last_run_steps),
             "total_steps": float(self.total_steps),
             "model_tag": self.model_tag,
+            "fea_backend": self.fea_backend,
         })
         if self.ladder is not None:
             rung_steps: Dict[int, int] = {r: 0 for r in self._rungs}

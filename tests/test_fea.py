@@ -146,6 +146,53 @@ def test_masked_oc_update_freezes_passive_and_scales_volume():
     assert abs(active_mean - 0.5) < 0.02
 
 
+def test_padded_oc_volume_matches_dedicated():
+    """Regression: the hybrid step used to hand ``oc_update_b`` the
+    padded mesh's uniform volume gradient 1/(nelx*nely) even when
+    ``bp.elem_mask`` marked most of it passive — the ACTIVE-element
+    volume constraint has per-slot gradient 1/active_count under
+    shape-class padding. After a step the active-region volume of a
+    padded slot must equal the dedicated (unpadded) run's volume, and
+    no NaNs may leak from the passive border (a masked dv of the form
+    mask/active would put 0/0 on passive elements)."""
+    from repro.fea import hybrid
+    from repro.configs.cronet import get_cronet_config
+    from repro.common import materialize
+    from repro.core import cronet
+    import dataclasses
+
+    p = fea2d.point_load_problem(10, 4, load_node=(3, 0), load=(0.0, -1.2))
+    pp = fea2d.pad_problem(p, 12, 6)
+
+    def run(cfg_dims, probs):
+        cfg = dataclasses.replace(get_cronet_config("small"),
+                                  nelx=cfg_dims[0], nely=cfg_dims[1],
+                                  hist_len=3)
+        params = materialize(cronet.param_specs(
+            dataclasses.replace(cfg, dtype="float32")), jax.random.key(0))
+        bp = fea2d.stack_problems(probs)
+        step = hybrid.make_hybrid_step(cfg, 50.0, precision="fp32")
+        state = hybrid.init_state(cfg, bp)
+        load_vol = fea2d.load_volume_b(bp)
+        cparams = hybrid.cast_params(params, "fp32")
+        for _ in range(3):
+            state = step(cparams, bp, load_vol, state)
+        return np.asarray(state.x)
+
+    x_ded = run((10, 4), [p, p])
+    x_pad = run((12, 6), [pp, pp])
+    assert not np.isnan(x_pad).any(), "NaNs leaked from the passive border"
+    m = np.asarray(pp.elem_mask)
+    # passive border stays exactly empty
+    assert not x_pad[0][m == 0.0].any()
+    vol_ded = x_ded[0].mean()
+    vol_pad = x_pad[0][m == 1.0].mean()
+    assert abs(vol_pad - vol_ded) < 1e-3, (
+        f"padded active volume {vol_pad:.6f} != dedicated {vol_ded:.6f}")
+    # both runs actually project onto the volume constraint
+    assert abs(vol_ded - p.volfrac) < 0.02
+
+
 def test_load_volume_layout(prob):
     vol = fea2d.load_volume(prob)
     assert vol.shape == (4, prob.nely + 1, prob.nelx + 1, 1)
