@@ -58,6 +58,22 @@ push; ``--fleet --check`` is the nightly full-budget ladder.
 
     PYTHONPATH=src python -m benchmarks.topo_serving --fleet --smoke
 
+Flywheel mode (--flywheel) measures the serving-data flywheel: a
+deliberately-NARROW fleet default (single-MBB surrogate) serves
+off-distribution point loads through a harvest-armed gateway, and a
+driven ``FlywheelController`` must close the whole loop unattended —
+harvest the rejected traffic, fine-tune a mesh-specialized child from
+the serving checkpoint through the REAL ``finetune_from_tag`` layer,
+canary it on its own bucket, and reach a clean terminal state with
+zero dropped/mis-tagged requests, consistent lineage, and balanced
+leases. ``--flywheel --smoke`` gates every push (promote OR clean
+rollback accepted); ``--flywheel --check`` is the nightly budget and
+additionally asserts PROMOTION plus the acceptance claim: the promoted
+specialist strictly beats the fleet default on held-out loads from the
+harvested distribution.
+
+    PYTHONPATH=src python -m benchmarks.topo_serving --flywheel --smoke
+
 Ladder mode (--ladder) measures the elastic-width tentpole: one engine
 built at full width precompiles a LADDER of batch widths and dispatches
 every tick at the smallest rung covering live occupancy, so a
@@ -851,6 +867,207 @@ def bench_fleet(size: str = "small", n_iter: int = 20,
                 "mis_tagged": len(mis), "bitwise_rebuild": bitwise}
 
 
+def bench_flywheel(size: str = "small", n_iter: int = 16,
+                   prod_steps: int = 400, finetune_steps: int = 300,
+                   threshold: float = 0.15, max_waves: int = 8,
+                   check: bool = True, strict: bool = False,
+                   verbose: bool = True):
+    """Serving-data flywheel leg (--flywheel): the unattended
+    traffic -> train -> deploy loop, end to end on REAL models through
+    the REAL harvest/fine-tune layers (no injected stand-ins).
+
+    1. Train and register a fleet default deliberately NARROW in load
+       distribution (single-MBB-trajectory surrogate — ~0% CRONet
+       acceptance on off-distribution point loads, the PR 4 measured
+       fact), then serve off-distribution point-load waves through a
+       harvest-armed gateway: the 12x4 bucket's windowed acceptance
+       collapses below the flywheel trigger.
+    2. Drive ``FlywheelController.tick()`` between waves: the cycle
+       must HARVEST the gateway's rejected traffic (deduplicated
+       LoadCases -> regenerated FEA trajectories), FINE-TUNE a
+       mesh-specialized child from the serving checkpoint
+       (``finetune_from_tag``: warm start + replayed synthetic mix),
+       CANARY it on its own bucket, and reach a terminal state —
+       promoted or cleanly rolled back — with zero dropped and zero
+       mis-tagged requests, consistent lineage, balanced leases, and a
+       registry-retention sweep running alongside.
+    3. Nightly (``strict``, via --check): the cycle must PROMOTE, the
+       bucket must serve the child afterwards, and the promoted
+       specialist's CRONet acceptance on HELD-OUT harvested loads
+       (same off-distribution family, positions never served, so never
+       harvested) must STRICTLY exceed the fleet default's.
+
+    ``--flywheel --smoke`` gates every push with the default budget;
+    ``--flywheel --check`` is the nightly full budget plus the
+    held-out-win claim."""
+    import tempfile
+
+    from repro.fea import fea2d, train_cronet
+    from repro.serve import (FlywheelController, FlywheelState,
+                             HarvestLog, ModelRegistry,
+                             RegistryRetention, TopoGateway, TopoRequest,
+                             TopoServingEngine)
+
+    cfg0, _ = _setup(size, hist_len=0)
+    cfg = dataclasses.replace(cfg0, nelx=12, nely=4, hist_len=3)
+    mesh = (cfg.nelx, cfg.nely)
+    # Off-distribution family: bottom-edge point loads across the span.
+    # Served positions get harvested; held-out positions never enter
+    # the gateway, so the nightly comparison is on genuinely unseen
+    # loads from the harvested distribution.
+    serve_probs = [fea2d.point_load_problem(
+        cfg.nelx, cfg.nely, load_node=(x, 0),
+        load=(0.0, -0.8 - 0.05 * i))
+        for i, x in enumerate([1, 3, 5, 7, 9, 11])]
+    held_probs = [fea2d.point_load_problem(
+        cfg.nelx, cfg.nely, load_node=(x, 0),
+        load=(0.0, -0.9 - 0.05 * i))
+        for i, x in enumerate([2, 6, 10])]
+    wave = [serve_probs[i % len(serve_probs)] for i in range(8)]
+
+    with tempfile.TemporaryDirectory() as td:
+        reg = ModelRegistry(os.path.join(td, "registry"))
+        t0 = time.time()
+        single = train_cronet.build_dataset(cfg, n_iter=30)
+        train_cronet.train_and_register(
+            cfg, reg, tag="prod", data=single, steps=prod_steps,
+            verbose=False)
+        t_train = time.time() - t0
+        if verbose:
+            print(f"trained fleet default (single-MBB, deliberately "
+                  f"narrow) in {t_train:.0f}s")
+
+        log = HarvestLog(capacity=32, accept_below=0.8,
+                         spool_dir=os.path.join(td, "harvest"))
+        gw = TopoGateway.from_registry(
+            reg, tag="prod", slots=2, error_threshold=threshold,
+            harvest=log, canary_window=32, bucket_window=64)
+        retention = RegistryRetention(reg, keep_per_lineage=2,
+                                      interval_s=0.0)
+        fly = FlywheelController(
+            gw, log, trigger_below=0.5, min_completed=6, min_harvest=3,
+            cooldown_s=3600.0, canary_fraction=0.5,
+            canary_min_requests=3, canary_margin=0.05, promote_after=4,
+            promote_timeout=600.0, finetune_steps=finetune_steps,
+            finetune_lr=5e-4, replay_cases=2,
+            harvest_n_iter=cfg.hist_len + 10, harvest_max_cases=8,
+            retention=retention)
+
+        def serve_wave(probs, uid0, deadline_s=600.0):
+            futs = [gw.submit(TopoRequest(uid=uid0 + i, problem=p,
+                                          n_iter=n_iter),
+                              deadline_s=deadline_s)
+                    for i, p in enumerate(probs)]
+            return [f.result(timeout=3600) for f in futs]
+
+        serve_wave(wave[:2], uid0=-100)          # warm/compile
+        done, terminal = [], None
+        t0 = time.time()
+        for w in range(max_waves):
+            done += serve_wave(wave, uid0=w * 100)
+            fly.tick()                           # driven, not daemon
+            if fly.history:
+                terminal = fly.history[-1]
+                break
+        t_loop = time.time() - t0
+        live = fly.cycles()
+        fly.stop()
+
+        kinds = [e.kind for e in gw.events]
+        mis = [r for r in done if r.model_tag != r.routed_tag]
+        dropped = [r for r in done if not r.done]
+        serving = gw.serving_tag(mesh)
+        child_tag = terminal.child_tag if terminal else None
+        hs = log.snapshot()
+        if verbose:
+            state = terminal.state.value if terminal else "none"
+            print(f"  flywheel  : terminal {state!r} after "
+                  f"{len(done)} requests in {t_loop:.0f}s "
+                  f"(child {child_tag!r}, harvested "
+                  f"{hs['harvested']}/{hs['recorded']} recorded, "
+                  f"{len(mis)} mis-tagged, {len(dropped)} dropped)")
+            print(f"  serving   : bucket {mesh[0]}x{mesh[1]} -> "
+                  f"{serving!r}; retention swept "
+                  f"{retention.sweeps}x, dropped "
+                  f"{len(retention.dropped)} version(s)")
+
+        if check:
+            assert terminal is not None, (
+                f"no flywheel cycle reached a terminal state within "
+                f"{max_waves} waves (live: {list(live.values())})")
+            assert terminal.state in (FlywheelState.PROMOTED,
+                                      FlywheelState.ROLLED_BACK), (
+                f"cycle ended {terminal.state.value!r}: {terminal.error}")
+            assert not live, "terminal cycle left a live entry behind"
+            assert not dropped, f"{len(dropped)} requests dropped"
+            assert not mis, f"{len(mis)} completions mis-tagged"
+            for k in ("flywheel-trigger", "flywheel-harvest",
+                      "flywheel-train", "flywheel-canary", "canary-start"):
+                assert k in kinds, f"missing {k!r} event (got {kinds})"
+            assert ("flywheel-promote" in kinds) \
+                or ("flywheel-rollback" in kinds)
+            child = reg.get(child_tag)
+            assert child.parent == "prod", (
+                f"child lineage broken: parent {child.parent!r}")
+            assert child.mesh == mesh, (
+                f"child not mesh-specialized: {child.mesh}")
+            assert child.metrics.get("finetuned_from") == "prod"
+            assert hs["harvested"] >= fly.min_harvest
+
+        # nightly: the loop must close all the way to promotion, and
+        # the specialist must WIN on held-out harvested loads
+        if strict:
+            assert terminal.state is FlywheelState.PROMOTED, (
+                f"nightly flywheel did not promote: "
+                f"{terminal.state.value} ({terminal.error})")
+            assert serving == child_tag, (
+                f"promoted bucket still serves {serving!r}")
+            post = serve_wave(wave[:4], uid0=10_000)
+            assert all(r.routed_tag == child_tag for r in post), (
+                "post-promotion traffic not routed to the specialist")
+            done += post
+
+        def offline_acceptance(tag, uid0):
+            params, rec = reg.load(tag)
+            eng = TopoServingEngine(cfg, params, rec.u_scale, slots=2,
+                                    error_threshold=threshold)
+            got = eng.run([TopoRequest(uid=uid0 + i, problem=p,
+                                       n_iter=n_iter)
+                           for i, p in enumerate(held_probs)])
+            eng.shutdown()
+            iters = sum(r.cronet_iters + r.fea_iters for r in got)
+            return sum(r.cronet_iters for r in got) / max(iters, 1)
+
+        spec_acc = prod_acc = None
+        if child_tag is not None and child_tag in reg.tags():
+            prod_acc = offline_acceptance("prod", uid0=20_000)
+            spec_acc = offline_acceptance(child_tag, uid0=30_000)
+            if verbose:
+                print(f"  held-out  : specialist acceptance "
+                      f"{spec_acc:5.1%} vs fleet default "
+                      f"{prod_acc:5.1%} on {len(held_probs)} unseen "
+                      f"harvested-family loads")
+        if strict:
+            assert spec_acc is not None
+            assert spec_acc > prod_acc, (
+                f"promoted specialist ({spec_acc:.1%}) does not beat "
+                f"the fleet default ({prod_acc:.1%}) on held-out "
+                f"harvested loads")
+
+        gw.shutdown()
+        assert reg.leased() == {}, (
+            f"leases did not balance after shutdown: {reg.leased()}")
+        print("flywheel: harvest -> fine-tune -> canary -> "
+              + ("promote + held-out win OK" if strict
+                 else "terminal state OK"))
+        return {"t_train_s": t_train, "t_loop_s": t_loop,
+                "requests": len(done),
+                "terminal": terminal.state.value if terminal else None,
+                "child_tag": child_tag, "serving_tag": serving,
+                "harvested": hs["harvested"],
+                "spec_accept": spec_acc, "prod_accept": prod_acc}
+
+
 def bench_ladder(size: str = "small", slots: int = 8, n_iter: int = 8,
                  u_scale: float = 50.0, check: bool = False,
                  verbose: bool = True):
@@ -1380,6 +1597,14 @@ def main():
                          "evict/rebuild bitwise + per-bucket "
                          "resolution. With --smoke: push-gate budget, "
                          "asserts; with --check: nightly full budget")
+    ap.add_argument("--flywheel", action="store_true",
+                    help="serving-data flywheel leg: harvest rejected "
+                         "traffic -> fine-tune a per-bucket specialist "
+                         "-> canary -> terminal. With --smoke: "
+                         "push-gate budget (promote or clean rollback); "
+                         "with --check: nightly budget, must promote "
+                         "and beat the fleet default on held-out "
+                         "harvested loads")
     ap.add_argument("--overload-mult", type=float, default=2.5,
                     help="gateway mode: base arrival rate as a multiple "
                          "of measured aggregate capacity")
@@ -1408,6 +1633,10 @@ def main():
                     train_steps=1000 if args.check else 600)
         print("fleet: canary auto-rollback + evict/rebuild bitwise + "
               "per-bucket resolution OK")
+    elif args.flywheel:
+        bench_flywheel(size=args.size, check=True, strict=args.check,
+                       prod_steps=800 if args.check else 400,
+                       finetune_steps=1000 if args.check else 300)
     elif args.smoke:
         smoke()
     elif args.gateway:

@@ -30,12 +30,30 @@ Serving modes (same as before):
     survivor — or surfaces the auto-rollback, if the canary regressed
     against the concurrent primary traffic.
 
+Flywheel mode (--flywheel, mixed-mesh only) arms the serving-data
+flywheel on the gateway: rejected traffic (requests the residual gate
+bounced back to FEA) is harvested into per-bucket LoadCases, and after
+the main wave a driven ``FlywheelController`` loop keeps serving the
+same schedule while ticking the controller — a bucket whose windowed
+acceptance sits under ``--flywheel-trigger`` harvests its failures,
+fine-tunes a mesh-specialized child from its serving checkpoint
+(``finetune_from_tag``: warm start + replayed synthetic mix, REAL
+training — expect minutes, tune ``--flywheel-steps``), canaries it on
+its own bucket, and promotes on a sustained windowed win. The demo
+then prints the typed event trail and the child's registry lineage.
+``--flywheel-retain K`` additionally sweeps the registry down to the
+last K versions per lineage between ticks (0 = never sweep; sweeps
+DELETE old unpinned versions, so it defaults off for a persistent
+registry).
+
     PYTHONPATH=src python examples/serve_topo.py --train \
         [--registry experiments/registry] [--train-steps 600] \
         [--train-cases 6] [--size small] [--requests 12] [--slots 4] \
         [--arrival-rate 2.0] [--deadline 6.0] \
         [--meshes 30x10,48x16] [--max-pending 64] [--overload block] \
-        [--swap [TAG]] [--canary TAG [--canary-fraction 0.25]]
+        [--swap [TAG]] [--canary TAG [--canary-fraction 0.25]] \
+        [--flywheel [--flywheel-steps 300] [--flywheel-waves 4] \
+         [--flywheel-trigger 0.5] [--flywheel-retain 0]]
 """
 import argparse
 import sys
@@ -116,12 +134,32 @@ def main():
                          "promote — or the auto-rollback, if the canary "
                          "regressed")
     ap.add_argument("--canary-fraction", type=float, default=0.25)
+    ap.add_argument("--flywheel", action="store_true",
+                    help="mixed-mesh mode: arm the serving-data flywheel "
+                         "(harvest rejected traffic, fine-tune a "
+                         "per-bucket specialist, canary, promote) and "
+                         "drive it after the main wave")
+    ap.add_argument("--flywheel-waves", type=int, default=4,
+                    help="extra serving waves driven through the "
+                         "flywheel loop (each wave re-serves the "
+                         "schedule, then ticks the controller)")
+    ap.add_argument("--flywheel-steps", type=int, default=300,
+                    help="fine-tune steps for the harvested specialist")
+    ap.add_argument("--flywheel-trigger", type=float, default=0.5,
+                    help="bucket CRONet acceptance below which a "
+                         "flywheel cycle starts")
+    ap.add_argument("--flywheel-retain", type=int, default=0,
+                    help="registry retention: keep this many versions "
+                         "per lineage, sweeping between ticks (0 = "
+                         "never sweep — sweeps DELETE old unpinned "
+                         "versions)")
     args = ap.parse_args()
 
     from repro.configs.cronet import get_cronet_config
     from repro.fea import dataset as dsm
     from repro.fea import fea2d, train_cronet
-    from repro.serve import ModelRegistry, NoModelError, QueueFull, \
+    from repro.serve import FlywheelController, HarvestLog, \
+        ModelRegistry, NoModelError, QueueFull, RegistryRetention, \
         RequestShed, TopoGateway, TopoRequest, TopoServingEngine
 
     cfg = get_cronet_config(args.size)
@@ -187,12 +225,22 @@ def main():
                 load_node=(int(rng.integers(0, nelx - 1)), 0),
                 load=(0.0, float(-0.5 - rng.random()))))
 
+    harvest_log = None
+    if args.flywheel:
+        if not args.meshes:
+            sys.exit("error: --flywheel needs the gateway "
+                     "(--meshes AxB,...)")
+        if args.canary:
+            sys.exit("error: --flywheel drives its own canaries; "
+                     "drop --canary")
+        harvest_log = HarvestLog(capacity=64, accept_below=0.8)
     if args.meshes:
         service = TopoGateway.from_registry(
             registry, tag=serve_tag, slots=args.slots, precision="fp32",
             max_pending=args.max_pending or None, overload=args.overload,
             error_threshold=args.threshold, backend=args.backend,
-            preempt=not args.no_preempt)
+            preempt=not args.no_preempt, harvest=harvest_log,
+            canary_window=32, bucket_window=64)
         label = f"gateway[{args.overload}]"
     else:
         params, record = registry.load(serve_tag)
@@ -362,6 +410,60 @@ def main():
             print(f"   {m[0]}x{m[1]}: {len(pool)} served, "
                   f"p50 {s['p50_latency_s']:.2f}s, "
                   f"CRONet {100 * s['cronet_hit_rate']:.1f}%")
+
+    if args.flywheel:
+        retention = (RegistryRetention(registry,
+                                       keep_per_lineage=args.flywheel_retain,
+                                       interval_s=0.0)
+                     if args.flywheel_retain > 0 else None)
+        fly = FlywheelController(
+            service, harvest_log, trigger_below=args.flywheel_trigger,
+            min_completed=6, min_harvest=2, cooldown_s=3600.0,
+            canary_fraction=0.5, canary_min_requests=3,
+            canary_margin=0.05, promote_after=4, promote_timeout=120.0,
+            finetune_steps=args.flywheel_steps, replay_cases=2,
+            harvest_n_iter=16, harvest_max_cases=8, retention=retention)
+        hs = harvest_log.snapshot()
+        print(f"== 4. flywheel: {hs['harvested']} rejected load case(s) "
+              f"harvested from {hs['recorded']} completion(s); driving "
+              f"up to {args.flywheel_waves} wave(s) ==")
+        uid0 = 10_000
+        for w in range(args.flywheel_waves):
+            fly.tick()   # trigger -> harvest -> fine-tune -> canary
+            if fly.history:
+                break
+            futs = [service.submit(TopoRequest(uid=uid0 + i, problem=p,
+                                               n_iter=args.iters))
+                    for i, p in enumerate(probs)]
+            uid0 += len(futs)
+            harvest(futs)
+        fly.stop()
+        for ev in service.events:
+            if ev.kind.startswith("flywheel") or ev.kind in (
+                    "canary-start", "promote", "rollback"):
+                mesh_s = (f"{ev.mesh[0]}x{ev.mesh[1]}" if ev.mesh
+                          else "-")
+                print(f"   {ev.kind:18s} {mesh_s:7s} "
+                      f"{ev.tag or '-':24s} {ev.reason}")
+        for cyc in fly.history:
+            d = cyc.describe()
+            print(f"== flywheel[{d['mesh']}] {d['state'].upper()}: "
+                  f"{d['base_tag']!r} -> {d['child_tag']!r} "
+                  f"({d['n_cases']} harvested case(s))"
+                  + (f"; {d['error']}" if d["error"] else "") + " ==")
+            if cyc.child_tag and cyc.child_tag in registry.tags():
+                rec = registry.get(cyc.child_tag)
+                print(f"   lineage: v{rec.version} {rec.tag!r} "
+                      f"parent={rec.parent!r} mesh={rec.mesh} "
+                      f"held-out acceptance "
+                      f"{rec.metrics.get('acceptance', float('nan')):.0%}")
+        if not fly.history:
+            live = fly.cycles()
+            print("== flywheel: no cycle reached a terminal state ("
+                  + (f"live: {live}" if live else
+                     "buckets healthy or not enough traffic") + ") ==")
+        if retention is not None and retention.dropped:
+            print(f"== retention: swept {retention.dropped} ==")
     service.shutdown()
 
 

@@ -19,6 +19,11 @@ data layer:
   * ``build_dataset`` — windows the trajectories into one stacked
     multi-trajectory ``TrajectoryDataset`` with per-window ``load_vol``
     conditioning and a single shared ``u_scale``.
+  * ``harvest_dataset`` / ``concat_datasets`` — the serving-data
+    flywheel's data layer: deduplicated fell-back-to-FEA load cases
+    from a gateway harvest log regenerated as trajectories on the
+    bucket's mesh, and the harvested + replayed-synthetic
+    anti-forgetting mix the fine-tune trains on.
 
 The single-trajectory MBB path (``train_cronet.build_dataset``) remains
 as a thin compatibility wrapper over ``run_simp`` so cached artifacts
@@ -76,6 +81,38 @@ class LoadCase:
         return cls(load_frac=float(d["load_frac"]),
                    load=tuple(d["load"]), volfrac=float(d["volfrac"]),
                    kind=d.get("kind", "point"))
+
+    @classmethod
+    def from_problem(cls, prob: fea2d.Problem,
+                     kind: str = "harvest") -> "LoadCase":
+        """Reconstruct the load case a point-load problem was built
+        from — the serving-traffic harvester's inverse of
+        ``problem()``: a completed ``TopoRequest`` carries only its
+        ``fea2d.Problem``, and the flywheel needs the declarative case
+        back to regenerate a training trajectory for it.
+
+        The dominant loaded node is recovered from the load vector
+        (node id ``x * (nely + 1) + y``, 2 dofs per node — the 88-line
+        layout ``point_load_problem`` uses). Loads the boundary
+        conditions zeroed (an x-load on the fixed left edge) come back
+        as the FREE component only, which is exactly the load the
+        trajectory would feel anyway."""
+        f = np.asarray(prob.f)
+        pairs = f.reshape(-1, 2)                      # (n_nodes, 2)
+        node = int(np.argmax(np.abs(pairs).sum(axis=1)))
+        xn = node // (prob.nely + 1)
+        return cls(load_frac=xn / max(prob.nelx, 1),
+                   load=(float(pairs[node, 0]), float(pairs[node, 1])),
+                   volfrac=float(prob.volfrac), kind=kind)
+
+    def key(self, ndigits: int = 4) -> Tuple:
+        """Dedup key: two requests with the same (rounded) load
+        configuration regenerate the same trajectory, so the harvester
+        keeps only one."""
+        return (round(self.load_frac, ndigits),
+                round(self.load[0], ndigits),
+                round(self.load[1], ndigits),
+                round(self.volfrac, ndigits))
 
 
 MBB_CASE = LoadCase(load_frac=0.0, load=(0.0, -1.0), kind="mbb")
@@ -236,6 +273,75 @@ def build_dataset(cfg: CRONetConfig,
         cases=cases,
         ref=hists[0],
     )
+
+
+def concat_datasets(a: TrajectoryDataset,
+                    b: TrajectoryDataset) -> TrajectoryDataset:
+    """Stack two trajectory datasets (same mesh and hist_len) into one,
+    renormalizing to a single shared ``u_scale`` — the anti-forgetting
+    mix the flywheel fine-tune trains on (harvested serving trajectories
+    + replayed synthetic ones). ``b``'s trajectory ids are shifted past
+    ``a``'s, so ``split_by_trajectory`` and per-case eval keep working
+    on the combined set; ``ref`` stays ``a``'s."""
+    if a.windows.shape[1:] != b.windows.shape[1:]:
+        raise ValueError(
+            f"cannot concat datasets of different window shapes "
+            f"{a.windows.shape[1:]} vs {b.windows.shape[1:]} "
+            f"(mesh/hist_len must match)")
+    u_scale = max(a.u_scale, b.u_scale)
+    # targets are stored pre-divided by their own u_scale: rescale both
+    # onto the shared one so the physical displacements stay identical
+    targets = np.concatenate([a.targets * (a.u_scale / u_scale),
+                              b.targets * (b.u_scale / u_scale)])
+    return TrajectoryDataset(
+        load_vol=np.concatenate([a.load_vol, b.load_vol]),
+        windows=np.concatenate([a.windows, b.windows]),
+        targets=targets.astype(np.float32),
+        u_scale=u_scale,
+        traj_id=np.concatenate([a.traj_id,
+                                b.traj_id + a.n_trajectories]),
+        cases=a.cases + b.cases,
+        ref=a.ref)
+
+
+def harvest_dataset(gateway_log, mesh: Tuple[int, int], *,
+                    cfg: CRONetConfig, n_iter: int = 40, rmin: float = 1.5,
+                    max_cases: int = 16, batch: int = 8
+                    ) -> Optional[TrajectoryDataset]:
+    """Convert a bucket's harvested fallback traffic into a training
+    dataset: the rejected (fell-back-to-FEA) requests' load cases are
+    pulled from ``gateway_log``, deduplicated, and regenerated as
+    pure-FEA SIMP trajectories on the bucket's mesh through
+    ``run_simp_b`` — the DAgger-style move that puts the load
+    configurations serving actually failed on into the fine-tune
+    distribution (FE-CNN per-discretization fine-tuning, arXiv
+    2106.13652).
+
+    ``gateway_log`` is duck-typed: anything with
+    ``rejected_cases(mesh)`` (``serve.flywheel.HarvestLog``) or a plain
+    sequence of ``LoadCase``s / ``describe()`` dicts. Returns ``None``
+    when the log holds no cases for the mesh — the flywheel trigger
+    treats that as "nothing to learn from yet"."""
+    raw = (gateway_log.rejected_cases(mesh)
+           if hasattr(gateway_log, "rejected_cases") else gateway_log)
+    seen, cases = set(), []
+    for c in raw:
+        case = c if isinstance(c, LoadCase) else LoadCase.from_dict(c)
+        k = case.key()
+        if k in seen:
+            continue
+        seen.add(k)
+        cases.append(case)
+    if not cases:
+        return None
+    # newest-first truncation: under the per-bucket spool bound the
+    # most recent traffic is the distribution serving is failing on NOW
+    if len(cases) > max_cases:
+        cases = cases[-max_cases:]
+    nelx, nely = int(mesh[0]), int(mesh[1])
+    cfg = dataclasses.replace(cfg, nelx=nelx, nely=nely)
+    return build_dataset(cfg, cases=cases, n_iter=n_iter, rmin=rmin,
+                         batch=batch)
 
 
 def split_by_trajectory(ds: TrajectoryDataset, heldout_frac: float = 0.25,

@@ -151,7 +151,8 @@ def train(cfg: CRONetConfig, steps: int = 400, batch: int = 16,
           seed: int = 0, lr: float = 2e-3, data=None, log_every: int = 100,
           verbose: bool = True, noise: float = 0.01,
           heldout_frac: float = 0.25, error_threshold: float = 0.05,
-          ckpt_dir: Optional[str] = None) -> TrainResult:
+          ckpt_dir: Optional[str] = None,
+          init_params: Optional[Dict] = None) -> TrainResult:
     """Train CRONet on the (multi-)trajectory dataset.
 
     Minibatches mix windows from every TRAINING trajectory; a
@@ -159,7 +160,10 @@ def train(cfg: CRONetConfig, steps: int = 400, batch: int = 16,
     window) is excluded from training and scored afterwards with
     ``evaluate`` — the generalization signal the model registry records
     for every checkpoint. With ``ckpt_dir`` the run persists its final
-    params + metrics through ``checkpoint/manager.py``.
+    params + metrics through ``checkpoint/manager.py``. With
+    ``init_params`` the run WARM-STARTS from an existing fp32 parameter
+    tree instead of a fresh ``materialize`` — the fine-tune path
+    (``finetune_from_tag``); ``steps=0`` then just evaluates it.
 
     Returns a ``TrainResult`` (unpacks as the legacy
     ``(params, u_scale, losses, ref)``).
@@ -172,8 +176,12 @@ def train(cfg: CRONetConfig, steps: int = 400, batch: int = 16,
     train_rows = np.concatenate([data.rows_of(int(t)) for t in train_traj])
     n = len(train_rows)
 
-    specs = cronet.param_specs(dataclasses.replace(cfg, dtype="float32"))
-    params = materialize(specs, jax.random.key(seed))
+    if init_params is not None:
+        params = init_params
+    else:
+        specs = cronet.param_specs(dataclasses.replace(cfg,
+                                                       dtype="float32"))
+        params = materialize(specs, jax.random.key(seed))
     ocfg = adamw.AdamWConfig(lr=lr, warmup_steps=20, total_steps=steps,
                              weight_decay=0.0, master_fp32=False)
     opt = adamw.init_state(ocfg, params)
@@ -243,6 +251,80 @@ def train_and_register(cfg: CRONetConfig, registry, *, tag: Optional[str]
     result = train(cfg, **train_kw)
     record = registry.register(
         result.params, cfg, result.u_scale, tag=tag, pin=pin,
+        metrics=result.eval_metrics,
+        load_cases=[c.describe() for c in result.cases])
+    return record, result
+
+
+def finetune_from_tag(reg, base_tag: str, mesh, harvested, *,
+                      steps: int = 300, lr: float = 5e-4,
+                      replay_cases: int = 4,
+                      replay_n_iter: Optional[int] = None,
+                      tag: Optional[str] = None, pin: bool = False,
+                      seed: int = 0, heldout_frac: float = 0.25,
+                      error_threshold: float = 0.05,
+                      verbose: bool = False, **train_kw):
+    """Fine-tune a bucket specialist from its serving checkpoint — the
+    flywheel's training layer.
+
+    Warm-starts from ``base_tag``'s fp32 master weights (never a fresh
+    init: the point is to move an already-good fleet model toward the
+    bucket's observed traffic, cf. FE-CNN per-discretization
+    fine-tuning) and trains on ``harvested`` — the bucket's
+    fell-back-to-FEA load cases regenerated as trajectories
+    (``fea.dataset.harvest_dataset``) — MIXED with up to
+    ``replay_cases`` trajectories replayed from the base checkpoint's
+    own training distribution. The replay half is the anti-forgetting
+    guard: fine-tuning on failures alone would trade the fleet
+    distribution away for the bucket's tail.
+
+    The child is registered MESH-SPECIALIZED for ``mesh`` with lineage
+    metadata (``parent=base_tag``), so ``ModelResolver`` prefers it for
+    its bucket only and the retention sweep can group it under its
+    lineage. ``tag`` defaults to ``"<base>-ft<nelx>x<nely>"`` with a
+    numeric suffix when taken. Returns ``(record, result)``.
+    """
+    nelx, nely = int(mesh[0]), int(mesh[1])
+    base_params, base_rec = reg.load(base_tag)
+    cfg = dataclasses.replace(base_rec.cfg, nelx=nelx, nely=nely)
+    if harvested is None or harvested.n_windows == 0:
+        raise ValueError(
+            f"finetune_from_tag needs a non-empty harvested dataset for "
+            f"{nelx}x{nely} (harvest_dataset returned "
+            f"{'None' if harvested is None else 'no windows'})")
+
+    data = harvested
+    if replay_cases > 0 and base_rec.load_cases:
+        replay = [ds_mod.LoadCase.from_dict(d)
+                  for d in base_rec.load_cases[:replay_cases]]
+        if replay_n_iter is None:
+            # match the harvested trajectories' length so neither side
+            # of the mix dominates by window count alone
+            per_traj = len(harvested.rows_of(0))
+            replay_n_iter = per_traj + cfg.hist_len
+        replay_ds = ds_mod.build_dataset(cfg, cases=replay,
+                                         n_iter=replay_n_iter)
+        data = ds_mod.concat_datasets(harvested, replay_ds)
+
+    result = train(cfg, steps=steps, lr=lr, seed=seed, data=data,
+                   heldout_frac=heldout_frac,
+                   error_threshold=error_threshold, verbose=verbose,
+                   init_params=base_params, **train_kw)
+    result.eval_metrics["finetuned_from"] = base_tag
+    result.eval_metrics["harvested_trajectories"] = int(
+        harvested.n_trajectories)
+
+    if tag is None:
+        base = f"{base_tag}-ft{nelx}x{nely}"
+        taken = set(reg.tags())
+        tag = base
+        k = 2
+        while tag in taken:
+            tag = f"{base}.{k}"
+            k += 1
+    record = reg.register(
+        result.params, cfg, result.u_scale, tag=tag, pin=pin,
+        mesh=(nelx, nely), parent=base_tag,
         metrics=result.eval_metrics,
         load_cases=[c.describe() for c in result.cases])
     return record, result

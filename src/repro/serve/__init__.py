@@ -31,6 +31,12 @@ Public API (everything else in this package is implementation detail):
     swaps, and pool elasticity (``idle_evict_s`` cold-bucket eviction
     with lazy bitwise-equal rebuild, ``autoscale`` slot widths from
     observed arrival rates, and elastic width ladders — see below).
+  * Serving-data flywheel (flywheel.py) — ``HarvestLog`` (the
+    gateway's completion-path sink for fell-back-to-FEA traffic),
+    ``FlywheelController`` + ``FlywheelState`` (the unattended
+    harvest -> fine-tune -> canary -> promote state machine), and
+    ``RegistryRetention`` (scheduled ``registry.sweep()`` keep-policy)
+    — see the flywheel quickstart below.
 
 Quickstart (mixed-mesh serving)::
 
@@ -104,9 +110,45 @@ reference plus fewer per-iteration reductions — modestly faster, and
 bitwise-equal by construction (``benchmarks/topo_serving.py --device``
 measures both).
 
+Serving-data flywheel (train -> serve -> harvest -> fine-tune ->
+promote, unattended)::
+
+    from repro.fea import train_cronet
+    from repro.serve import (FlywheelController, HarvestLog,
+                             ModelRegistry, RegistryRetention,
+                             TopoGateway)
+
+    reg = ModelRegistry("runs/registry")
+    train_cronet.train_and_register(cfg, reg, tag="prod", steps=2000)
+
+    log = HarvestLog(capacity=64, accept_below=0.8,
+                     spool_dir="runs/harvest")       # bounded spooling
+    gw = TopoGateway.from_registry(reg, "prod", harvest=log,
+                                   canary_window=64, bucket_window=256)
+    fly = FlywheelController(
+        gw, log,
+        trigger_below=0.5,        # bucket acceptance that starts a cycle
+        retention=RegistryRetention(reg, keep_per_lineage=2))
+    fly.start()                   # daemon; or drive fly.tick() yourself
+
+    # ... serve traffic; a bucket losing to the residual gate now
+    # harvests its failures, fine-tunes a mesh-specialized child from
+    # its serving checkpoint (finetune_from_tag: warm start + replayed
+    # synthetic mix), canaries it on its own bucket, and promotes on a
+    # sustained windowed win — auto-rollback guards the downside.
+    for ev in gw.events:          # the whole story, typed
+        print(ev.kind, ev.mesh, ev.tag, ev.reason)
+    fly.stop(); gw.shutdown()
+
+``examples/serve_topo.py --flywheel`` runs this loop end to end;
+``benchmarks/topo_serving.py --flywheel --smoke`` is the CI gate.
+
 The LM-decode serving half (``server``, ``decode``) is deliberately NOT
 re-exported here: import those modules directly.
 """
+from repro.serve.flywheel import (FlywheelController, FlywheelCycle,
+                                  FlywheelState, HarvestLog,
+                                  RegistryRetention)
 from repro.serve.gateway import TopoGateway
 from repro.serve.registry import (ModelRecord, ModelRegistry,
                                   ModelResolver, NoModelError)
@@ -133,5 +175,10 @@ __all__ = [
     "EngineClosed",
     "FleetEvent",
     "TagStats",
+    "HarvestLog",
+    "FlywheelController",
+    "FlywheelCycle",
+    "FlywheelState",
+    "RegistryRetention",
     "pool_stats",
 ]

@@ -137,17 +137,20 @@ class _Canary:
         window), or None. Requires ``min_requests`` completions on BOTH
         sides — a verdict needs evidence, not noise."""
         c, p = self.canary_stats, self.primary_stats
-        if (c.completed < self.min_requests
-                or p.completed < self.min_requests):
+        if (c.recent_completed < self.min_requests
+                or p.recent_completed < self.min_requests):
             return None
-        if c.cronet_hit_rate < p.cronet_hit_rate - self.margin:
+        if c.recent_cronet_hit_rate < p.recent_cronet_hit_rate - self.margin:
             return (f"CRONet hit rate regressed: canary "
-                    f"{c.cronet_hit_rate:.1%} < primary "
-                    f"{p.cronet_hit_rate:.1%} - margin {self.margin:g}")
-        if c.deadline_hit_rate < p.deadline_hit_rate - self.margin:
+                    f"{c.recent_cronet_hit_rate:.1%} < primary "
+                    f"{p.recent_cronet_hit_rate:.1%} - margin "
+                    f"{self.margin:g}")
+        if (c.recent_deadline_hit_rate
+                < p.recent_deadline_hit_rate - self.margin):
             return (f"deadline hit rate regressed: canary "
-                    f"{c.deadline_hit_rate:.1%} < primary "
-                    f"{p.deadline_hit_rate:.1%} - margin {self.margin:g}")
+                    f"{c.recent_deadline_hit_rate:.1%} < primary "
+                    f"{p.recent_deadline_hit_rate:.1%} - margin "
+                    f"{self.margin:g}")
         return None
 
     def describe(self) -> Dict:
@@ -227,6 +230,20 @@ class TopoGateway:
     canary_slots : slot width for canary engines (default
         ``min_slots`` — a canary serves a fraction of the bucket's
         traffic and shares its depth budget, so it starts narrow).
+    harvest : optional serving-data sink (any object with a cheap
+        ``record(req)`` — canonically ``serve.flywheel.HarvestLog``).
+        Every successfully completed request is offered to it on the
+        completion path, so fell-back-to-FEA traffic can be harvested
+        into fine-tuning data; a raising sink is recorded as a
+        ``harvest-error`` FleetEvent, never propagated.
+    canary_window : completion window for canary/primary ``TagStats``
+        (``None`` = lifetime aggregates, the pre-flywheel behaviour).
+        Auto-rollback and promotion verdicts then compare RECENT
+        traffic, so an early bad patch cannot permanently condemn a
+        canary that has since warmed up — and vice versa.
+    bucket_window : completion window for the per-bucket acceptance
+        stats behind ``bucket_stats()`` (the flywheel's trigger
+        signal).
     """
 
     RETIRED_LIMIT = 4096       # completed requests kept from dead engines
@@ -248,6 +265,9 @@ class TopoGateway:
                  canary_slots: Optional[int] = None,
                  ladder: Optional[Tuple[int, ...]] = None,
                  shape_classes: Optional[List] = None,
+                 harvest=None,
+                 canary_window: Optional[int] = 64,
+                 bucket_window: Optional[int] = 256,
                  **engine_kwargs):
         self.registry = registry
         self.model_tag = model_tag
@@ -329,6 +349,10 @@ class TopoGateway:
         self._rollbacks = 0
         self._promotions = 0
         self._lease_counts: Dict[str, int] = {}
+        self.harvest = harvest
+        self.canary_window = canary_window
+        self.bucket_window = bucket_window
+        self._bucket_stats: Dict[Mesh, TagStats] = {}
         self.events: collections.deque = collections.deque(
             maxlen=self.EVENT_LIMIT)
         self._lease(self.model_tag)
@@ -805,7 +829,9 @@ class TopoGateway:
                 self._canaries[m] = _Canary(
                     mesh=m, tag=new_tag, params=params, u_scale=u_scale,
                     fraction=fraction, min_requests=min_requests,
-                    margin=margin, auto_rollback=auto_rollback)
+                    margin=margin, auto_rollback=auto_rollback,
+                    canary_stats=TagStats(window=self.canary_window),
+                    primary_stats=TagStats(window=self.canary_window))
                 self._record_event("canary-start", m, new_tag,
                                    details={"fraction": fraction,
                                             "margin": margin})
@@ -994,6 +1020,42 @@ class TopoGateway:
                 return ctrl.describe()
             return {_mesh_str(m): c.describe()
                     for m, c in self._canaries.items()}
+
+    def serving_tag(self, mesh) -> Optional[str]:
+        """The registry tag currently serving a bucket: its pinned
+        per-bucket tag when one was swapped/promoted in, the fleet
+        default otherwise (may be None on an explicit-params gateway).
+        This is the flywheel's warm-start parent."""
+        mesh = self._mesh_arg(mesh)
+        with self._queue.cond:
+            if mesh in self._bucket_tags:
+                return self._bucket_tags[mesh]
+        return self.model_tag
+
+    def bucket_stats(self, mesh=None):
+        """Windowed per-bucket serving stats (``TagStats.snapshot()``
+        per mesh over the last ``bucket_window`` completions). With
+        ``mesh=`` returns that one bucket's snapshot (or None before
+        its first completion); otherwise a ``{"AxB": snapshot}`` dict.
+        This is the flywheel trigger signal: ``recent_cronet_hit_rate``
+        below threshold on a bucket means its serving model is losing
+        to the residual gate on live traffic."""
+        with self._queue.cond:
+            if mesh is not None:
+                st = self._bucket_stats.get(self._mesh_arg(mesh))
+                return None if st is None else st.snapshot()
+            return {_mesh_str(m): s.snapshot()
+                    for m, s in self._bucket_stats.items()}
+
+    def record_event(self, kind: str, mesh=None, tag: Optional[str] = None,
+                     reason: str = "", details: Optional[Dict] = None):
+        """Public FleetEvent append — the flywheel controller narrates
+        its state machine (``flywheel-*`` kinds) into the same ring the
+        gateway's own swap/canary/rollback events land in, so one
+        ``gateway.events`` read tells the whole fleet story."""
+        self._record_event(kind, self._mesh_arg(mesh)
+                           if mesh is not None else None,
+                           tag, reason, details)
 
     # --------------------------------------------------------- elasticity
 
@@ -1212,6 +1274,27 @@ class TopoGateway:
             try:
                 mesh = req.mesh
                 self._last_seen[mesh] = time.monotonic()
+                if req.done and fut.exception() is None:
+                    # per-bucket windowed acceptance — the flywheel's
+                    # trigger signal (bucket_stats()); recorded for
+                    # every successful completion, canaried or not
+                    bs = self._bucket_stats.get(mesh)
+                    if bs is None:
+                        bs = self._bucket_stats[mesh] = TagStats(
+                            window=self.bucket_window)
+                    bs.record(req)
+                    if self.harvest is not None:
+                        # the harvest sink contract is a cheap in-memory
+                        # record() (spooling happens on the harvester's
+                        # own flush) — but it is foreign code on the
+                        # completion path, so failures become events,
+                        # not dropped completions
+                        try:
+                            self.harvest.record(req)
+                        except Exception as exc:
+                            self._record_event(
+                                "harvest-error", mesh, req.routed_tag,
+                                reason=f"uid {req.uid}: {exc!r}")
                 ctrl = self._canaries.get(mesh)
                 if (ctrl is not None and ctrl.active and req.done
                         and fut.exception() is None):

@@ -29,6 +29,18 @@ Fleet operations (the per-bucket model lifecycle) add three notions:
     canary graduates to a bucket's serving model, so the index records
     which versions ever carried production traffic.
 
+The serving-data flywheel (serve/flywheel.py) adds two more:
+
+  * LINEAGE — ``register(..., parent=tag)`` records which version a
+    fine-tuned child warm-started from; the retention ``sweep`` groups
+    versions by ``(mesh, lineage root)`` and keeps the newest K per
+    group (pinned + leased always kept), bounding the registry as the
+    flywheel churns out per-bucket children.
+  * GENERATION — a monotonic index-mutation counter; ``ModelResolver``
+    invalidates its per-tag param cache when it moves, so a tag that
+    was pruned and re-registered never serves stale weights out of an
+    LRU hit.
+
 Layout::
 
     <root>/registry.json          index: versions + metadata (atomic)
@@ -89,6 +101,8 @@ class ModelRecord:
     mesh: Optional[Mesh] = None     # (nelx, nely) this version is
     #                                 specialized for; None = fleet-wide
     promoted_at: Optional[str] = None   # set when a canary graduates
+    parent: Optional[str] = None    # lineage: the tag this version was
+    #                                 fine-tuned from (flywheel children)
 
     def describe(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -109,6 +123,7 @@ class ModelRegistry:
         self.ckpt_dir = os.path.join(root, "ckpts")
         self._lock = threading.RLock()
         self._leases: Dict[str, int] = {}   # tag -> live refcount
+        self._generation = 0                # bumped on every index write
 
     # ------------------------------------------------------------- index
 
@@ -125,6 +140,22 @@ class ModelRegistry:
         with open(tmp, "w") as f:
             json.dump(index, f, indent=1)
         os.replace(tmp, os.path.join(self.root, self.INDEX))
+        with self._lock:
+            # every mutation funnels through here, so the generation
+            # counter is a complete change signal for param caches
+            # (ModelResolver invalidates on a generation mismatch —
+            # a pruned-then-re-registered tag must never serve stale
+            # params out of an LRU hit)
+            self._generation += 1
+
+    @property
+    def generation(self) -> int:
+        """Monotonic index-mutation counter (this process). Caches keyed
+        by tag (``ModelResolver``) compare it to detect that a tag may
+        have been re-registered, pruned, or had metadata re-stamped
+        since their entries were filled."""
+        with self._lock:
+            return self._generation
 
     @staticmethod
     def _record(entry: Dict) -> ModelRecord:
@@ -138,7 +169,8 @@ class ModelRegistry:
             created_at=entry.get("created_at", ""),
             pinned=bool(entry.get("pinned", False)),
             mesh=tuple(int(v) for v in mesh) if mesh else None,
-            promoted_at=entry.get("promoted_at"))
+            promoted_at=entry.get("promoted_at"),
+            parent=entry.get("parent"))
 
     # ------------------------------------------------------------ queries
 
@@ -189,14 +221,18 @@ class ModelRegistry:
                  tag: Optional[str] = None, metrics: Optional[Dict] = None,
                  load_cases: Optional[Sequence[Dict]] = None,
                  pin: bool = False,
-                 mesh: Optional[Mesh] = None) -> ModelRecord:
+                 mesh: Optional[Mesh] = None,
+                 parent: Optional[str] = None) -> ModelRecord:
         """Persist ``params`` as a new immutable version (checkpoint
         write first, index update second — a crash in between leaves an
         orphan checkpoint, never a dangling index entry). ``mesh``
         marks the version as specialized for one ``(nelx, nely)``
         discretization: it is resolved only for that mesh's bucket
         (``latest(mesh=...)`` / ``ModelResolver``) and never becomes
-        the fleet default."""
+        the fleet default. ``parent`` records lineage — the tag this
+        version was fine-tuned from (``train_cronet.finetune_from_tag``
+        stamps it) — which the retention ``sweep`` keep-policy groups
+        on."""
         with self._lock:
             index = self._read_index()
             version = 1 + max((int(e["version"])
@@ -217,7 +253,8 @@ class ModelRegistry:
                          datetime.timezone.utc).isoformat(),
                      "pinned": bool(pin),
                      "mesh": ([int(mesh[0]), int(mesh[1])]
-                              if mesh is not None else None)}
+                              if mesh is not None else None),
+                     "parent": parent}
             index["versions"].append(entry)
             self._write_index(index)
             return self._record(entry)
@@ -296,6 +333,61 @@ class ModelRegistry:
             self._write_index(index)
             return dropped
 
+    def _lineage_root(self, entries: List[Dict], tag: str) -> str:
+        """Follow the ``parent`` chain to the oldest ancestor still in
+        the index (cycle-safe: stops on a repeat or a pruned parent)."""
+        by_tag = {e["tag"]: e for e in entries}
+        seen = set()
+        while tag in by_tag and tag not in seen:
+            seen.add(tag)
+            parent = by_tag[tag].get("parent")
+            if not parent or parent not in by_tag:
+                break
+            tag = parent
+        return tag
+
+    def sweep(self, keep_per_lineage: int = 2) -> List[str]:
+        """Retention keep-policy sweep: within each ``(mesh, lineage
+        root)`` group, drop all but the newest ``keep_per_lineage``
+        versions. Pinned and LEASED (serving/canarying) versions are
+        always kept, exactly as in ``prune`` — so a flywheel churning
+        out fine-tuned children per bucket keeps each bucket's recent
+        history without growing the registry unboundedly, while the
+        fleet-wide lineage (mesh=None) is retained independently.
+        Returns the dropped tags."""
+        with self._lock:
+            index = self._read_index()
+            entries = index["versions"]
+            if not entries:
+                return []
+            groups: Dict[Tuple, List[Dict]] = {}
+            for e in entries:
+                mesh = tuple(e["mesh"]) if e.get("mesh") else None
+                key = (mesh, self._lineage_root(entries, e["tag"]))
+                groups.setdefault(key, []).append(e)
+            keep_versions = set()
+            for e in entries:
+                if e.get("pinned") or self._leases.get(e["tag"]):
+                    keep_versions.add(int(e["version"]))
+            for members in groups.values():
+                # entries are index-ordered (oldest first): the newest K
+                # UNPINNED/UNLEASED members — pinned and serving copies
+                # don't consume retention slots, they ride on top
+                free = [e for e in members
+                        if int(e["version"]) not in keep_versions]
+                for e in free[-max(0, int(keep_per_lineage)):]:
+                    keep_versions.add(int(e["version"]))
+            # keep=0 + pinned=keep_versions: prune_old deletes exactly
+            # the complement of the keep set
+            removed = set(ckpt.prune_old(self.ckpt_dir, keep=0,
+                                         pinned=keep_versions))
+            dropped = [e["tag"] for e in entries
+                       if int(e["version"]) in removed]
+            index["versions"] = [e for e in entries
+                                 if int(e["version"]) not in removed]
+            self._write_index(index)
+            return dropped
+
     # -------------------------------------------------------------- load
 
     def load(self, tag: Optional[str] = None, dtype: str = "float32"
@@ -351,7 +443,19 @@ class ModelResolver:
         self.cache_size = max(1, cache_size)
         self._cache: "collections.OrderedDict[str, Tuple[object, ModelRecord]]" \
             = collections.OrderedDict()
+        self._cache_gen = registry.generation   # index state cached against
         self._lock = threading.Lock()
+
+    def _check_generation_locked(self):
+        """Generation-checked invalidation (call with ``_lock`` held):
+        the per-tag cache is only valid for the registry index it was
+        filled against. A tag that was pruned and re-registered reuses
+        its key with DIFFERENT params — without this check the LRU hit
+        would keep serving the deleted version's weights forever."""
+        gen = self.registry.generation
+        if gen != self._cache_gen:
+            self._cache.clear()
+            self._cache_gen = gen
 
     def resolve(self, mesh: Optional[Mesh]) -> ModelRecord:
         """Best record for the bucket (metadata only). Raises
@@ -381,18 +485,29 @@ class ModelResolver:
         loads its serving version at construction; resolving the same
         tag for a bucket must not re-read the checkpoint)."""
         with self._lock:
+            self._check_generation_locked()
             self._put(tag, params, record)
 
     def load(self, tag: str) -> Tuple[object, ModelRecord]:
-        """Materialize a tag's params (LRU-cached per tag — records are
-        immutable, so an entry never goes stale; eviction only means a
-        future load re-reads the checkpoint from disk)."""
+        """Materialize a tag's params (LRU-cached per tag; the cache is
+        invalidated wholesale whenever the registry index mutated since
+        it was filled — see ``_check_generation_locked`` — so a
+        re-registered or pruned tag never serves stale weights).
+        Eviction only means a future load re-reads the checkpoint from
+        disk."""
         with self._lock:
+            self._check_generation_locked()
             hit = self._cache.get(tag)
             if hit is not None:
                 self._cache.move_to_end(tag)
                 return hit
+            gen = self._cache_gen
         params, rec = self.registry.load(tag)
         with self._lock:
-            self._put(tag, params, rec)
+            self._check_generation_locked()
+            if self._cache_gen == gen:
+                # only cache a read that is provably from the index
+                # state the cache tracks — a concurrent register/prune
+                # during our disk read must not be masked by it
+                self._put(tag, params, rec)
         return params, rec

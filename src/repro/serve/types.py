@@ -26,6 +26,7 @@ all three and import nothing from them.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import enum
 import threading
@@ -232,15 +233,28 @@ class TagStats:
     ``cronet_hit_rate`` is iteration-weighted and ``deadline_hit_rate``
     covers deadline-carrying completions only (1.0 when there were
     none). Callers serialize access (the gateway records under its
-    queue lock)."""
+    queue lock).
 
-    def __init__(self):
+    With ``window=N`` the stats additionally keep the last N
+    completions in a deque, and the ``recent_*`` metrics cover that
+    window only — the time-decayed view auto-rollback and flywheel
+    promotion compare, so a long-lived canary (or a bucket whose
+    traffic drifted) is judged on CURRENT behaviour instead of lifetime
+    aggregates that an early phase dominates forever. Without a window
+    the ``recent_*`` metrics alias the lifetime ones."""
+
+    def __init__(self, window: Optional[int] = None):
         self.completed = 0
         self.cronet_iters = 0
         self.fea_iters = 0
         self.deadline_total = 0
         self.deadline_hits = 0
         self.latency_sum = 0.0
+        self.window = window
+        # (cronet_iters, fea_iters, had_deadline, deadline_met) per
+        # completion; bounded, so a windowed TagStats never grows
+        self._recent: Optional[collections.deque] = (
+            collections.deque(maxlen=int(window)) if window else None)
 
     def record(self, req: TopoRequest):
         self.completed += 1
@@ -250,6 +264,10 @@ class TagStats:
         if req.deadline is not None:
             self.deadline_total += 1
             self.deadline_hits += int(bool(req.deadline_met))
+        if self._recent is not None:
+            self._recent.append((req.cronet_iters, req.fea_iters,
+                                 req.deadline is not None,
+                                 bool(req.deadline_met)))
 
     @property
     def cronet_hit_rate(self) -> float:
@@ -261,6 +279,29 @@ class TagStats:
         return (self.deadline_hits / self.deadline_total
                 if self.deadline_total else 1.0)
 
+    # ---- windowed (recent-traffic) view; lifetime alias when unwindowed
+
+    @property
+    def recent_completed(self) -> int:
+        return (len(self._recent) if self._recent is not None
+                else self.completed)
+
+    @property
+    def recent_cronet_hit_rate(self) -> float:
+        if self._recent is None:
+            return self.cronet_hit_rate
+        cro = sum(r[0] for r in self._recent)
+        fea = sum(r[1] for r in self._recent)
+        return cro / max(cro + fea, 1)
+
+    @property
+    def recent_deadline_hit_rate(self) -> float:
+        if self._recent is None:
+            return self.deadline_hit_rate
+        total = sum(1 for r in self._recent if r[2])
+        hits = sum(1 for r in self._recent if r[2] and r[3])
+        return hits / total if total else 1.0
+
     def snapshot(self) -> Dict[str, float]:
         return {
             "completed": float(self.completed),
@@ -268,6 +309,9 @@ class TagStats:
             "deadline_hit_rate": self.deadline_hit_rate,
             "mean_latency_s": (self.latency_sum / self.completed
                                if self.completed else 0.0),
+            "recent_completed": float(self.recent_completed),
+            "recent_cronet_hit_rate": self.recent_cronet_hit_rate,
+            "recent_deadline_hit_rate": self.recent_deadline_hit_rate,
         }
 
 
@@ -278,7 +322,10 @@ class FleetEvent:
     ``evict`` / ``rebuild`` / ``swap`` / ``resize`` (a live ladder-rung
     target change) / ``callback-error`` (a user done-callback raised;
     recorded instead of silently swallowed so a broken callback cannot
-    invisibly stall canary stat accumulation). ``details`` carries the
+    invisibly stall canary stat accumulation) / the flywheel
+    controller's ``flywheel-*`` transitions (trigger / harvest / train /
+    canary / promote / rollback / error — serve/flywheel.py records one
+    per state-machine edge). ``details`` carries the
     kind-specific payload (e.g. the per-tag stats snapshots a rollback
     decision was based on). ``t`` is a user-facing wall-clock stamp
     (time.time()) — the one place wall-clock is kept on purpose."""

@@ -249,6 +249,33 @@ def test_registry_promote_stamps_promotion_metadata(tmp_path,
         reg.promote("ghost")
 
 
+def test_resolver_cache_invalidated_on_reregister(tmp_path, tiny_params):
+    """Regression: the resolver's per-tag param cache used to survive a
+    prune + re-register of the same tag, silently serving the DELETED
+    version's params. Every index write bumps the registry generation;
+    a stale-generation cache is dropped before any hit."""
+    import jax
+
+    from repro.serve import ModelResolver
+
+    cfg = _tiny_cfg()
+    reg = ModelRegistry(str(tmp_path))
+    reg.register(tiny_params, cfg, 1.0, tag="a")
+    res = ModelResolver(reg)
+    p1, rec1 = res.load("a")
+    assert rec1.u_scale == 1.0
+    assert reg.prune(keep=0) == ["a"]
+    params2 = jax.tree.map(lambda x: x + 1.0, tiny_params)
+    reg.register(params2, cfg, 2.0, tag="a")       # same tag, new params
+    p2, rec2 = res.load("a")
+    assert rec2.u_scale == 2.0
+    for x, y in zip(jax.tree.leaves(params2), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # untouched registry: the cache still serves hits (no thrash)
+    assert res.load("a")[1].u_scale == 2.0
+    assert res.load("a")[1] is rec2
+
+
 # --------------------------------------- the trained-surrogate fixture
 
 
