@@ -89,6 +89,19 @@ asserts the ladder's p99 end-to-end latency beats it.
 
     PYTHONPATH=src python -m benchmarks.topo_serving --ladder --smoke
 
+Observe mode (--observe) gates the observability layer (repro.obs):
+a ``trace_every=1`` gateway run must yield, for every request, a
+complete span timeline whose phase durations sum to within 1% of its
+measured end-to-end latency, with densities BITWISE-equal to an
+untraced run (tracing records host-side stamps only — it never touches
+device math), and the metrics registry must round-trip through the
+bounded JSONL telemetry spool (torn trailing lines tolerated) and the
+Prometheus text file. ``--observe --smoke`` gates every push;
+``--observe --check`` (nightly) additionally asserts tracing adds < 5%
+to warm per-iteration tick latency at full slot width.
+
+    PYTHONPATH=src python -m benchmarks.topo_serving --observe --smoke
+
 Smoke mode (--smoke) is the push-gate CI entry: a tiny-mesh gateway run
 (two meshes, a handful of requests, deterministic shed/reject checks)
 plus the training-lifecycle smoke (multi-case dataset -> a few train
@@ -1532,6 +1545,147 @@ def smoke():
     train_smoke()
 
 
+def bench_observe(size: str = "small", smoke: bool = False,
+                  check: bool = False):
+    """Observability leg (--observe): the zero-dependency tracing +
+    metrics layer (repro.obs) must be bitwise-invisible and cheap.
+
+    Always asserted (push budget with --smoke):
+      * a gateway run with ``trace_every=1`` yields, for EVERY request,
+        a complete span timeline (queued -> compute [-> parked ...])
+        whose phase durations sum to within 1% of the request's
+        measured end-to-end latency — the spans tile submit -> done by
+        construction, so this is an exact-boundary check, not a
+        statistical one;
+      * the traced run's densities are BITWISE-equal to an untraced run
+        of the same problems on the same engines (observability records
+        host-side stamps only; it never touches device math);
+      * the serving metrics round-trip through the bounded JSONL
+        telemetry spool — including a deliberately torn trailing line
+        (simulated crash mid-write) — and the Prometheus text file
+        carries the serving instruments.
+
+    With --check (nightly budget): tracing every request adds < 5% to
+    warm per-iteration tick latency at full slot width (min-of-3 on
+    each side to suppress scheduler noise).
+    """
+    import tempfile
+
+    from repro.fea import fea2d
+    from repro.obs import (MetricsRegistry, TelemetrySnapshotter,
+                           read_snapshots, set_default_registry)
+    from repro.serve import TopoGateway, TopoRequest
+
+    # isolate this run's counters from anything the process recorded
+    # before (engine/scheduler instruments bind at construction time)
+    reg = MetricsRegistry()
+    prev = set_default_registry(reg)
+    try:
+        cfg, params = _setup(size, hist_len=3)
+        meshes = [(12, 4), (10, 6)]
+        probs = {m: [fea2d.point_load_problem(
+            m[0], m[1], load_node=(i % (m[0] - 1), 0),
+            load=(0.0, -1.0 - 0.1 * i)) for i in range(4)]
+            for m in meshes}
+        engines, factory = _engine_pool(cfg, params, 50.0, slots=2)
+
+        def serve(trace_every, base_uid):
+            gw = TopoGateway(cfg, params, 50.0, slots=2, max_pending=16,
+                             engine_factory=factory,
+                             trace_every=trace_every)
+            futs = [gw.submit(
+                TopoRequest(uid=base_uid + i,
+                            problem=probs[meshes[i % 2]][i % 4],
+                            n_iter=6), deadline_s=600.0)
+                for i in range(6)]
+            done = [f.result(timeout=600) for f in futs]
+            traces = [gw.trace(r.uid) for r in done]
+            gw.shutdown(wait=False)
+            return done, traces
+
+        done_plain, traces_plain = serve(0, 0)        # also warms XLA
+        done_traced, traces_traced = serve(1, 100)
+
+        # 1. tracing is bitwise-invisible to the served result
+        assert all(t is None for t in traces_plain), \
+            "trace_every=0 gateway attached traces"
+        assert all(np.array_equal(a.density, b.density)
+                   for a, b in zip(done_plain, done_traced)), \
+            "tracing changed the served densities"
+
+        # 2. complete timelines whose phases tile end-to-end latency
+        for r, tr in zip(done_traced, traces_traced):
+            assert tr is not None and tr.complete, \
+                f"request {r.uid}: missing or unfinished trace"
+            phases = tr.phase_durations()
+            assert "queued" in phases and "compute" in phases, phases
+            e2e = tr.end_to_end_s()
+            gap = abs(sum(phases.values()) - e2e)
+            assert gap <= max(0.01 * e2e, 1e-6), \
+                (f"request {r.uid}: spans sum {sum(phases.values()):.6f}s "
+                 f"vs e2e {e2e:.6f}s")
+            assert len(tr.ticks) > 0, \
+                f"request {r.uid}: no per-tick records"
+            split = tr.cronet_split()
+            assert (split["cronet_iters"] + split["fea_iters"]
+                    == r.cronet_iters + r.fea_iters), \
+                (f"request {r.uid}: window split {split} disagrees with "
+                 f"harvested counters")
+
+        # 3. registry saw the traffic and round-trips through the spool
+        assert reg.counter("topo_completions_total", "").total() == 12.0
+        assert reg.histogram("topo_tick_latency_s", "").count() > 0
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "telemetry.jsonl")
+            snap = TelemetrySnapshotter(path, registry=reg,
+                                        interval_s=60.0)
+            snap.snapshot_once()
+            snap.snapshot_once()
+            with open(path, "a") as f:      # crash mid-append
+                f.write('{"t": 0, "metrics": {"torn')
+            snaps = read_snapshots(path)
+            assert len(snaps) == 2, "torn trailing line not tolerated"
+            assert "topo_tick_latency_s" in snaps[-1]["metrics"]
+            with open(snap.prom_path) as f:
+                prom = f.read()
+            assert "topo_completions_total" in prom
+            assert "topo_tick_latency_s_bucket" in prom
+        print("observe: span tiling + bitwise invisibility + snapshot "
+              "round-trip OK")
+
+        # 4. overhead gate: tracing must stay out of the tick loop's way
+        if check:
+            eng = engines[(12, 4)]
+            n_iter, width = 40, 2           # full width: both slots busy
+
+            def run_batch(trace_every, base):
+                eng.trace_every = trace_every
+                futs = [eng.submit(TopoRequest(
+                    uid=base + j, problem=probs[(12, 4)][j % 4],
+                    n_iter=n_iter)) for j in range(width)]
+                t0 = time.perf_counter()
+                for f in futs:
+                    f.result(timeout=600)
+                return time.perf_counter() - t0
+
+            run_batch(0, 1000)              # warm the full-width path
+            t_plain = min(run_batch(0, 2000 + 10 * k) for k in range(3))
+            t_traced = min(run_batch(1, 3000 + 10 * k) for k in range(3))
+            eng.trace_every = 0
+            overhead = (t_traced - t_plain) / t_plain
+            per_it = t_plain / (width * n_iter) * 1e3
+            print(f"observe: tick overhead {overhead * 100:+.2f}% "
+                  f"(untraced {per_it:.3f} ms/iter at width {width})")
+            assert overhead < 0.05, \
+                (f"tracing overhead {overhead * 100:.2f}% >= 5% of tick "
+                 f"latency ({t_traced:.4f}s traced vs {t_plain:.4f}s)")
+
+        for eng in engines.values():
+            eng.shutdown()
+    finally:
+        set_default_registry(prev)
+
+
 def run(fast: bool = True):
     """benchmarks/run.py suite entry."""
     r = bench(slots=8, n_requests=8 if fast else 24,
@@ -1587,6 +1741,13 @@ def main():
                          "interpret auto-detection, push budget); with "
                          "--check: nightly per-iteration latency claim + "
                          "BENCH_device.json artifact")
+    ap.add_argument("--observe", action="store_true",
+                    help="observability leg: trace_every=1 span tiling "
+                         "(phases sum to e2e within 1%%) + bitwise "
+                         "invisibility + telemetry snapshot round-trip "
+                         "(always asserted). With --smoke: push-gate "
+                         "budget; with --check: nightly <5%% tracing "
+                         "overhead gate at full slot width")
     ap.add_argument("--smoke", action="store_true",
                     help="fast push-gate CI check: tiny-mesh gateway "
                          "serving + deterministic overload-policy checks "
@@ -1637,6 +1798,8 @@ def main():
         bench_flywheel(size=args.size, check=True, strict=args.check,
                        prod_steps=800 if args.check else 400,
                        finetune_steps=1000 if args.check else 300)
+    elif args.observe:
+        bench_observe(size=args.size, smoke=args.smoke, check=args.check)
     elif args.smoke:
         smoke()
     elif args.gateway:

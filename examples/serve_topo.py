@@ -56,6 +56,7 @@ registry).
          [--flywheel-trigger 0.5] [--flywheel-retain 0]]
 """
 import argparse
+import os
 import sys
 import time
 
@@ -153,6 +154,12 @@ def main():
                          "per lineage, sweeping between ticks (0 = "
                          "never sweep — sweeps DELETE old unpinned "
                          "versions)")
+    ap.add_argument("--observe", action="store_true",
+                    help="trace every request (spans + per-tick "
+                         "records), spool telemetry snapshots next to "
+                         "the registry, show the live metrics dashboard "
+                         "during streaming runs, and print one sampled "
+                         "request timeline at the end")
     args = ap.parse_args()
 
     from repro.configs.cronet import get_cronet_config
@@ -234,13 +241,14 @@ def main():
             sys.exit("error: --flywheel drives its own canaries; "
                      "drop --canary")
         harvest_log = HarvestLog(capacity=64, accept_below=0.8)
+    trace_every = 1 if args.observe else 0
     if args.meshes:
         service = TopoGateway.from_registry(
             registry, tag=serve_tag, slots=args.slots, precision="fp32",
             max_pending=args.max_pending or None, overload=args.overload,
             error_threshold=args.threshold, backend=args.backend,
             preempt=not args.no_preempt, harvest=harvest_log,
-            canary_window=32, bucket_window=64)
+            canary_window=32, bucket_window=64, trace_every=trace_every)
         label = f"gateway[{args.overload}]"
     else:
         params, record = registry.load(serve_tag)
@@ -248,8 +256,32 @@ def main():
             cfg, params, record.u_scale, slots=args.slots,
             precision="fp32", error_threshold=args.threshold,
             backend=args.backend, preempt=not args.no_preempt,
-            model_tag=record.tag)
+            model_tag=record.tag, trace_every=trace_every)
         label = "engine"
+
+    snapshotter = None
+    dash_stop = dash_thread = None
+    if args.observe:
+        import threading
+
+        from repro.obs import TelemetrySnapshotter, dashboard
+
+        telemetry_path = os.path.join(args.registry, "telemetry.jsonl")
+        snapshotter = TelemetrySnapshotter(
+            telemetry_path, interval_s=2.0,
+            extra=lambda: service.throughput_stats()).start()
+        print(f"== observe: tracing every request; telemetry -> "
+              f"{telemetry_path} (+ .prom) ==")
+        if args.arrival_rate > 0:
+            # live dashboard only for streaming runs — drain mode's
+            # interleaved per-request prints would fight the ANSI
+            # clear/redraw loop for the terminal
+            dash_stop = threading.Event()
+            dash_thread = threading.Thread(
+                target=dashboard.watch,
+                kwargs=dict(stats_fn=service.throughput_stats,
+                            interval_s=1.0, stop=dash_stop),
+                daemon=True)
     if args.swap and not args.meshes:
         sys.exit("error: --swap needs the gateway (--meshes AxB,...)")
     if args.canary and not args.meshes:
@@ -329,6 +361,8 @@ def main():
             uid=-1 - k, problem=probs[k % len(probs)], n_iter=2))
             for k in range(max(args.slots, len(meshes)))]
         harvest(warm)
+        if dash_thread is not None:
+            dash_thread.start()
         arrivals = np.cumsum(
             rng.exponential(1.0 / args.arrival_rate, args.requests))
         t0 = time.time()
@@ -346,6 +380,9 @@ def main():
                 maybe_canary(futs)
         maybe_swap(futs)
         done, shed = harvest(futs)
+        if dash_stop is not None:
+            dash_stop.set()
+            dash_thread.join(timeout=5.0)
         finish_canary()
         wall = time.time() - t0
     else:
@@ -410,6 +447,21 @@ def main():
             print(f"   {m[0]}x{m[1]}: {len(pool)} served, "
                   f"p50 {s['p50_latency_s']:.2f}s, "
                   f"CRONet {100 * s['cronet_hit_rate']:.1f}%")
+
+    if args.observe:
+        from repro.obs import dashboard
+        final_stats = (service.throughput_stats(per_mesh=True)
+                       if args.meshes else service.throughput_stats())
+        print(dashboard.render(stats=final_stats))
+        # drill-down: the full timeline of one served request — phase
+        # spans tile submit -> done, so the durations sum to its e2e
+        sample = next((service.trace(r.uid) for r in done
+                       if service.trace(r.uid) is not None), None)
+        if sample is not None:
+            print(sample.render())
+        snapshotter.stop()
+        print(f"== observe: {snapshotter.snapshots_written} telemetry "
+              f"snapshot(s) written ==")
 
     if args.flywheel:
         retention = (RegistryRetention(registry,

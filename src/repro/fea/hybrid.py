@@ -28,6 +28,7 @@ import numpy as np
 from repro.configs.cronet import CRONetConfig
 from repro.core import cronet
 from repro.fea import fea2d, simp
+from repro.obs import metrics as obs_metrics
 from repro.optim.compress import dequantize_int8, quantize_int8
 
 _INPUT_DTYPE = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.float32}
@@ -57,6 +58,12 @@ class HybridState(NamedTuple):
     n_cronet: jnp.ndarray   # (B,) int32 accepted-surrogate iterations
     n_fea: jnp.ndarray      # (B,) int32 FEA iterations
     compliance: jnp.ndarray  # (B,) compliance of the last iteration
+    cg_iters: jnp.ndarray   # (B,) int32 cumulative CG iterations the
+    #                         slot's FEA fallbacks burned (the masked CG
+    #                         already counts them per slot; surfacing
+    #                         them here is what lets the serving engine
+    #                         report "where the fallback budget went"
+    #                         without any extra device work)
 
 
 def init_state(cfg: CRONetConfig, bp: fea2d.BatchProblem) -> HybridState:
@@ -78,6 +85,7 @@ def init_state(cfg: CRONetConfig, bp: fea2d.BatchProblem) -> HybridState:
         n_cronet=jnp.zeros((B,), jnp.int32),
         n_fea=jnp.zeros((B,), jnp.int32),
         compliance=jnp.zeros((B,), jnp.float32),
+        cg_iters=jnp.zeros((B,), jnp.int32),
     )
 
 
@@ -97,6 +105,7 @@ def reset_slot(cfg: CRONetConfig, state: HybridState, i: int,
         n_cronet=state.n_cronet.at[i].set(0),
         n_fea=state.n_fea.at[i].set(0),
         compliance=state.compliance.at[i].set(0.0),
+        cg_iters=state.cg_iters.at[i].set(0),
     )
 
 
@@ -150,7 +159,8 @@ def resize_state(state: HybridState, new_b: int) -> HybridState:
         x=pad(state.x, 0.5), u=pad(state.u, 0.0), hist=pad(state.hist, 0.0),
         it=pad(state.it, 0), err=pad(state.err, jnp.inf),
         n_cronet=pad(state.n_cronet, 0), n_fea=pad(state.n_fea, 0),
-        compliance=pad(state.compliance, 0.0))
+        compliance=pad(state.compliance, 0.0),
+        cg_iters=pad(state.cg_iters, 0))
 
 
 def _oracle_forward(cfg: CRONetConfig):
@@ -210,6 +220,14 @@ def make_hybrid_step(cfg: CRONetConfig, u_scale: float,
     def step(params, bp: fea2d.BatchProblem, load_vol,
              state: HybridState) -> HybridState:
         trace_count[0] += 1  # python body runs only when jit (re)traces
+        # compile-event telemetry: this python body executes once per XLA
+        # (re)trace, so the counter records exactly the compile events
+        # (looked up at trace time so a swapped default registry is seen)
+        obs_metrics.default_registry().counter(
+            "hybrid_compiles_total",
+            "XLA (re)traces of the jitted hybrid step").inc(
+            backend=backend, fea_backend=fea_backend,
+            width=state.x.shape[0])
         warm = state.it >= cfg.hist_len
 
         def predict():
@@ -226,11 +244,15 @@ def make_hybrid_step(cfg: CRONetConfig, u_scale: float,
                       & (state.it % verify_every != 0))
         need_fea = ~use_cronet
 
-        u_fea = jax.lax.cond(
+        # the masked CG reports per-slot iteration counts alongside U;
+        # carrying them through the state (zeros when no slot needed FEA)
+        # costs nothing on-device and gives the serving engine the
+        # CG-fallback budget per request
+        u_fea, cg_its = jax.lax.cond(
             jnp.any(need_fea),
             lambda: fea2d.solve_b(bp, state.x, U0=state.u,
-                                  need=need_fea, backend=fea_backend)[0],
-            lambda: state.u)
+                                  need=need_fea, backend=fea_backend),
+            lambda: (state.u, jnp.zeros_like(state.cg_iters)))
 
         # batch-invariant norms: err is COMPARED against the gate threshold,
         # so it must be bitwise-identical at any batch width
@@ -266,7 +288,8 @@ def make_hybrid_step(cfg: CRONetConfig, u_scale: float,
         return HybridState(
             x=x, u=u, hist=hist, it=state.it + 1, err=err,
             n_cronet=state.n_cronet + use_cronet.astype(jnp.int32),
-            n_fea=state.n_fea + need_fea.astype(jnp.int32), compliance=c)
+            n_fea=state.n_fea + need_fea.astype(jnp.int32), compliance=c,
+            cg_iters=state.cg_iters + cg_its.astype(jnp.int32))
 
     # tracing telemetry: trace_count[0] is the number of XLA compilations
     # this step has triggered (one per distinct batch width). The serving

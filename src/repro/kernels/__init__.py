@@ -27,9 +27,21 @@ def resolve_interpret(interpret: Optional[bool] = None) -> bool:
     for). An explicit bool wins unconditionally (tests force interpret
     mode on any platform; benchmarks force compiled mode).
     """
-    if interpret is None:
-        return jax.default_backend() == "cpu"
-    return bool(interpret)
+    auto = interpret is None
+    resolved = (jax.default_backend() == "cpu") if auto \
+        else bool(interpret)
+    # deployment telemetry: which lowering the kernels actually took.
+    # An accelerator fleet scraping kernel_resolutions_total and seeing
+    # mode="interpret" is misconfigured — the counter is the cheap,
+    # always-on way to catch it (the --device benchmark asserts the
+    # same thing, but only when it runs).
+    from repro.obs import metrics as obs_metrics
+    obs_metrics.default_registry().counter(
+        "kernel_resolutions_total",
+        "pallas interpret-mode resolutions by (mode, source)").inc(
+        mode="interpret" if resolved else "compiled",
+        source="auto" if auto else "explicit")
+    return resolved
 
 
 __all__ = ["resolve_interpret"]

@@ -20,8 +20,10 @@ Public API (everything else in this package is implementation detail):
     eval metrics); the gateway resolves its served model from here
     (``TopoGateway.from_registry``) and hot-swaps versions with
     ``gateway.swap_model(tag)`` without dropping queued requests.
-  * ``pool_stats`` — the shared metric definitions behind every
-    ``throughput_stats()`` (engine-level, per-mesh, and aggregate).
+  * ``pool_stats`` / ``throughput_view`` — the ONE shared metric core
+    behind every ``throughput_stats()`` (engine-level, per-mesh,
+    aggregate, and the LM-decode server's) — rate + latency
+    percentiles computed the same way everywhere.
   * Fleet operations — ``ModelResolver`` (per-bucket checkpoint
     resolution: mesh-specialized version if registered, else fleet
     default), ``gateway.canary(tag, fraction, mesh=...)`` +
@@ -143,6 +145,39 @@ promote, unattended)::
 ``examples/serve_topo.py --flywheel`` runs this loop end to end;
 ``benchmarks/topo_serving.py --flywheel --smoke`` is the CI gate.
 
+Observability (``repro.obs`` — zero-dependency, bitwise-invisible)::
+
+    from repro.obs import TelemetrySnapshotter, default_registry
+
+    gw = TopoGateway(cfg, params, u_scale, trace_every=1)
+    snap = TelemetrySnapshotter("runs/telemetry.jsonl",
+                                extra=gw.throughput_stats).start()
+    fut = gw.submit(TopoRequest(uid=0, problem=prob, n_iter=60))
+    req = fut.result()
+    tr = gw.trace(req.uid)        # or req.trace
+    print(tr.render())            # queued -> compute [-> parked] spans,
+                                  # per-tick records, CRONet-vs-CG split;
+                                  # phase durations tile req's e2e exactly
+    for ev in gw.fleet_events():  # typed event log, sorted on t_mono
+        print(ev.kind, ev.tag)
+    snap.stop(); gw.shutdown()
+
+``trace_every=N`` samples every Nth submission with a ``Trace``: phase
+spans (queued / compute / parked) whose boundaries reuse the engine's
+own bookkeeping stamps — so they tile submit -> completion exactly —
+plus a bounded per-tick ring and the accepted-vs-fallback iteration
+split read only at sync boundaries the tick loop already pays for.
+Every layer also records into one process-wide ``MetricsRegistry``
+(``default_registry()``): queue depth, admission wait, per-(mesh, rung,
+backend) tick latency, CG iterations, hit/fallback counters,
+preemptions, sheds, canary/flywheel transitions, compile events.
+``TelemetrySnapshotter`` spools atomic-replace JSONL (+ a Prometheus
+text file) on a daemon cadence; ``repro.obs.dashboard.watch`` renders a
+live terminal view (``examples/serve_topo.py --observe``). Tracing
+never touches device math: densities are bitwise-identical with it on
+or off (``benchmarks/topo_serving.py --observe`` gates this, plus a
+<5% tick-latency overhead budget nightly).
+
 The LM-decode serving half (``server``, ``decode``) is deliberately NOT
 re-exported here: import those modules directly.
 """
@@ -156,7 +191,8 @@ from repro.serve.topo_service import TopoServingEngine
 from repro.serve.types import (EngineClosed, EngineState, FleetEvent,
                                GatewayOverloaded, OverloadPolicy,
                                QueueFull, RequestShed, TagStats,
-                               TopoFuture, TopoRequest, pool_stats)
+                               TopoFuture, TopoRequest, pool_stats,
+                               throughput_view)
 
 __all__ = [
     "TopoGateway",
@@ -181,4 +217,5 @@ __all__ = [
     "FlywheelState",
     "RegistryRetention",
     "pool_stats",
+    "throughput_view",
 ]

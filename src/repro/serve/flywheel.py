@@ -125,13 +125,20 @@ class HarvestLog:
         """Offer one completed request; returns True when harvested.
         Called by the gateway under its queue lock — in-memory only."""
         from repro.fea import dataset as ds_mod
+        from repro.obs import metrics as obs_metrics
+        m_harvest = obs_metrics.default_registry().counter(
+            "flywheel_harvest_total",
+            "completions offered to the harvest sink, by outcome")
         total = req.cronet_iters + req.fea_iters
         with self._lock:
             self.recorded += 1
         if total <= 0:
+            m_harvest.inc(outcome="no-iters")
             return False
         if req.cronet_iters / total >= self.accept_below:
+            m_harvest.inc(outcome="accepted")
             return False
+        m_harvest.inc(outcome="harvested")
         case = ds_mod.LoadCase.from_problem(req.problem)
         key = case.key()
         entry = dict(case.describe())

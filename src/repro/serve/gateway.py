@@ -92,6 +92,8 @@ from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from repro.configs.cronet import CRONetConfig
 from repro.fea import fea2d
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.registry import ModelResolver, NoModelError
 from repro.serve.scheduler import (BoundedEDFScheduler, shape_class_for,
                                    target_slots)
@@ -248,6 +250,7 @@ class TopoGateway:
 
     RETIRED_LIMIT = 4096       # completed requests kept from dead engines
     EVENT_LIMIT = 256          # FleetEvent ring depth
+    TRACE_LIMIT = 512          # completed uid -> Trace map depth
 
     def __init__(self, cfg: Optional[CRONetConfig] = None, params=None,
                  u_scale: Optional[float] = None, *,
@@ -268,6 +271,7 @@ class TopoGateway:
                  harvest=None,
                  canary_window: Optional[int] = 64,
                  bucket_window: Optional[int] = 256,
+                 trace_every: int = 0,
                  **engine_kwargs):
         self.registry = registry
         self.model_tag = model_tag
@@ -355,6 +359,25 @@ class TopoGateway:
         self._bucket_stats: Dict[Mesh, TagStats] = {}
         self.events: collections.deque = collections.deque(
             maxlen=self.EVENT_LIMIT)
+        # ---- observability: front-door trace sampling (every Nth
+        # admission carries a repro.obs Trace; completed traces land in
+        # a bounded uid -> Trace map behind ``trace(uid)``) and the
+        # fleet-event counter mirroring the typed event log into the
+        # process metrics registry
+        self.trace_every = int(trace_every)
+        self._trace_n = 0
+        self._traces: collections.OrderedDict = collections.OrderedDict()
+        self.metrics = obs_metrics.default_registry()
+        self._m_events = self.metrics.counter(
+            "fleet_events_total",
+            "typed control-plane fleet events by kind")
+        self.metrics.gauge(
+            "topo_engines", "live per-mesh engines in the gateway pool",
+            callback=lambda: len(self._engines))
+        self.metrics.gauge(
+            "topo_gateway_inflight",
+            "requests offered to the gateway and not yet resolved",
+            callback=lambda: self._inflight)
         self._lease(self.model_tag)
 
     @classmethod
@@ -559,9 +582,32 @@ class TopoGateway:
     def _record_event(self, kind: str, mesh: Optional[Mesh],
                       tag: Optional[str], reason: str = "",
                       details: Optional[Dict] = None):
+        # dual stamps, taken at the same instant: wall-clock ``t`` for
+        # humans, monotonic ``t_mono`` so events order against request
+        # stamps (submit_t/admitted_t/deadline) — the log's sort key
         self.events.append(FleetEvent(kind=kind, mesh=mesh, tag=tag,
                                       t=time.time(), reason=reason,
-                                      details=details or {}))
+                                      details=details or {},
+                                      t_mono=time.monotonic()))
+        self._m_events.inc(kind=kind)
+
+    def fleet_events(self, kind: Optional[str] = None) -> List[FleetEvent]:
+        """The typed fleet-event log, ordered on the monotonic stamp
+        (``t_mono``) so it can be merged with request timelines;
+        optionally filtered by ``kind``."""
+        with self._queue.cond:
+            evs = list(self.events)
+        evs.sort(key=lambda e: e.t_mono)
+        if kind is not None:
+            evs = [e for e in evs if e.kind == kind]
+        return evs
+
+    def trace(self, uid: int):
+        """Completed-request trace lookup (``repro.obs.trace.Trace`` or
+        None when the request wasn't sampled / scrolled out of the
+        bounded trace map)."""
+        with self._queue.cond:
+            return self._traces.get(uid)
 
     # ---------------------------------------------------------- lifecycle
 
@@ -1230,6 +1276,14 @@ class TopoGateway:
         mesh = req.mesh
         with self._queue.cond:
             self._inflight += 1
+            # front-door trace sampling: the queued span opens at the
+            # gateway stamp, so a routed request's timeline covers the
+            # gateway queue, not just the engine-local wait
+            self._trace_n += 1
+            if (self.trace_every > 0 and req.trace is None
+                    and self._trace_n % self.trace_every == 0):
+                req.trace = obs_trace.Trace(req.uid)
+                req.trace.begin(obs_trace.QUEUED, t=now)
             # elasticity signals: per-bucket arrival history (the
             # autoscaler's input) and cold-horizon freshness
             d = self._arrivals.get(mesh)
@@ -1271,6 +1325,13 @@ class TopoGateway:
             # are unconditional: whatever the bookkeeping below does, a
             # resolved request must never be counted in flight forever
             self._inflight -= 1
+            if req.trace is not None:
+                # bounded completed-trace map behind gateway.trace(uid);
+                # registered for failed/shed requests too (their partial
+                # timeline is exactly what a postmortem wants)
+                self._traces[req.uid] = req.trace
+                while len(self._traces) > self.TRACE_LIMIT:
+                    self._traces.popitem(last=False)
             try:
                 mesh = req.mesh
                 self._last_seen[mesh] = time.monotonic()

@@ -72,6 +72,7 @@ import math
 import threading
 from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
 
+from repro.obs import metrics as obs_metrics
 from repro.serve.types import OverloadPolicy, QueueFull
 
 INF = float("inf")
@@ -219,6 +220,19 @@ class BoundedEDFScheduler(EDFScheduler):
         self.shed_count = 0       # lifetime SHED evictions
         self.rejected = 0         # lifetime REJECT failures
         self._closed = False
+        # overload telemetry: the counters mirror shed_count/rejected
+        # into the process metrics registry; the depth gauge samples the
+        # heap at READ time (callback), so offers/pops record nothing
+        reg = obs_metrics.default_registry()
+        self._m_shed = reg.counter(
+            "topo_sheds_total",
+            "requests evicted by the SHED_LATEST_DEADLINE policy")
+        self._m_reject = reg.counter(
+            "topo_rejects_total",
+            "submits failed by the REJECT policy (QueueFull)")
+        reg.gauge("topo_queue_depth",
+                  "bounded admission-queue depth (gateway front door)",
+                  callback=lambda: len(self._heap))
 
     def close(self):
         with self.cond:
@@ -256,6 +270,7 @@ class BoundedEDFScheduler(EDFScheduler):
                                  priority=priority), None
             if self.policy is OverloadPolicy.REJECT:
                 self.rejected += 1
+                self._m_reject.inc()
                 raise QueueFull(
                     f"admission queue full ({self.capacity} pending)")
             if self.policy is OverloadPolicy.SHED_LATEST_DEADLINE:
@@ -269,6 +284,7 @@ class BoundedEDFScheduler(EDFScheduler):
                     # without ever queueing it (seq order breaks the tie
                     # toward keeping what already waited)
                     self.shed_count += 1
+                    self._m_shed.inc()
                     e = _Entry(neg_priority=-priority, eff_deadline=eff,
                                seq=-1, payload=payload,
                                deadline=INF if deadline is None
@@ -277,6 +293,7 @@ class BoundedEDFScheduler(EDFScheduler):
                 self._heap.remove(worst)
                 heapq.heapify(self._heap)
                 self.shed_count += 1
+                self._m_shed.inc()
                 return self.push(payload, deadline, now,
                                  priority=priority), worst
             # BLOCK: wait for a pop (or close/timeout) to make room

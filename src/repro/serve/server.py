@@ -82,8 +82,16 @@ class ServingEngine:
         return requests
 
     def throughput_stats(self, requests: List[Request]) -> Dict[str, float]:
-        toks = sum(len(r.output) for r in requests if r.output is not None)
-        lat = [r.latency_s for r in requests]
-        return {"total_new_tokens": toks,
-                "mean_batch_latency_s": float(np.mean(lat)),
-                "tokens_per_s": toks / max(sum(lat) / self.slots, 1e-9)}
+        # shared summary core (serve/types.py): one implementation for
+        # the topo engine, the gateway and this LM engine. Wall clock =
+        # summed batch latency amortized over the slot width (each
+        # latency_s covers a whole slot-batched group).
+        from repro.serve.types import throughput_view
+        wall = sum(r.latency_s for r in requests) / self.slots
+        view = throughput_view(
+            requests, latency=lambda r: r.latency_s, wall_s=wall,
+            units=lambda r: (len(r.output)
+                             if r.output is not None else 0))
+        return {"total_new_tokens": int(view["units"]),
+                "mean_batch_latency_s": view["mean_latency_s"],
+                "tokens_per_s": view["units_per_s"]}

@@ -76,6 +76,8 @@ import numpy as np
 
 from repro.configs.cronet import CRONetConfig
 from repro.fea import fea2d, hybrid
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.scheduler import (INF, EDFScheduler, SlotView, ladder_rungs,
                                    preempt_victim, rung_for)
 from repro.serve.types import (EngineClosed, EngineState, TopoFuture,
@@ -95,6 +97,11 @@ class _Admission:
     first_admit_t: Optional[float] = None
     seq: int = -1                # original EDF rank, preserved across parks
     eff_deadline: float = INF
+    # trace bookkeeping (traced requests only): (it, n_cronet, n_fea,
+    # cg_iters) device-counter values already attributed to trace
+    # windows, so each flush records only the delta since the last one.
+    # Survives park/restore because the counters themselves do.
+    tr_base: tuple = (0, 0, 0, 0)
 
     @property
     def iters_left(self) -> int:
@@ -186,6 +193,7 @@ class _Shard:
         self.steps = 0              # dispatched this activation
         self.busy_t0: Optional[float] = None   # sync-point timing window
         self.steps_in_window = 0
+        self.trace_sync_n = 0       # traced sync boundaries seen (throttle)
 
     def activate(self):
         """Fresh idle state for a (re)started tick loop."""
@@ -400,7 +408,9 @@ class TopoServingEngine:
                  model_tag: Optional[str] = None,
                  ladder: Optional[Sequence[int]] = None,
                  shape_padded: bool = False,
-                 fea_backend: str = "reference"):
+                 fea_backend: str = "reference",
+                 trace_every: int = 0,
+                 metrics: Optional[obs_metrics.MetricsRegistry] = None):
         self._devices = shard_devices(slots, shards)
         self.cfg = cfg
         self.slots = slots
@@ -441,6 +451,38 @@ class TopoServingEngine:
             maxlen=completed_limit)
         self._lifecycle = threading.Lock()
         self._sec_per_step: Optional[float] = None
+        # ---- observability (repro.obs): all recording is host-side
+        # stamps/increments, so densities are bitwise-identical with
+        # tracing on or off. trace_every=N samples every Nth submission
+        # (0 = off); metrics default to the process-wide registry.
+        self.trace_every = int(trace_every)
+        self._trace_n = 0
+        self.metrics = (metrics if metrics is not None
+                        else obs_metrics.default_registry())
+        self._mesh_label = f"{cfg.nelx}x{cfg.nely}"
+        m = self.metrics
+        self._m_wait = m.histogram(
+            "topo_admission_wait_s",
+            "submit -> first slot admission (queue age)")
+        self._m_tick = m.histogram(
+            "topo_tick_latency_s",
+            "per-compiled-step latency by (mesh, rung, backend)")
+        self._m_cg = m.histogram(
+            "topo_cg_iters",
+            "CG iterations burned by a completed request's FEA fallbacks",
+            buckets=obs_metrics.DEFAULT_COUNT_BUCKETS)
+        self._m_done = m.counter(
+            "topo_completions_total",
+            "completed requests by (mesh, deadline outcome)")
+        self._m_preempt = m.counter(
+            "topo_preemptions_total",
+            "slot evictions (park) in favour of more urgent work")
+        self._m_iters = m.counter(
+            "topo_iters_total",
+            "hybrid iterations by path: CRONet-accepted vs FEA fallback")
+        self._m_inflight = m.gauge(
+            "topo_inflight",
+            "accepted-but-unresolved requests per engine mesh")
         self.preemptions = 0        # engine lifetime eviction count
         self._steps_base = 0        # steps from finished activations
         self.last_run_steps = 0     # most recent run() only
@@ -656,6 +698,16 @@ class TopoServingEngine:
                             if req.deadline_s is not None else None)
         else:
             fut = _future   # gateway already stamped submit_t/deadline
+        # trace sampling: every Nth submission rides with a Trace. The
+        # queued span opens at the request's OWN submit stamp (gateway
+        # front-door stamp when routed), so span sums tile the full
+        # end-to-end latency, not just the engine-local part.
+        if self.trace_every > 0 and req.trace is None:
+            self._trace_n += 1
+            if self._trace_n % self.trace_every == 0:
+                req.trace = obs_trace.Trace(req.uid)
+        if req.trace is not None and req.trace.submit_t is None:
+            req.trace.begin(obs_trace.QUEUED, t=req.submit_t)
         adm = _Admission(req, fut)
         with self._sched.cond:
             if self._closed:
@@ -669,10 +721,21 @@ class TopoServingEngine:
             if self._failure is not None:
                 raise RuntimeError("engine failed") from self._failure
             self._inflight += 1
+            self._m_inflight.set(self._inflight, mesh=self._mesh_label)
             entry = self._sched.push(adm, req.deadline, now,
                                      priority=req.priority)
             adm.seq, adm.eff_deadline = entry.seq, entry.eff_deadline
         return fut
+
+    def trace(self, uid: int) -> Optional[obs_trace.Trace]:
+        """Look up a completed request's trace by uid (None when the
+        request wasn't sampled or has scrolled out of the completed
+        ring)."""
+        with self._sched.cond:
+            for r in self._completed:
+                if r.uid == uid:
+                    return r.trace
+        return None
 
     # --------------------------------------------------------- tick loop
 
@@ -681,6 +744,41 @@ class TopoServingEngine:
             return self.tick_time_s
         est = self._sec_per_step
         return est if est is not None else 0.0
+
+    def _trace_flush(self, adm: _Admission, t: float, it: int, cro: int,
+                     fea: int, cg: int):
+        """Append the accepted-vs-fallback delta since the last flush to
+        the admission's trace window ring (traced requests only)."""
+        b = adm.tr_base
+        d_it, d_cro, d_fea, d_cg = it - b[0], cro - b[1], fea - b[2], cg - b[3]
+        if d_it or d_cro or d_fea or d_cg:
+            adm.req.trace.window(t, d_it, d_cro, d_fea, d_cg)
+        adm.tr_base = (it, cro, fea, cg)
+
+    def _trace_sync(self, shard: _Shard, every: int = 8):
+        """Flush window deltas for traced live lanes at a boundary the
+        tick loop ALREADY synchronized — one batched (B,)-host read, and
+        only when a traced lane is live, so the untraced hot path runs
+        the exact same code it did before tracing existed. Throttled to
+        every ``every``-th traced sync boundary: the readback is tiny
+        but not free, and park/harvest flush the SAME counters exactly
+        at the span boundaries, so mid-span windows are a coarse
+        progress signal, not the source of truth."""
+        lanes = [i for i in range(shard.width)
+                 if shard.slot_adm[i] is not None
+                 and shard.slot_adm[i].req.trace is not None]
+        if not lanes:
+            return
+        shard.trace_sync_n += 1
+        if shard.trace_sync_n % every:
+            return
+        it, cro, fea, cg = jax.device_get(
+            (shard.state.it, shard.state.n_cronet,
+             shard.state.n_fea, shard.state.cg_iters))
+        t = time.monotonic()
+        for i in lanes:
+            self._trace_flush(shard.slot_adm[i], t, int(it[i]),
+                              int(cro[i]), int(fea[i]), int(cg[i]))
 
     def _harvest_lane(self, shard: _Shard, lane: int, now: float):
         """Pull a finished lane's result (device sync) + resolve."""
@@ -694,6 +792,7 @@ class TopoServingEngine:
         req.compliance = float(shard.state.compliance[lane])
         req.cronet_iters = int(shard.state.n_cronet[lane])
         req.fea_iters = int(shard.state.n_fea[lane])
+        req.cg_iters = int(shard.state.cg_iters[lane])
         req.model_tag = self.model_tag
         t_done = time.monotonic()    # deadline math: monotonic, like submit
         req.completed_t = time.time()  # user-facing wall-clock stamp
@@ -701,18 +800,41 @@ class TopoServingEngine:
         req.deadline_met = (None if req.deadline is None
                             else t_done <= req.deadline)
         req.done = True
+        if req.trace is not None:
+            # final window + completion BEFORE resolving, so done
+            # callbacks (the gateway's trace registry) see it complete
+            self._trace_flush(adm, t_done,
+                              req.cronet_iters + req.fea_iters,
+                              req.cronet_iters, req.fea_iters,
+                              req.cg_iters)
+            req.trace.finish(t=t_done, iters=req.cronet_iters
+                             + req.fea_iters)
         shard.slot_adm[lane] = None
         with self._sched.cond:
             self._completed.append(req)
             self._inflight -= 1
+            self._m_inflight.set(self._inflight, mesh=self._mesh_label)
             self._sched.cond.notify_all()
         adm.future._resolve()
+        outcome = ("none" if req.deadline_met is None
+                   else "met" if req.deadline_met else "missed")
+        self._m_done.inc(mesh=self._mesh_label, outcome=outcome)
+        if req.cronet_iters:
+            self._m_iters.inc(req.cronet_iters, mesh=self._mesh_label,
+                              path="cronet")
+        if req.fea_iters:
+            self._m_iters.inc(req.fea_iters, mesh=self._mesh_label,
+                              path="fea")
+        self._m_cg.observe(req.cg_iters, mesh=self._mesh_label)
         # the np.asarray above synced through every dispatched step:
         # close the timing window and update the per-step estimate
         if shard.steps_in_window > 0 and shard.busy_t0 is not None:
             per = (t_done - shard.busy_t0) / shard.steps_in_window
             self._sec_per_step = (per if self._sec_per_step is None
                                   else 0.5 * self._sec_per_step + 0.5 * per)
+            self._m_tick.observe(per, n=shard.steps_in_window,
+                                 mesh=self._mesh_label, rung=shard.width,
+                                 backend=self.fea_backend)
         shard.busy_t0 = t_done
         shard.steps_in_window = 0
 
@@ -720,7 +842,14 @@ class TopoServingEngine:
                     now: float):
         if adm.first_admit_t is None:
             adm.first_admit_t = now
+            adm.req.admitted_t = now
             adm.req.queue_wait_s = now - adm.req.submit_t
+            self._m_wait.observe(adm.req.queue_wait_s,
+                                 mesh=self._mesh_label)
+        if adm.req.trace is not None:
+            # closes the open queued/parked span at the same stamp, so
+            # the phase timeline stays contiguous across preemptions
+            adm.req.trace.begin(obs_trace.COMPUTE, t=now, lane=lane)
         shard.fill(lane, adm)
 
     def _shard_loop(self, shard: _Shard):
@@ -802,6 +931,19 @@ class TopoServingEngine:
                 if preempt_entry is not None:
                     parked = shard.park(victim)   # device sync, lock-free
                     self.preemptions += 1
+                    self._m_preempt.inc(mesh=self._mesh_label)
+                    if parked.req.trace is not None:
+                        # the parked snapshot is already on host: flush
+                        # the window up to the park and open the parked
+                        # span (closed again at re-admission)
+                        t_park = time.monotonic()
+                        self._trace_flush(
+                            parked, t_park, int(parked.parked.it),
+                            int(parked.parked.n_cronet),
+                            int(parked.parked.n_fea),
+                            int(parked.parked.cg_iters))
+                        parked.req.trace.begin(obs_trace.PARKED, t=t_park,
+                                               iters_done=parked.iters_done)
                     sched.push(parked, parked.req.deadline, now,
                                seq=parked.seq,
                                eff_deadline=parked.eff_deadline,
@@ -836,9 +978,16 @@ class TopoServingEngine:
                 shard.steps += 1
                 shard.rung_steps[shard.width] += 1
                 shard.steps_in_window += 1
+                t_tick = None    # stamped lazily, only if a lane is traced
                 for i in range(L):
-                    if shard.slot_adm[i] is not None:
+                    adm_i = shard.slot_adm[i]
+                    if adm_i is not None:
                         shard.slot_iters[i] += 1
+                        if adm_i.req.trace is not None:
+                            if t_tick is None:
+                                t_tick = time.monotonic()
+                            adm_i.req.trace.tick(t_tick, shard.width,
+                                                 shard.slot_iters[i])
                 # bound the dispatch-ahead depth: unchecked, the host can
                 # queue the whole burst to the next completion (~shard
                 # width x n_iter steps) before the device catches up, and
@@ -850,6 +999,7 @@ class TopoServingEngine:
                 # cost (host-side bookkeeping is microseconds per tick).
                 if shard.steps_in_window % 2 == 0:
                     jax.block_until_ready(shard.state.it)
+                    self._trace_sync(shard)
         except BaseException as exc:  # fail every waiter, don't hang
             with sched.cond:
                 self._failure = exc

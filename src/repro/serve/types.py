@@ -16,9 +16,13 @@ all three and import nothing from them.
   * ``EngineState`` + ``EngineClosed`` — the explicit lifecycle state
     machine: submitting to a CLOSED engine/gateway raises instead of
     hanging or racing the tick loops.
-  * ``pool_stats`` — the pure request-pool half of ``throughput_stats``,
-    so the engine (one pool) and the gateway (per-mesh pools + an
-    aggregate) report identical metrics.
+  * ``throughput_view`` / ``pool_stats`` — ONE latency/throughput
+    summary implementation. ``throughput_view`` is the generic core
+    (count, rate, mean/p50/p99 over caller-supplied extractors);
+    ``pool_stats`` is its topo-request specialization. The engine (one
+    pool), the gateway (per-mesh pools + an aggregate) and the LM
+    decode engine all report through it, so the three layers can never
+    drift apart.
   * ``TagStats`` / ``FleetEvent`` — the fleet-operations floor: per-model-
     tag serving counters (the acceptance/deadline metrics a canary is
     judged on) and the typed control-plane event record the gateway
@@ -109,6 +113,16 @@ class TopoRequest:
     # (nelx, nely) when ``problem`` was padded onto a canonical shape
     # class — the engine crops the harvested density back to it.
     orig_mesh: Optional[tuple] = None
+    # filled at first slot admission (monotonic): queue age on
+    # completions is recoverable as ``admitted_t - submit_t`` (also
+    # mirrored in ``queue_wait_s``), compute time as
+    # ``latency_s`` — previously only end-to-end was recoverable.
+    admitted_t: Optional[float] = None
+    # optional per-request trace (repro.obs.trace.Trace) — attached by
+    # the engine/gateway ``trace_every=N`` sampler; kept untyped so this
+    # module stays the dependency floor (obs imports nothing from serve,
+    # serve.types imports nothing from obs).
+    trace: Optional[object] = None
     # filled on completion
     done: bool = False
     completed_t: float = 0.0                # wall-clock (time.time()) stamp
@@ -116,6 +130,10 @@ class TopoRequest:
     compliance: float = 0.0                 # last-iteration compliance
     cronet_iters: int = 0
     fea_iters: int = 0
+    cg_iters: int = 0                       # CG iterations the FEA
+    #                                         fallbacks burned (hybrid
+    #                                         state carries the per-slot
+    #                                         counter; no extra syncs)
     latency_s: float = 0.0                  # first slot admission -> completion
     queue_wait_s: float = 0.0               # submit -> first slot admission
     deadline_met: Optional[bool] = None     # None when no deadline was set
@@ -190,19 +208,60 @@ class TopoFuture:
 # ------------------------------------------------------------------- stats
 
 
+def throughput_view(done: Sequence, *,
+                    latency: Callable[[object], float],
+                    e2e: Optional[Callable[[object], float]] = None,
+                    wall_s: Optional[float] = None,
+                    units: Optional[Callable[[object], float]] = None,
+                    ) -> Dict[str, float]:
+    """The ONE latency/throughput summary core — counts, rate and
+    mean/p50/p99 percentiles over completed work items.
+
+    Extractors parameterize the work-item shape so the topo engine
+    (``pool_stats``), the gateway aggregate and the LM decode engine
+    all share this body instead of keeping three hand-rolled copies:
+
+      * ``latency(item)`` — the compute latency the mean covers.
+      * ``e2e(item)``     — the end-to-end latency percentiles cover
+                            (defaults to ``latency``).
+      * ``wall_s``        — throughput denominator; defaults to the
+                            pool makespan ``max(e2e)`` (summing
+                            concurrent latencies would understate
+                            throughput ~slots-fold).
+      * ``units(item)``   — optional work-unit extractor (tokens,
+                            iterations); adds ``units``/``units_per_s``.
+    """
+    lat = [latency(r) for r in done]
+    e2e_v = [e2e(r) for r in done] if e2e is not None else lat
+    total = wall_s if wall_s is not None else max(e2e_v, default=0.0)
+    out = {
+        "requests": float(len(done)),
+        "rate_per_s": len(done) / max(total, 1e-9),
+        "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+        "p50_latency_s": float(np.percentile(e2e_v, 50)
+                               if e2e_v else 0.0),
+        "p99_latency_s": float(np.percentile(e2e_v, 99)
+                               if e2e_v else 0.0),
+    }
+    if units is not None:
+        u = float(sum(units(r) for r in done))
+        out["units"] = u
+        out["units_per_s"] = u / max(total, 1e-9)
+    return out
+
+
 def pool_stats(pool: Sequence[TopoRequest],
                wall_s: Optional[float] = None) -> Dict[str, float]:
-    """Serving stats over a pool of requests — the pure half shared by
-    engine and gateway ``throughput_stats``. Latency percentiles are
-    end-to-end (submit -> completion); ``deadline_hit_rate`` covers
-    deadline-carrying completed requests only (1.0 when there were
-    none)."""
+    """Serving stats over a pool of topo requests — the
+    ``throughput_view`` specialization shared by engine and gateway
+    ``throughput_stats``. Latency percentiles are end-to-end (submit ->
+    completion); ``deadline_hit_rate`` covers deadline-carrying
+    completed requests only (1.0 when there were none)."""
     done = [r for r in pool if r.done]
     iters = sum(r.cronet_iters + r.fea_iters for r in done)
-    e2e = [r.queue_wait_s + r.latency_s for r in done]
-    # default wall clock: the pool's makespan (submit -> last completion);
-    # summing concurrent latencies would understate throughput ~slots-fold
-    total = wall_s if wall_s is not None else max(e2e, default=0.0)
+    view = throughput_view(
+        done, latency=lambda r: r.latency_s,
+        e2e=lambda r: r.queue_wait_s + r.latency_s, wall_s=wall_s)
     with_dl = [r for r in done if r.deadline is not None]
     hits = sum(1 for r in with_dl if r.deadline_met)
     return {
@@ -210,12 +269,11 @@ def pool_stats(pool: Sequence[TopoRequest],
         # legitimately shows more than one tag)
         "model_tags": sorted({r.model_tag for r in done
                               if r.model_tag is not None}),
-        "requests": float(len(done)),
-        "problems_per_s": len(done) / max(total, 1e-9),
-        "mean_latency_s": float(np.mean([r.latency_s for r in done])
-                                if done else 0.0),
-        "p50_latency_s": float(np.percentile(e2e, 50) if e2e else 0.0),
-        "p99_latency_s": float(np.percentile(e2e, 99) if e2e else 0.0),
+        "requests": view["requests"],
+        "problems_per_s": view["rate_per_s"],
+        "mean_latency_s": view["mean_latency_s"],
+        "p50_latency_s": view["p50_latency_s"],
+        "p99_latency_s": view["p99_latency_s"],
         "deadline_hit_rate": (hits / len(with_dl)) if with_dl else 1.0,
         "cronet_hit_rate": (sum(r.cronet_iters for r in done)
                             / max(iters, 1)),
@@ -328,10 +386,16 @@ class FleetEvent:
     per state-machine edge). ``details`` carries the
     kind-specific payload (e.g. the per-tag stats snapshots a rollback
     decision was based on). ``t`` is a user-facing wall-clock stamp
-    (time.time()) — the one place wall-clock is kept on purpose."""
+    (time.time()) — kept on purpose for humans reading the log —
+    while ``t_mono`` is the matching ``time.monotonic()`` stamp, taken
+    at the same instant, so events CAN be ordered against request
+    stamps (submit_t/deadline/admitted_t live on the monotonic clock;
+    wall-clock alone cannot be compared to them and can step backwards
+    under NTP). Sorting and export order on ``t_mono``."""
     kind: str
     mesh: Optional[tuple]
     tag: Optional[str]
     t: float
     reason: str = ""
     details: Dict = dataclasses.field(default_factory=dict)
+    t_mono: float = 0.0
