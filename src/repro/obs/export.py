@@ -152,7 +152,14 @@ class TelemetrySnapshotter:
         t = self._thread
         if t is not None:
             t.join(timeout=5.0)
-            self._thread = None
+            # Only forget the handle once the daemon actually exited.
+            # A wedged loop (stuck extra() hook, hung write) must keep
+            # the handle so start() cannot spawn a SECOND loop racing
+            # the stuck one onto the same files; the final snapshot
+            # below stays safe either way because snapshot_once
+            # serializes every file write under _lock.
+            if not t.is_alive():
+                self._thread = None
         if final_snapshot:
             try:
                 self.snapshot_once()

@@ -332,21 +332,28 @@ class FlywheelState(enum.Enum):
 @dataclasses.dataclass
 class FlywheelCycle:
     """One bucket's pass through the state machine; ``history`` keeps
-    the (state, wall-clock) trail for the property tests' lineage and
-    single-cycle invariants."""
+    the ``(state, t_wall, t_mono)`` trail for the property tests'
+    lineage and single-cycle invariants. Stamps follow the
+    ``FleetEvent`` idiom: ``started_t`` and the wall entry are
+    user-facing (humans reading ``describe()``), while ``started_mono``
+    and the monotonic entry are what ordering/elapsed math uses — the
+    controller's cooldown and trigger scans run on ``time.monotonic()``
+    and an NTP step must not reorder a cycle's trail against them."""
     mesh: Mesh
     base_tag: Optional[str]
     state: FlywheelState = FlywheelState.HARVESTING
     child_tag: Optional[str] = None
     n_cases: int = 0
     started_t: float = dataclasses.field(default_factory=time.time)
+    started_mono: float = dataclasses.field(
+        default_factory=time.monotonic)
     error: Optional[str] = None
-    history: List[Tuple[str, float]] = dataclasses.field(
+    history: List[Tuple[str, float, float]] = dataclasses.field(
         default_factory=list)
 
     def advance(self, state: FlywheelState):
         self.state = state
-        self.history.append((state.value, time.time()))
+        self.history.append((state.value, time.time(), time.monotonic()))
 
     def describe(self) -> Dict:
         return {"mesh": _mesh_str(self.mesh), "state": self.state.value,

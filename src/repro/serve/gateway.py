@@ -246,6 +246,22 @@ class TopoGateway:
     bucket_window : completion window for the per-bucket acceptance
         stats behind ``bucket_stats()`` (the flywheel's trigger
         signal).
+    workers : move the engine pool into N worker PROCESSES
+        (``serve.workers.WorkerPool``): the gateway keeps the admission
+        queue, routing, canaries and leases, while ticks run in
+        spawned children — one full Python/XLA runtime each, which is
+        what real multi-core throughput scaling requires (tick-loop
+        THREADS share one dispatch pipeline and do not scale).
+        Engines are built in-worker from picklable specs; completions
+        carry ``worker_id``; a crashed worker fails only its admitted
+        in-flight work (typed ``WorkerLost``) and requeues the rest in
+        EDF order onto a respawned worker (``worker-*`` FleetEvents
+        narrate every transition). Mutually exclusive with
+        ``engine_factory``. Worker-mode buckets skip LIVE ladder
+        resizing (``ladder`` still precompiles in-worker; only the
+        maintenance-pass ``set_target_slots`` lever is disabled).
+    worker_pool_kwargs : extra ``WorkerPool`` knobs (``heartbeat_s``,
+        ``rpc_timeout_s``, ``respawn``, ...).
     """
 
     RETIRED_LIMIT = 4096       # completed requests kept from dead engines
@@ -272,7 +288,14 @@ class TopoGateway:
                  canary_window: Optional[int] = 64,
                  bucket_window: Optional[int] = 256,
                  trace_every: int = 0,
+                 workers: Optional[int] = None,
+                 worker_pool_kwargs: Optional[Dict] = None,
                  **engine_kwargs):
+        if workers is not None and engine_factory is not None:
+            raise ValueError(
+                "workers= moves the gateway's OWN engines into worker "
+                "processes; a caller-supplied engine_factory already "
+                "owns engine construction — pick one")
         self.registry = registry
         self.model_tag = model_tag
         self._resolver: Optional[ModelResolver] = None
@@ -378,6 +401,20 @@ class TopoGateway:
             "topo_gateway_inflight",
             "requests offered to the gateway and not yet resolved",
             callback=lambda: self._inflight)
+        # ---- multi-process workers: spawn the pool EAGERLY (workers
+        # re-import jax, several seconds each — overlap that with the
+        # caller's own warmup instead of taxing the first request)
+        self.workers = workers
+        self._pool = None
+        if workers is not None:
+            from repro.serve.workers import WorkerPool
+            self._pool = WorkerPool(
+                int(workers),
+                registry_root=getattr(registry, "root", None),
+                events=self.record_event,
+                on_handoff=self._on_worker_handoff,
+                metrics=self.metrics,
+                **dict(worker_pool_kwargs or {}))
         self._lease(self.model_tag)
 
     @classmethod
@@ -537,10 +574,37 @@ class TopoGateway:
                 return rec.tag, params, rec.u_scale
         return self.model_tag, self.params, self.u_scale
 
+    def _engine_spec(self, cfg, mesh: Mesh, tag: Optional[str],
+                     params, u_scale, *, slots: int) -> Dict:
+        """Picklable build recipe for a worker-resident engine (consumed
+        by ``topo_service.engine_from_spec`` inside the worker). Ships a
+        ``registry_root`` REFERENCE instead of the param tree only when
+        the resolver cache proves these exact params came from the
+        shared on-disk registry — an explicit-params pin (or an
+        unregistered tag) must travel by value or the worker would
+        silently serve different weights than the gateway promised
+        (the bitwise contract)."""
+        spec = {"cfg": cfg, "slots": slots, "model_tag": tag,
+                "u_scale": u_scale,
+                "ladder": self.ladder,
+                "shape_padded": mesh in self._shape_class_set,
+                "engine_kwargs": dict(self._engine_kwargs)}
+        root = getattr(self.registry, "root", None)
+        if (root is not None and self._resolver is not None
+                and self._resolver.holds(tag, params)):
+            spec["registry_root"] = root
+        else:
+            spec["params"] = params
+        return spec
+
     def _default_factory(self, nelx: int, nely: int) -> TopoServingEngine:
         mesh = (nelx, nely)
         tag, params, u_scale = self._resolve_bucket_model(mesh)
         cfg = dataclasses.replace(self.cfg, nelx=nelx, nely=nely)
+        if self._pool is not None:
+            return self._pool.build_engine(
+                mesh, self._engine_spec(cfg, mesh, tag, params, u_scale,
+                                        slots=self._slots_for(mesh)))
         return TopoServingEngine(cfg, params, u_scale,
                                  slots=self._slots_for(mesh),
                                  model_tag=tag,
@@ -686,6 +750,12 @@ class TopoGateway:
                 thread.join()
             for eng in self._all_engines():
                 eng.shutdown(wait=True)
+            # harvested-but-unflushed serving data must survive the
+            # process exiting right after shutdown(): everything still
+            # in the sink's in-memory buffer goes to the spool NOW
+            self._flush_harvest("shutdown")
+            if self._pool is not None:
+                self._pool.shutdown()
             self._release_all_leases()
             with self._lifecycle:
                 self._running = False
@@ -900,14 +970,22 @@ class TopoGateway:
                     cfg = dataclasses.replace(self.cfg,
                                               nelx=ctrl.mesh[0],
                                               nely=ctrl.mesh[1])
-                    ce = TopoServingEngine(
-                        cfg, ctrl.params,
-                        (ctrl.u_scale if ctrl.u_scale is not None
-                         else self.u_scale),
-                        slots=self.canary_slots, model_tag=ctrl.tag,
-                        ladder=self.ladder,
-                        shape_padded=ctrl.mesh in self._shape_class_set,
-                        **self._engine_kwargs)
+                    u_scale = (ctrl.u_scale if ctrl.u_scale is not None
+                               else self.u_scale)
+                    if self._pool is not None:
+                        ce = self._pool.build_engine(
+                            ctrl.mesh,
+                            self._engine_spec(cfg, ctrl.mesh, ctrl.tag,
+                                              ctrl.params, u_scale,
+                                              slots=self.canary_slots),
+                            role="canary")
+                    else:
+                        ce = TopoServingEngine(
+                            cfg, ctrl.params, u_scale,
+                            slots=self.canary_slots, model_tag=ctrl.tag,
+                            ladder=self.ladder,
+                            shape_padded=ctrl.mesh in self._shape_class_set,
+                            **self._engine_kwargs)
                 else:
                     ce = self._engine_factory(*ctrl.mesh)
                     if ce is self._engines.get(ctrl.mesh):
@@ -1102,6 +1180,29 @@ class TopoGateway:
         self._record_event(kind, self._mesh_arg(mesh)
                            if mesh is not None else None,
                            tag, reason, details)
+
+    def _flush_harvest(self, reason: str = ""):
+        """Push the harvest sink's in-memory buffer to its spool (a
+        sink without ``flush`` — or without a buffer — is a no-op).
+        Called on shutdown and on worker lease handoff: records
+        buffered in the parent when a worker dies, or when the gateway
+        closes, must not evaporate with the process. A raising sink is
+        a ``harvest-error`` event, never a failed shutdown."""
+        h = self.harvest
+        flush = getattr(h, "flush", None)
+        if flush is None:
+            return
+        try:
+            flush()
+        except Exception as exc:
+            self._record_event("harvest-error", None, None,
+                               reason=f"flush ({reason}) failed: {exc!r}")
+
+    def _on_worker_handoff(self, mesh, worker_id):
+        """WorkerPool callback after a lost worker's bucket was handed
+        to a replacement — durable-spool the harvest so the churn
+        cannot take buffered serving data with it."""
+        self._flush_harvest(f"worker-{worker_id} handoff")
 
     # --------------------------------------------------------- elasticity
 
@@ -1524,7 +1625,12 @@ class TopoGateway:
             if self._closed and self._owns_engines:
                 for eng in self._all_engines():
                     eng.shutdown(wait=False)
+                if self._pool is not None:
+                    self._pool.shutdown()
             if self._closed:
+                # the async shutdown(wait=False) path has nobody else to
+                # flush the harvest buffer before the process may exit
+                self._flush_harvest("shutdown")
                 self._release_all_leases()
         except BaseException as exc:   # dispatcher died: fail every waiter
             with q.cond:

@@ -28,6 +28,11 @@ class Request:
     done: bool = False
     output: Optional[np.ndarray] = None
     latency_s: float = 0.0
+    # actual occupancy of the slot-batched group this request decoded
+    # in (<= engine slots for a partial final group). latency_s covers
+    # the whole group, so wall-clock accounting divides by THIS, not by
+    # the engine's slot width — padded slots did no work.
+    group_size: int = 0
 
 
 class ServingEngine:
@@ -79,15 +84,20 @@ class ServingEngine:
                 r.output = gen[i, : r.max_new]
                 r.done = True
                 r.latency_s = dt
+                r.group_size = len(group)
         return requests
 
     def throughput_stats(self, requests: List[Request]) -> Dict[str, float]:
         # shared summary core (serve/types.py): one implementation for
-        # the topo engine, the gateway and this LM engine. Wall clock =
-        # summed batch latency amortized over the slot width (each
-        # latency_s covers a whole slot-batched group).
+        # the topo engine, the gateway and this LM engine. Wall clock:
+        # each latency_s covers a whole slot-batched group, so every
+        # member contributes dt / group_size and each group sums to its
+        # dt exactly once — dividing by the full slot width instead
+        # would credit padded slots in a partial final group with work
+        # they never did.
         from repro.serve.types import throughput_view
-        wall = sum(r.latency_s for r in requests) / self.slots
+        wall = sum(r.latency_s / max(r.group_size or self.slots, 1)
+                   for r in requests)
         view = throughput_view(
             requests, latency=lambda r: r.latency_s, wall_s=wall,
             units=lambda r: (len(r.output)

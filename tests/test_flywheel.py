@@ -528,3 +528,56 @@ def test_flywheel_random_interleavings_hold_invariants(seed):
     # invariant: leases balance after rollback/promote + shutdown
     gw.shutdown()
     assert reg.leased() == {}
+
+
+# --------------------------------------- harvest flush on gateway shutdown
+
+
+def _spooling_stack(tmp_path):
+    built = collections.defaultdict(list)
+
+    def factory(nelx, nely):
+        e = _FakeEngine(nelx, nely, model_tag="prod", cronet_frac=0.2)
+        built[(nelx, nely)].append(e)
+        return e
+
+    log = HarvestLog(capacity=16, accept_below=0.8,
+                     spool_dir=str(tmp_path))
+    gw = TopoGateway(SimpleNamespace(nelx=0, nely=0), params=None,
+                     u_scale=U_SCALE, engine_factory=factory,
+                     max_pending=None, harvest=log)
+    return gw, built, log
+
+
+def test_gateway_shutdown_flushes_harvest_spool(tmp_path):
+    """Regression: ``record()`` is in-memory by contract and the
+    gateway never called ``harvest.flush()`` on shutdown — stop the
+    process after a serve and every harvested case evaporated unless a
+    flywheel daemon happened to have ticked. A restarted harvester must
+    find the evidence in the spool."""
+    gw, built, log = _spooling_stack(tmp_path)
+    futs = [gw.submit(_hreq(i, load_frac=i / 10)) for i in range(3)]
+    _pump(gw, built)
+    assert all(f.result(timeout=5).done for f in futs)
+    assert log.snapshot()["harvested"] == 3
+    # the completion path never spools (it runs under the queue lock)
+    assert not list(tmp_path.glob("harvest_*.jsonl"))
+    gw.shutdown(wait=True)
+    reborn = HarvestLog(capacity=16, accept_below=0.8,
+                        spool_dir=str(tmp_path))
+    assert len(reborn.rejected_cases((12, 4))) == 3
+
+
+def test_async_gateway_shutdown_also_flushes_harvest(tmp_path):
+    """The ``wait=False`` path has nobody left to flush after the
+    dispatcher exits — the dispatcher itself must do it."""
+    gw, built, log = _spooling_stack(tmp_path)
+    futs = [gw.submit(_hreq(100 + i, load_frac=i / 10)) for i in range(2)]
+    _pump(gw, built)
+    assert all(f.result(timeout=5).done for f in futs)
+    gw.shutdown(wait=False)
+    assert wait_until(
+        lambda: list(tmp_path.glob("harvest_*.jsonl")), timeout=10)
+    assert len(HarvestLog(capacity=16, accept_below=0.8,
+                          spool_dir=str(tmp_path))
+               .rejected_cases((12, 4))) == 2

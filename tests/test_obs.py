@@ -216,6 +216,52 @@ def test_snapshotter_extra_hook_failure_is_recorded(tmp_path):
     assert "extra_error" in rec and "extra" not in rec
 
 
+def test_snapshotter_stop_keeps_handle_while_daemon_is_wedged(tmp_path):
+    """Regression: ``stop()`` used to clear ``self._thread`` even when
+    the join timed out — a later ``start()`` then spawned a SECOND loop
+    racing the wedged one onto the same files. The handle must survive
+    a timed-out join (so start() stays a no-op) and clear only once the
+    daemon really exited."""
+    snap = TelemetrySnapshotter(str(tmp_path / "t.jsonl"),
+                                registry=MetricsRegistry(),
+                                interval_s=60.0)
+    # clean path: the daemon honours the stop event within the join
+    # window, the handle clears, and a restart is allowed
+    snap.start()
+    snap.stop(final_snapshot=False)
+    assert snap._thread is None
+
+    # wedged path: a thread that outlives join(timeout) — simulated by
+    # a stub handle, exactly what stop() inspects — must be KEPT
+    class _Wedged:
+        def __init__(self, alive):
+            self.alive = alive
+            self.joins = 0
+
+        def join(self, timeout=None):
+            self.joins += 1
+
+        def is_alive(self):
+            return self.alive
+
+    wedged = _Wedged(alive=True)
+    snap._stop.clear()
+    snap._thread = wedged
+    snap.stop(final_snapshot=True)
+    assert snap._thread is wedged, "timed-out join must keep the handle"
+    assert wedged.joins == 1
+    # while the handle survives, start() cannot spawn a second loop
+    assert snap.start() is snap
+    assert snap._thread is wedged
+    # the final snapshot still landed (snapshot_once serializes writes
+    # under the instance lock, so it is safe beside a wedged loop)
+    assert snap.snapshots_written >= 1
+    # once the daemon actually died, the next stop() releases the handle
+    wedged.alive = False
+    snap.stop(final_snapshot=False)
+    assert snap._thread is None
+
+
 class _StringIO:
     def __init__(self):
         self.parts = []

@@ -73,6 +73,45 @@ def test_serving_engine():
     assert stats["total_new_tokens"] == 12
 
 
+def test_serving_engine_partial_group_wall_clock_accounting():
+    """Regression: the throughput wall clock used to divide every
+    request's group latency by the full slot width, so a PARTIAL final
+    group (3 requests on a 2-slot engine leaves a group of 1) credited
+    its padded slots with work they never did and overstated
+    tokens/s. Each group must contribute its dt to the wall exactly
+    once — members divide by actual group occupancy."""
+    from types import SimpleNamespace
+
+    from repro.serve.server import Request, ServingEngine
+
+    def _reqs(spec):
+        out = []
+        for group_size, dt in spec:
+            for _ in range(group_size):
+                r = Request(uid=len(out), prompt=np.zeros(4, np.int32),
+                            max_new=4)
+                r.done, r.output = True, np.zeros(4, np.int32)
+                r.latency_s, r.group_size = dt, group_size
+                out.append(r)
+        return out
+
+    eng = SimpleNamespace(slots=4)   # throughput_stats only reads slots
+    # two full groups + one half-full final group, 1 s each
+    reqs = _reqs([(4, 1.0), (4, 1.0), (2, 1.0)])
+    stats = ServingEngine.throughput_stats(eng, reqs)
+    assert stats["total_new_tokens"] == 40
+    # wall = 3 group-seconds exactly; the pre-fix accounting read 2.5 s
+    # (the final group contributed 2/4 instead of 2/2) and inflated
+    # tokens/s by 20%
+    assert stats["tokens_per_s"] == pytest.approx(40 / 3.0)
+    # legacy completions without a group stamp fall back to slot width
+    legacy = _reqs([(4, 1.0)])
+    for r in legacy:
+        r.group_size = 0
+    assert ServingEngine.throughput_stats(eng, legacy)["tokens_per_s"] \
+        == pytest.approx(4 * 4 / 1.0)
+
+
 def test_hybrid_loop_smoke():
     """12-iteration hybrid NN-FEA loop with an untrained net: must fall
     back to FEA every time and still match the pure-FEA trajectory."""

@@ -122,3 +122,38 @@ def test_done_callback_failure_is_recorded_not_swallowed():
     fakes[(12, 4)].complete()
     assert ok.result(timeout=10).done and gw.drain(timeout=5)
     gw.shutdown()
+
+
+# ------------------------------------------- flywheel cycle-history stamps
+
+
+def test_flywheel_history_orders_on_monotonic_through_wall_steps(
+        monkeypatch):
+    """Regression: ``FlywheelCycle.history`` used to stamp wall-clock
+    only, while the controller's cooldown/trigger scans ran on
+    ``time.monotonic()`` — an NTP step mid-cycle made the trail
+    incomparable to (and re-orderable against) the very clock that
+    drives the machine. The trail now follows the FleetEvent dual-stamp
+    idiom: wall for humans, monotonic for ordering."""
+    from repro.serve.flywheel import FlywheelCycle, FlywheelState
+
+    cycle = FlywheelCycle(mesh=(12, 4), base_tag="prod")
+    cycle.advance(FlywheelState.TRAINING)
+    # the wall clock steps BACK a day mid-cycle
+    real = time.time
+    monkeypatch.setattr(time, "time", lambda: real() - 86400.0)
+    cycle.advance(FlywheelState.CANARY)
+    cycle.advance(FlywheelState.PROMOTED)
+    states = [h[0] for h in cycle.history]
+    assert states == ["training", "canary", "promoted"]
+    # wall stamps jumped backwards (the step is visible to humans)...
+    walls = [h[1] for h in cycle.history]
+    assert walls[1] < walls[0] - 80000
+    # ...but the monotonic trail keeps ordering, against itself AND
+    # against the cycle's start stamp (what cooldown math compares to)
+    monos = [h[2] for h in cycle.history]
+    assert monos == sorted(monos)
+    assert all(m >= cycle.started_mono for m in monos)
+    # elapsed time recovered from the trail is sane, not -86400s
+    assert 0.0 <= monos[-1] - monos[0] < 60.0
+    assert cycle.describe()["history"] == cycle.history
